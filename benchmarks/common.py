@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: result tables, JSON persistence, timers."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def save_json(name: str, payload: Any):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    p = RESULTS_DIR / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=float))
+    return p
+
+
+def print_table(title: str, rows: List[Dict[str, Any]], cols=None):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(str(c).ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,163 @@
+"""Roofline table builder: reads the dry-run JSONs, emits the per-cell
+three-term table (EXPERIMENTS.md §Roofline) and picks hillclimb candidates.
+
+Terms per (arch x shape), single-pod mesh (per the assignment):
+    compute_s / memory_s / collective_s   -- seconds, per-chip rates
+    dominant                              -- the bottleneck term
+    MFU-proxy = (MODEL_FLOPS/chips/peak) / bound_s
+        "useful-FLOPs at peak" over the modeled bound: the roofline
+        fraction a perfect overlap of everything else would achieve.
+    useful = MODEL_FLOPS / (HLO_FLOPs * chips)
+        how much compiled compute is 'useful' (catches remat/redundancy).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.common import print_table, save_json
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+V5E_PEAK = 197e12
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    d = DRYRUN_DIR / mesh
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def _resident_state_gb(arch: str, shape: str, chips: int):
+    """Exact per-device RESIDENT state bytes (the 'fits 16 GB HBM' proof;
+    the CPU backend's memory_analysis is indicative only -- its scheduler
+    and fp32 buffers do not model a v5e).  train: fp32 params + fp32 grads
+    + Adam moments (fp32x2, or int8x2 + row scales for adamw8bit); decode:
+    bf16 params + cache; prefill: bf16 params."""
+    import jax
+
+    from repro.configs import get
+    from repro.configs.base import SHAPES
+    from repro.models import zoo
+    cfg = get(arch)
+    n = zoo.param_count(cfg)
+    kind = SHAPES[shape]["kind"]
+    if kind == "train":
+        per_param = (4 + 4 + 2.1) if cfg.optimizer == "adamw8bit" \
+            else (4 + 4 + 8)
+        total = per_param * n
+    else:
+        total = 2 * n
+        if kind == "decode":
+            import math
+            model = zoo.build(cfg)
+            gb, seq = SHAPES[shape]["global_batch"], SHAPES[shape]["seq_len"]
+            if cfg.family == "encdec":
+                ps = jax.eval_shape(model.init_params,
+                                    jax.ShapeDtypeStruct((2,), "uint32"))
+                cache = jax.eval_shape(
+                    lambda p: model.init_cache(p, gb, seq), ps)
+            else:
+                cache = jax.eval_shape(lambda: model.init_cache(None, gb,
+                                                                seq))
+            total += sum(math.prod(l.shape) * l.dtype.itemsize
+                         for l in jax.tree.leaves(cache))
+    return round(total / chips / 1e9, 3)
+
+
+def table_rows(cells: List[Dict]) -> List[Dict]:
+    rows = []
+    for c in cells:
+        base = {"arch": c["arch"], "shape": c["shape"]}
+        if c.get("status") == "skip":
+            rows.append({**base, "status": "SKIP",
+                         "note": c["reason"][:46]})
+            continue
+        if c.get("status") != "ok":
+            rows.append({**base, "status": "ERROR",
+                         "note": c.get("error", "?")[:46]})
+            continue
+        r = c["roofline"]
+        chips = c["chips"]
+        mfu = (c["model_flops"] / chips / V5E_PEAK) / max(r["bound_s"], 1e-12)
+        rows.append({
+            **base, "status": "ok",
+            "compute_s": round(r["compute_s"], 5),
+            "memory_s": round(r["memory_s"], 5),
+            "collective_s": round(r["collective_s"], 5),
+            "dominant": r["dominant"],
+            "MFU-proxy": round(mfu, 4),
+            "useful": (round(c["useful_flops_ratio"], 3)
+                       if c.get("useful_flops_ratio") else None),
+            "state_GB/dev": _resident_state_gb(c["arch"], c["shape"], chips),
+        })
+    return rows
+
+
+def pick_candidates(rows: List[Dict]) -> Dict[str, Optional[str]]:
+    ok = [r for r in rows if r["status"] == "ok"]
+    trainish = [r for r in ok if r["shape"] in ("train_4k", "prefill_32k")]
+    worst = min(trainish, key=lambda r: r["MFU-proxy"], default=None)
+    coll = max(ok, key=lambda r: (r["collective_s"]
+                                  / max(r["compute_s"], r["memory_s"],
+                                        r["collective_s"], 1e-12)),
+               default=None)
+    moe = [r for r in ok if r["arch"] in
+           ("deepseek_v2_lite_16b", "moonshot_v1_16b_a3b",
+            "jamba_1_5_large_398b") and r["shape"] == "train_4k"]
+    rep = moe[0] if moe else None
+    key = lambda r: r and f"{r['arch']} x {r['shape']}"
+    return {"worst_roofline_fraction": key(worst),
+            "most_collective_bound": key(coll),
+            "paper_representative(MoE)": key(rep)}
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    cols = ["arch", "shape", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "MFU-proxy", "useful",
+            "state_GB/dev", "note"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def run():
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        if not cells:
+            print(f"(no dry-run results for mesh={mesh} yet -- run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun)")
+            continue
+        rows = table_rows(cells)
+        print_table(f"Roofline ({mesh}-pod mesh, {len(rows)} cells)", rows,
+                    cols=["arch", "shape", "status", "compute_s", "memory_s",
+                          "collective_s", "dominant", "MFU-proxy", "useful",
+                          "state_GB/dev"])
+        over = [r for r in rows if r.get("state_GB/dev", 0) and
+                r["state_GB/dev"] > 16.0]
+        for r in over:
+            print(f"  !! {r['arch']} x {r['shape']}: resident state "
+                  f"{r['state_GB/dev']} GB/dev exceeds v5e 16 GB")
+        n_ok = sum(r["status"] == "ok" for r in rows)
+        n_skip = sum(r["status"] == "SKIP" for r in rows)
+        n_err = len(rows) - n_ok - n_skip
+        print(f"mesh={mesh}: {n_ok} ok / {n_skip} skip / {n_err} error")
+        if mesh == "single":
+            cand = pick_candidates(rows)
+            print("hillclimb candidates:", json.dumps(cand, indent=2))
+            (DRYRUN_DIR.parent / "roofline.md").write_text(
+                to_markdown(rows) + "\n\ncandidates: "
+                + json.dumps(cand) + "\n")
+            save_json("roofline_single", rows)
+        assert n_err == 0, f"{n_err} dry-run errors on mesh={mesh}"
+    return True
+
+
+if __name__ == "__main__":
+    run()

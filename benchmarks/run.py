@@ -1,0 +1,65 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table2] [--fast]
+
+Roofline (from dry-run artifacts) runs last and is skipped gracefully when
+experiments/dryrun is absent.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig2_skew, fig7_secpe_sweep, fig8_pagerank,
+                        fig9_evolving, moe_balance, roofline, table2_sota,
+                        table3_resources)
+
+BENCHES = {
+    "fig2": fig2_skew.run,
+    "fig7": fig7_secpe_sweep.run,
+    "table2": table2_sota.run,
+    "table3": table3_resources.run,
+    "fig8": fig8_pagerank.run,
+    "fig9": fig9_evolving.run,
+    "moe_balance": moe_balance.run,
+    "roofline": roofline.run,
+}
+
+FAST_KW = {
+    "fig2": dict(n_tuples=1 << 16),
+    "fig7": dict(n_tuples=1 << 16),
+    "table2": dict(n_tuples=1 << 15),
+    "fig8": dict(num_vertices=1 << 10),
+    "fig9": dict(total_chunks=128),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    failed = []
+    for name in names:
+        fn = BENCHES[name]
+        kw = FAST_KW.get(name, {}) if args.fast else {}
+        print(f"\n##### bench: {name} #####", flush=True)
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f"[bench {name}] OK in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            print(f"[bench {name}] FAILED")
+    print(f"\n{len(names) - len(failed)}/{len(names)} benchmarks passed"
+          + (f"; failed: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# ^ before any jax import: this example EXECUTES (not just compiles) the
+#   cross-device Ditto architecture on 8 host devices.
+
+"""Ditto across devices: PEs = mesh shards, routing = all_to_all.
+
+Runs HISTO on 6 primary + 2 secondary DEVICE shards with a capacity-
+bounded all_to_all (the cluster-scale BRAM analogue): under Zipf skew the
+no-plan run drops tuples at uniform capacity; the Ditto plan (profiler ->
+scheduler -> mapper, computed between chunks on the host like the paper's
+CPU re-enqueue) shrinks the hot shard's receive load and the drops.
+
+    PYTHONPATH=src python examples/distributed_ditto.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import histo
+from repro.core import distributed as D
+from repro.data.zipf import zipf_tuples
+
+NUM_PRI, NUM_SEC = 6, 2
+NUM_BINS, DOMAIN = 384, 1 << 20
+CHUNK, N_CHUNKS = 6144, 16
+
+mesh = jax.make_mesh((NUM_PRI + NUM_SEC,), ("pe",))
+spec = histo.make_spec(NUM_BINS, DOMAIN, NUM_PRI)
+# all_to_all budget per (producer, destination): ~2.7x the uniform fair
+# share -- the skewed stream does NOT fit it without the Ditto plan
+uniform_cap = CHUNK // (NUM_PRI + NUM_SEC) // 3
+
+print(f"{'alpha':>5s} {'plan':>5s} {'postplan max load':>18s} "
+      f"{'dropped postplan':>17s}")
+for alpha in (0.0, 2.0):
+    data = zipf_tuples(CHUNK * N_CHUNKS, DOMAIN, alpha, seed=3) \
+        .reshape(N_CHUNKS, CHUNK, 2)
+    for sec in (0, NUM_SEC):
+        merged, stats = D.run_stream(
+            spec, mesh, data, NUM_PRI, sec, capacity=uniform_cap)
+        ok = ""
+        if stats["dropped"] == 0:   # exactness check vs oracle
+            ref = histo.oracle(data.reshape(-1, 2)[:, 0], NUM_BINS,
+                               DOMAIN, NUM_PRI)
+            np.testing.assert_array_equal(np.asarray(merged), ref)
+            ok = " (oracle-exact)"
+        print(f"{alpha:5.1f} {('X=%d' % sec):>5s} "
+              f"{stats['max_load_postplan']:18d} "
+              f"{stats['dropped_postplan']:17d}{ok}")
+print("\ncapacity is provisioned for ~uniform load; the Ditto plan keeps "
+      "skewed streams inside it (the paper's BRAM trade at cluster scale)")

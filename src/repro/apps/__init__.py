@@ -1,0 +1,6 @@
+"""The paper's five data-intensive applications (Table I), each expressed as
+a DittoSpec -- the Listing-2 programming interface.  Everything below the
+spec (routing, SecPE scheduling, merging, profiling) is the framework."""
+from repro.apps import dp, hhd, histo, hll, pagerank
+
+__all__ = ["histo", "dp", "pagerank", "hll", "hhd"]

@@ -1,0 +1,106 @@
+"""DP -- data partitioning with a radix hash (paper Table I, [17][18]).
+
+The *non-decomposable* application: a PE's state is an append-only output
+region, not a commutative accumulator, so "PrePEs and SecPEs output results
+to their own memory space of the global memory" (paper §IV-B) and the merge
+is region concatenation per partition at the end.  The DittoSpec therefore
+overrides ``pe_update`` (cursor-append) and ``merge`` (gather regions).
+
+Partition of key k = low ``radix_bits`` of k; partition p is owned by
+PriPE p % M.  With fan-out > M each PE owns several partitions locally --
+the BRAM-saving claim (Table II: 16x fan-out per BRAM) comes precisely from
+partitions not being replicated across PEs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.hashes import radix, radix_np
+from repro.core.types import DittoSpec, RoutePlan
+
+
+class DPBuffers(NamedTuple):
+    """Per-PE output regions + write cursors (global-memory spill model)."""
+
+    out: jax.Array      # [num_pe, capacity, 2] appended tuples
+    cursor: jax.Array   # [num_pe] tuples appended so far
+    dst_part: jax.Array  # [num_pe, capacity] partition id of each slot
+
+
+def make_spec(radix_bits: int, num_pri: int, capacity_per_pe: int) -> DittoSpec:
+    num_parts = 1 << radix_bits
+
+    def pre(chunk, num_pri_):
+        part = radix(chunk[..., 0], radix_bits)
+        dst = (part % num_pri_).astype(jnp.int32)
+        # idx carries the partition id; value carries the packed tuple row
+        return dst, part, chunk
+
+    def init_buffer(num_pe):
+        return DPBuffers(
+            out=jnp.zeros((num_pe, capacity_per_pe, 2), jnp.int32),
+            cursor=jnp.zeros((num_pe,), jnp.int32),
+            dst_part=jnp.full((num_pe, capacity_per_pe), -1, jnp.int32),
+        )
+
+    def pe_update(bufs: DPBuffers, eff, idx, value):
+        num_pe = bufs.out.shape[0]
+        # rank of each tuple within its effective PE's sub-stream this chunk
+        onehot = (eff[:, None] == jnp.arange(num_pe, dtype=eff.dtype)[None, :])
+        onehot = onehot.astype(jnp.int32)
+        incl = jnp.cumsum(onehot, axis=0)
+        rank = jnp.take_along_axis(incl - onehot, eff[:, None].astype(jnp.int32),
+                                   axis=1)[:, 0]
+        slot = bufs.cursor[eff] + rank
+        slot = jnp.minimum(slot, bufs.out.shape[1] - 1)  # clamp; tests size cap
+        out = bufs.out.at[eff, slot].set(value)
+        dst_part = bufs.dst_part.at[eff, slot].set(idx.astype(jnp.int32))
+        cursor = bufs.cursor + incl[-1]
+        return DPBuffers(out=out, cursor=cursor, dst_part=dst_part)
+
+    def merge(bufs: DPBuffers, plan: RoutePlan):
+        """Non-decomposable merge: keep regions separate, return them with
+        their cursors + per-slot partition ids; the host-side reader
+        (``partitions_from_buffers``) concatenates per partition."""
+        return bufs
+
+    return DittoSpec(name="dp", pre=pre, init_buffer=init_buffer,
+                     combine="add", pe_update=pe_update, merge=merge,
+                     tuple_bytes=8, ii_pre=1, ii_pe=2)
+
+
+def partitions_from_buffers(bufs: DPBuffers, num_parts: int) -> list[np.ndarray]:
+    """Host-side region gather: partition p = concat over PEs of the slots
+    tagged p, in PE order then slot order (stable)."""
+    out = np.asarray(bufs.out)
+    cur = np.asarray(bufs.cursor)
+    tag = np.asarray(bufs.dst_part)
+    parts: list[list[np.ndarray]] = [[] for _ in range(num_parts)]
+    for pe in range(out.shape[0]):
+        n = int(cur[pe])
+        for p in range(num_parts):
+            sel = tag[pe, :n] == p
+            if sel.any():
+                parts[p].append(out[pe, :n][sel])
+    return [np.concatenate(p, 0) if p else np.zeros((0, 2), np.int32)
+            for p in parts]
+
+
+def oracle(tuples: np.ndarray, radix_bits: int) -> list[np.ndarray]:
+    """Sequential partitioner: stable per-partition tuple lists."""
+    part = radix_np(tuples[:, 0], radix_bits)
+    return [tuples[part == p] for p in range(1 << radix_bits)]
+
+
+def multiset_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    """Partition contents are order-free across PEs; compare as multisets."""
+    if a.shape != b.shape:
+        return False
+    va = a.view([("k", a.dtype), ("v", a.dtype)]).ravel()
+    vb = b.view([("k", b.dtype), ("v", b.dtype)]).ravel()
+    return bool(np.array_equal(np.sort(va), np.sort(vb)))

@@ -1,0 +1,44 @@
+"""Hash functions shared by the applications (paper Table I).
+
+DP uses a radix hash; HLL uses murmur3 (we use the 32-bit fmix avalanche
+finalizer, the standard choice for integer keys); HHD's count-min rows use
+independent murmur3 streams via per-row seeds.  Each function has a jnp and
+a numpy twin; tests assert they match bit-exactly (the Ditto executor and
+the oracles must hash identically or equivalence tests are meaningless).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+def murmur3_fmix32_np(x: np.ndarray, seed: int = 0) -> np.ndarray:
+    h = x.astype(np.uint32) ^ np.uint32(seed)
+    h ^= h >> np.uint32(16)
+    h = (h * _C1).astype(np.uint32)
+    h ^= h >> np.uint32(13)
+    h = (h * _C2).astype(np.uint32)
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def murmur3_fmix32(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    h = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def radix_np(x: np.ndarray, bits: int) -> np.ndarray:
+    """DP's radix hash: the low ``bits`` bits of the key."""
+    return (x.astype(np.uint32) & np.uint32((1 << bits) - 1)).astype(np.int64)
+
+
+def radix(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return (x.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)

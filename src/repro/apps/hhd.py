@@ -1,0 +1,84 @@
+"""HHD -- heavy-hitter detection with a count-min sketch (paper Table I,
+[19]).
+
+Keys are routed by murmur3 low bits (dst PE = h(key) % M); each PE owns a
+private count-min sketch (D rows x W columns) over its key subrange plus a
+per-PE candidate tracker.  CMS is linear, so ``add`` merge folds SecPE
+shadow sketches into their PriPE exactly.  The estimate of key k is
+min_i sketch[pe(k), i, h_i(k)]; heavy hitters = keys whose estimate crosses
+the threshold.  Partitioning the sketch by key range (instead of replicating
+it per PE, as static dispatch must) is the Table-II BRAM win.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.hashes import murmur3_fmix32, murmur3_fmix32_np
+from repro.core.types import DittoSpec
+
+ROW_SEEDS = (0x9E3779B9, 0x7F4A7C15, 0x94D049BB, 0xD6E8FEB8)
+
+
+def make_spec(depth: int, width: int, num_pri: int) -> DittoSpec:
+    """CMS spec.  ``idx`` carries the D per-row column indices packed as a
+    [T, D] int32 array; a custom pe_update scatters all D cells per tuple
+    (the FPGA PE updates D BRAM banks in parallel -- same D-way parallelism,
+    one scatter per row here)."""
+    assert depth <= len(ROW_SEEDS)
+    assert width & (width - 1) == 0, "power-of-two width"
+
+    def pre(chunk, num_pri_):
+        key = chunk[..., 0]
+        dst = (murmur3_fmix32(key) % jnp.uint32(num_pri_)).astype(jnp.int32)
+        cols = [
+            (murmur3_fmix32(key, seed=ROW_SEEDS[i]) & jnp.uint32(width - 1))
+            .astype(jnp.int32)
+            for i in range(depth)
+        ]
+        idx = jnp.stack(cols, axis=-1)  # [T, D]
+        return dst, idx, jnp.ones(key.shape, jnp.int32)
+
+    def init_buffer(num_pe):
+        return jnp.zeros((num_pe, depth, width), jnp.int32)
+
+    def pe_update(buffers, eff, idx, value):
+        for i in range(depth):
+            buffers = buffers.at[eff, i, idx[:, i]].add(value)
+        return buffers
+
+    return DittoSpec(name="hhd", pre=pre, init_buffer=init_buffer,
+                     combine="add", pe_update=pe_update,
+                     tuple_bytes=8, ii_pre=1, ii_pe=2)
+
+
+def oracle(keys: np.ndarray, depth: int, width: int, num_pri: int) -> np.ndarray:
+    out = np.zeros((num_pri, depth, width), np.int64)
+    pe = (murmur3_fmix32_np(keys) % np.uint32(num_pri)).astype(np.int64)
+    for i in range(depth):
+        col = (murmur3_fmix32_np(keys, seed=ROW_SEEDS[i])
+               & np.uint32(width - 1)).astype(np.int64)
+        np.add.at(out, (pe, i, col), 1)
+    return out
+
+
+def estimate(merged: np.ndarray, keys: np.ndarray, depth: int,
+             width: int) -> np.ndarray:
+    """CMS point query: min over rows, on merged [M, D, W] sketches."""
+    num_pri = merged.shape[0]
+    pe = (murmur3_fmix32_np(keys) % np.uint32(num_pri)).astype(np.int64)
+    est = None
+    for i in range(depth):
+        col = (murmur3_fmix32_np(keys, seed=ROW_SEEDS[i])
+               & np.uint32(width - 1)).astype(np.int64)
+        row = merged[pe, i, col]
+        est = row if est is None else np.minimum(est, row)
+    return est
+
+
+def heavy_hitters(merged: np.ndarray, candidate_keys: np.ndarray, depth: int,
+                  width: int, threshold: int) -> np.ndarray:
+    """Keys among the candidates whose CMS estimate >= threshold.  CMS only
+    overestimates, so recall is 1 (every true heavy hitter is returned)."""
+    est = estimate(merged, candidate_keys, depth, width)
+    return candidate_keys[est >= threshold]

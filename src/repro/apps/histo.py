@@ -1,0 +1,57 @@
+"""HISTO -- equi-width histogram building (paper Listing 1 / Table I).
+
+State: ``num_bins`` counters partitioned across M PriPEs; bin b lives in
+PriPE b % M at local index b // M (the paper's Listing-2 rule "destination
+PE ID from the low bits").  6 lines of user logic in the paper; here the
+whole app is the DittoSpec below -- everything else is the framework.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import DittoSpec
+
+
+def bin_of_np(keys: np.ndarray, num_bins: int, key_domain: int) -> np.ndarray:
+    width = max(key_domain // num_bins, 1)
+    return np.minimum(keys // width, num_bins - 1)
+
+
+def make_spec(num_bins: int, key_domain: int, num_pri: int) -> DittoSpec:
+    """Equi-width HISTO spec for a known M (the framework fixes M via Eq. 1
+    before buffers are allocated, so local buffer size = ceil(bins/M))."""
+    bins_per_pe = -(-num_bins // num_pri)
+
+    def pre(chunk, num_pri_):
+        key = chunk[..., 0]
+        width = max(key_domain // num_bins, 1)
+        b = jnp.minimum(key.astype(jnp.int32) // width, num_bins - 1)
+        dst = (b % num_pri_).astype(jnp.int32)
+        idx = (b // num_pri_).astype(jnp.int32)
+        return dst, idx, jnp.ones_like(key, jnp.int32)
+
+    return DittoSpec(
+        name="histo", pre=pre,
+        init_buffer=lambda n: jnp.zeros((n, bins_per_pe), jnp.int32),
+        combine="add", tuple_bytes=8, ii_pre=1, ii_pe=2)
+
+
+def oracle(keys: np.ndarray, num_bins: int, key_domain: int,
+           num_pri: int) -> np.ndarray:
+    """Sequential oracle: merged [num_pri, bins_per_pe] partitioned histogram."""
+    b = bin_of_np(keys.astype(np.int64), num_bins, key_domain)
+    dst = b % num_pri
+    idx = b // num_pri
+    out = np.zeros((num_pri, -(-num_bins // num_pri)), np.int64)
+    np.add.at(out, (dst, idx), 1)
+    return out
+
+
+def flat_histogram(merged: np.ndarray, num_bins: int) -> np.ndarray:
+    """[M, bins_per_pe] partitioned buffers -> flat [num_bins] histogram
+    (bin b = merged[b % M, b // M]); the 'direct final bins, no CPU-side
+    aggregation' benefit of data routing (paper §II-A)."""
+    m, _ = merged.shape
+    b = np.arange(num_bins)
+    return merged[b % m, b // m]

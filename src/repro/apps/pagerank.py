@@ -1,0 +1,99 @@
+"""PR -- PageRank with fixed-point arithmetic (paper Table I, §VI-C2).
+
+Scatter-gather PR: each iteration routes one tuple per edge
+<dst_vertex, contrib> where contrib = rank[src] / out_deg[src], and PEs
+accumulate contributions into the partitioned vertex state (vertex v lives
+in PriPE v % M at local index v // M).  Undirected / high-degree graphs give
+severe destination skew (paper Fig. 8); Ditto's SecPEs flatten it.
+
+Fixed-point: Q16.16 in int32 (the paper's "fixed-point data type"), with
+ranks stored *scaled by V* (uniform rank == ONE) so small per-vertex ranks
+keep precision; the total mass is V*ONE, so int32 accumulators are safe for
+V <= 2^14 (asserted).  The oracle uses the identical fixed-point path, so
+equivalence tests are bit-exact, not approximate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import DittoSpec
+
+FRAC_BITS = 16
+ONE = 1 << FRAC_BITS
+MAX_VERTICES = 1 << 14  # V * ONE must stay inside int32
+DAMPING_FIXED = int(0.85 * ONE)
+
+
+def make_spec(num_vertices: int, num_pri: int) -> DittoSpec:
+    """Spec for the scatter phase.  Tuples are <dst_vertex, contrib_fixed>;
+    the PrePE splits the vertex id into (PE, local index).  Contributions
+    were prepared by ``edge_contributions`` (gather side of the PrePE)."""
+    assert num_vertices <= MAX_VERTICES, "Q16.16/int32 budget (see module doc)"
+    verts_per_pe = -(-num_vertices // num_pri)
+
+    def pre(chunk, num_pri_):
+        v = chunk[..., 0].astype(jnp.int32)
+        contrib = chunk[..., 1].astype(jnp.int32)
+        return (v % num_pri_).astype(jnp.int32), (v // num_pri_).astype(jnp.int32), contrib
+
+    def init_buffer(num_pe):
+        return jnp.zeros((num_pe, verts_per_pe), jnp.int32)
+
+    return DittoSpec(name="pagerank", pre=pre, init_buffer=init_buffer,
+                     combine="add", tuple_bytes=8, ii_pre=1, ii_pe=2)
+
+
+@jax.jit
+def edge_contributions(edges: jax.Array, rank_fixed: jax.Array,
+                       out_deg: jax.Array) -> jax.Array:
+    """PrePE gather: <dst, rank[src]/deg[src]> tuples for one iteration.
+    Fixed-point division: plain integer // keeps Q16.16 (rank is already
+    scaled)."""
+    src, dst = edges[:, 0], edges[:, 1]
+    contrib = (rank_fixed[src] // jnp.maximum(out_deg[src], 1)).astype(jnp.int32)
+    return jnp.stack([dst.astype(jnp.int32), contrib], axis=1)
+
+
+def init_rank(num_vertices: int) -> np.ndarray:
+    """Uniform start: every vertex holds ONE (scaled-by-V representation)."""
+    return np.full(num_vertices, ONE, np.int32)
+
+
+def apply_damping(sums_fixed: np.ndarray, num_vertices: int,
+                  damping_fixed: int = DAMPING_FIXED) -> np.ndarray:
+    """Gather phase on merged buffers: r' = (1-d)*ONE + d*sum (scaled by V).
+
+    [M, verts_per_pe] int32 partitioned sums -> flat [V] int32 ranks."""
+    m, _ = sums_fixed.shape
+    v = np.arange(num_vertices)
+    s = sums_fixed[v % m, v // m].astype(np.int64)
+    r = (ONE - damping_fixed) + ((damping_fixed * s) >> FRAC_BITS)
+    return r.astype(np.int32)
+
+
+def oracle_scatter(edges: np.ndarray, rank_fixed: np.ndarray,
+                   out_deg: np.ndarray, num_vertices: int,
+                   num_pri: int) -> np.ndarray:
+    """Bit-exact oracle of one routed scatter phase -> [M, vpp] int32 sums."""
+    src, dst = edges[:, 0], edges[:, 1]
+    contrib = (rank_fixed[src].astype(np.int64)
+               // np.maximum(out_deg[src], 1)).astype(np.int32)
+    out = np.zeros((num_pri, -(-num_vertices // num_pri)), np.int32)
+    np.add.at(out, (dst % num_pri, dst // num_pri), contrib)
+    return out
+
+
+def pagerank_reference(edges: np.ndarray, num_vertices: int,
+                       iters: int = 10) -> np.ndarray:
+    """Float64 reference PR (unscaled, sums to 1) used to sanity-check the
+    fixed-point pipeline: assert |fixed/(V*ONE) - float| small."""
+    deg = np.zeros(num_vertices)
+    np.add.at(deg, edges[:, 0], 1)
+    r = np.full(num_vertices, 1.0 / num_vertices)
+    for _ in range(iters):
+        s = np.zeros(num_vertices)
+        np.add.at(s, edges[:, 1], r[edges[:, 0]] / np.maximum(deg[edges[:, 0]], 1))
+        r = 0.15 / num_vertices + 0.85 * s
+    return r

@@ -1,0 +1,137 @@
+"""Architecture configuration schema.
+
+One ``ArchConfig`` fully describes a model: the repeating layer period
+(mixer pattern x FFN pattern), attention/MLA/SSM geometry, MoE settings
+(including the Ditto skew-oblivious replication knobs), vocab/embedding and
+the modality frontend stub.  Every assigned architecture has a module in
+this package exporting ``CONFIG`` (full size, dry-run only) and ``REDUCED``
+(CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|encdec|vlm
+    num_layers: int
+    d_model: int
+    vocab: int
+    # repeating period: mixer kinds x ffn kinds; layer i uses
+    # pattern[i % len(pattern)].  kinds: attn|attn_local|mla|mamba
+    block_pattern: Tuple[str, ...] = ("attn",)
+    ffn_pattern: Tuple[str, ...] = ("dense",)   # dense|moe
+    # attention geometry
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    window: int = 4096                # local-attention window (attn_local)
+    attn_softcap: float = 0.0         # gemma2 attention-logit capping
+    logit_softcap: float = 0.0        # gemma2 final-logit capping
+    # MLA geometry (deepseek)
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE (+ Ditto integration -- the paper's technique)
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    ditto_secondary: int = 0          # X secondary expert slots (0 = off)
+    moe_group_size: int = 512
+    # SSM (mamba2)
+    d_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_len: int = 0              # e.g. 1500 audio frames
+    max_positions: int = 65536        # learned-position table (whisper dec)
+    # VLM stub frontend (phi-3-vision)
+    num_patches: int = 0
+    patch_embed_dim: int = 0
+    # numerics / perf knobs
+    norm_eps: float = 1e-5
+    act: str = "silu"
+    mlp_gated: bool = True            # False: classic 2-matrix MLP (starcoder2)
+    # perf knobs (beyond-paper optimizations; 0/"onehot" = paper-faithful)
+    vocab_pad_to: int = 0             # pad embedding rows to a TP multiple
+    moe_impl: str = "onehot"          # onehot (GShard) | sort (gather-based)
+    tie_embeddings: bool = True
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    remat: str = "full"               # none|full|dots
+    # training
+    max_lr: float = 3e-4
+    optimizer: str = "adamw"          # adamw|adamw8bit
+    # which serve shapes make sense (sub-quadratic archs only for long ctx)
+    supports_long_context: bool = False
+
+    def __post_init__(self):
+        assert len(self.block_pattern) == len(self.ffn_pattern), \
+            "mixer and ffn patterns must have equal period"
+        assert self.num_layers % len(self.block_pattern) == 0, \
+            f"{self.name}: layers {self.num_layers} not a multiple of the " \
+            f"period {len(self.block_pattern)}"
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.vocab_pad_to:
+            return self.vocab
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def moe_capacity(self) -> int:
+        from repro.models.moe import uniform_capacity
+        return uniform_capacity(self.moe_group_size, self.top_k,
+                                self.num_experts, self.capacity_factor)
+
+    def has(self, kind: str) -> bool:
+        return kind in self.block_pattern or kind in self.ffn_pattern
+
+
+# The 4 assigned input shapes for LM-family archs (system-prompt table).
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}

@@ -1,0 +1,29 @@
+"""Ditto core: the paper's skew-oblivious data-routing architecture in JAX.
+
+Public API:
+  DittoSpec, RoutePlan            -- repro.core.types
+  Ditto, tune_pe_counts           -- repro.core.framework
+  make_executor, make_static_plan -- repro.core.executor
+  schedule_secpes                 -- repro.core.scheduler
+  analyze_skew, secpes_for_workload -- repro.core.analyzer
+"""
+from repro.core.analyzer import (analyze_skew, buffer_capacity_fraction,
+                                 secpes_for_workload, select_implementation)
+from repro.core.distributed import make_distributed_executor, run_stream
+from repro.core.executor import make_executor, make_static_plan
+from repro.core.framework import Ditto, GeneratedImpl, tune_pe_counts
+from repro.core.mapper import apply_schedule, init_plan, occurrence_rank, redirect
+from repro.core.merger import merge_buffers
+from repro.core.profiler import workload_hist
+from repro.core.scheduler import post_plan_max_load, schedule_secpes
+from repro.core.types import DittoSpec, ExecStats, RoutePlan
+
+__all__ = [
+    "DittoSpec", "RoutePlan", "ExecStats", "Ditto", "GeneratedImpl",
+    "make_executor", "make_static_plan", "make_distributed_executor",
+    "run_stream", "schedule_secpes",
+    "post_plan_max_load", "analyze_skew", "secpes_for_workload",
+    "select_implementation", "buffer_capacity_fraction", "tune_pe_counts",
+    "apply_schedule", "init_plan", "occurrence_rank", "redirect",
+    "merge_buffers", "workload_hist",
+]

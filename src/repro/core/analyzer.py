@@ -1,0 +1,72 @@
+"""The skew analyzer (paper §V-D, Eq. 2) and implementation selection.
+
+Offline: randomly sample a small fraction of the dataset (the paper samples
+0.1%), histogram the designated PriPE ids, and compute the number of SecPEs
+
+    X = sum_i ceil( M * w_i / sum(w)  -  T )  -  M        (Eq. 2)
+
+clipped to [0, M-1].  T is the tolerance factor (performance compromise in
+percentages); the guarantee is that every PriPE's post-plan load is within T
+of the uniform load, so no PriPE bottlenecks the pipeline.
+
+Online: no prior information about the stream, so select the maximal X = M-1
+("oblivious to any level of data skew").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiler import workload_hist
+
+
+def secpes_for_workload(workload: jax.Array, tolerance: float) -> jax.Array:
+    """Eq. 2: X from a sampled per-PriPE workload distribution.
+
+    Each term ceil(M*w_i/sum(w) - T) is the number of PEs partition i needs so
+    that its post-split load is within tolerance T of the uniform load.  We
+    floor each term at 1: a PriPE exists (and owns its range) even when the
+    sample gave it ~zero tuples -- without the floor, the literal formula
+    returns X=0 for extreme skew, contradicting the paper's own statement
+    that the worst case needs X = M-1 (§V-C).  With strictly positive sampled
+    workloads (ratio > T) the floored form is identical to Eq. 2 as printed.
+    """
+    m = workload.shape[0]
+    w = workload.astype(jnp.float32)
+    total = jnp.maximum(w.sum(), 1.0)
+    terms = jnp.maximum(jnp.ceil(m * w / total - tolerance), 1.0)
+    x = terms.sum() - m
+    return jnp.clip(x, 0, m - 1).astype(jnp.int32)
+
+
+def analyze_skew(sample_dst: jax.Array, num_pri: int, tolerance: float) -> int:
+    """Sampled skew analysis -> suitable number of SecPEs (python int, because
+    X selects the generated implementation, a static architecture choice)."""
+    w = workload_hist(sample_dst, num_pri)
+    return int(secpes_for_workload(w, tolerance))
+
+
+def sample_dataset(keys: np.ndarray, frac: float = 0.001, seed: int = 0,
+                   min_samples: int = 4096) -> np.ndarray:
+    """Random sample of the dataset for offline analysis (paper: 0.1%)."""
+    rng = np.random.default_rng(seed)
+    n = max(min_samples, int(len(keys) * frac))
+    n = min(n, len(keys))
+    idx = rng.choice(len(keys), size=n, replace=False)
+    return keys[idx]
+
+
+def select_implementation(dst_sample: jax.Array, num_pri: int,
+                          tolerance: float = 0.01, online: bool = False) -> int:
+    """Implementation selection: the X minimizing buffer cost subject to the
+    Eq. 2 guarantee (offline), or M-1 for online streams."""
+    if online:
+        return num_pri - 1
+    return analyze_skew(dst_sample, num_pri, tolerance)
+
+
+def buffer_capacity_fraction(num_pri: int, num_sec: int) -> float:
+    """§V-C: with X SecPEs, the maximal buffered *distinct* data is
+    M/(M+X) * C of the BRAM/VMEM budget C; X = M-1 still guarantees C/2."""
+    return num_pri / (num_pri + num_sec)

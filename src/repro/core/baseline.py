@@ -1,0 +1,78 @@
+"""The static-dispatch / replicated-buffer baseline (paper Fig. 1a).
+
+This is the design Ditto is compared against (existing HLS works [3],[12]):
+tuple i goes to PE (i mod M) -- no routing -- so EVERY PE must hold a full
+replica of the buffered state (BRAM cost x M), and the partial replicas
+must be aggregated after the stream (the paper's "CPU-side intervention").
+
+Throughput-wise static dispatch is skew-immune (each PE absorbs exactly
+1/M of the stream), which is precisely why its cost is memory: the paper's
+trade is BRAM x M vs skew sensitivity, and Ditto's contribution is getting
+BOTH the x1 memory of routing and the skew immunity of replication.
+
+We implement it for real (Table II reproduces both sides from running
+code, not citations): same DittoSpec in, replicated buffers out.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perfmodel
+from repro.core.types import DittoSpec
+
+
+def make_replicated_executor(spec: DittoSpec, num_pe: int, chunk_size: int,
+                             *, mem_width_tuples: int = 8):
+    """Static dispatch: chunk position i -> PE i % num_pe; each PE updates
+    its own FULL replica (global index = idx * M + dst of the routed
+    form, inverting the paper's partition rule).  Returns
+    fn(tuples [C, chunk, ...]) -> (aggregated buffer [1, *local*M], stats).
+    """
+
+    def chunk_step(buffers, chunk):
+        dst, idx, value = spec.pre(chunk, 1)
+        # spec.pre with num_pri=1 gives dst=0, idx=global index
+        pe = jnp.arange(chunk_size, dtype=jnp.int32) % num_pe
+        if spec.pe_update is not None:
+            buffers = spec.pe_update(buffers, pe, idx, value)
+        else:
+            buffers = (buffers.at[pe, idx].add(value.astype(buffers.dtype))
+                       if spec.combine == "add"
+                       else buffers.at[pe, idx].max(
+                           value.astype(buffers.dtype)))
+        # static dispatch: every PE absorbs ceil(chunk/M) regardless of skew
+        cycles = perfmodel.chunk_cycles(
+            chunk_size, -(-chunk_size // num_pe), mem_width_tuples,
+            spec.ii_pe)
+        return buffers, cycles
+
+    @jax.jit
+    def run(tuples):
+        local = spec.init_buffer(1)[0]          # full (unpartitioned) state
+        buffers = jnp.zeros((num_pe, *local.shape), local.dtype)
+        buffers, cycles = jax.lax.scan(chunk_step, buffers, tuples)
+        # the post-hoc aggregation the paper's §II-A calls "CPU
+        # intervention": reduce M replicas + one pass over M x state bytes
+        agg = (buffers.sum(axis=0) if spec.combine == "add"
+               else buffers.max(axis=0))
+        merge_cycles = jnp.float32(buffers.size / mem_width_tuples)
+        return agg[None], {"chunk_cycles": cycles,
+                           "merge_cycles": merge_cycles}
+
+    return run
+
+
+def replica_buffer_bytes(spec: DittoSpec, num_pe: int) -> int:
+    """Per-PE buffer bytes of the replicated design (full state each)."""
+    full = spec.init_buffer(1)[0]
+    return int(full.size * full.dtype.itemsize)
+
+
+def routed_buffer_bytes(spec: DittoSpec, num_pri: int, num_sec: int) -> int:
+    """Per-PE buffer bytes of data routing (1/M of the state each)."""
+    buf = spec.init_buffer(num_pri + num_sec)
+    per_pe = buf.size // buf.shape[0]
+    return int(per_pe * buf.dtype.itemsize)

@@ -1,0 +1,157 @@
+"""The skew-oblivious data-routing architecture ACROSS devices.
+
+core/executor.py realizes the paper within one logical device (PEs =
+buffer partitions).  This module is the cluster-scale version: one PE =
+one mesh shard along the 'pe' axis, private buffer = that shard's HBM,
+and the combiner/decoder/filter channel network = `jax.lax.all_to_all`
+inside `shard_map`.  The Ditto pieces map 1:1:
+
+  PrePE        each shard computes <dst, idx, value> for ITS slice of the
+               stream (producers are sharded too, like the paper's N
+               PrePEs feeding the routing network)
+  mapper       per-producer round-robin redirect (the paper gives each
+               mapper its own table+counter; no global coordination)
+  routing      fixed-capacity all_to_all: producer p packs a [P, cap]
+               send buffer by destination shard; one collective delivers
+               every tuple to its designated PE
+  PriPE/SecPE  each shard scatter-accumulates its received tuples into
+               its private buffer partition (kernels/route_accumulate
+               semantics)
+  profiler     per-chunk receive-load histogram returned to the host;
+               plan generation between chunks = the paper's CPU
+               re-enqueue (scheduler.schedule_secpes)
+  merger       SecPE shadow buffers are summed/maxed into their PriPEs
+               from the plan at stream end
+
+THE capacity trade (the paper's BRAM story at cluster scale): without a
+plan, the all_to_all send buffer must be provisioned for the WORST-CASE
+per-PE load (all tuples to one shard) or tuples drop; with X secondary
+shards scheduled to the hot PEs, the same drop rate is reached with
+near-uniform capacity -- measured by tests/test_distributed.py and
+examples/distributed_ditto.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mapper as core_mapper
+from repro.core import scheduler as core_scheduler
+from repro.core.types import DittoSpec, RoutePlan
+
+
+def make_distributed_executor(spec: DittoSpec, mesh, num_pri: int,
+                              num_sec: int, *, capacity: int,
+                              axis: str = "pe"):
+    """Build the shard_map chunk step.
+
+    The mesh `axis` size is the physical shard count; num_pri + num_sec
+    <= mesh size (inactive shards receive nothing).  Returns
+    ``chunk_fn(tuples, buffers, plan) -> (buffers, stats)`` operating on
+    GLOBAL arrays: tuples [P*T_loc, 2] sharded over `axis`, buffers
+    [P, *local] sharded over `axis`.  ``capacity`` is the per-(producer,
+    destination) all_to_all budget -- tuples beyond it drop (counted).
+    """
+    num_pe = dict(mesh.shape)[axis]          # physical shards
+    assert num_pri + num_sec <= num_pe
+
+    def step(tuples_loc, buffers_loc, table, counter):
+        # local views: tuples_loc [T_loc, 2]; buffers_loc [1, *local]
+        dst, idx, value = spec.pre(tuples_loc, num_pri)
+
+        # --- per-producer mapper (paper Fig. 4): RR over the slot group
+        plan = RoutePlan(assignment=jnp.zeros((num_sec,), jnp.int32),
+                         table=table, counter=counter)
+        rank, _ = core_mapper.occurrence_rank(
+            dst, num_pri, jnp.zeros((num_pri,), jnp.int32))
+        eff = core_mapper.redirect(plan, dst, rank)          # [T_loc]
+
+        # --- pack the [P, cap] send buffer (capacity slotting per dest)
+        oh = jax.nn.one_hot(eff, num_pe, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - oh,
+                                  eff[:, None], axis=1)[:, 0]
+        keep = pos < capacity
+        dropped = jnp.sum(~keep)
+        cell = jnp.where(keep, eff * capacity + pos, num_pe * capacity)
+        payload = jnp.stack([idx, value], axis=1)            # [T_loc, 2]
+        send = jnp.full((num_pe * capacity + 1, 2), -1, jnp.int32) \
+            .at[cell].set(payload)[:-1].reshape(num_pe, capacity, 2)
+
+        # --- the routing network: one all_to_all delivers everything
+        recv = jax.lax.all_to_all(send, axis, 0, 0)          # [P, cap, 2]
+        recv = recv.reshape(-1, 2)                           # [P*cap, 2]
+
+        # --- PriPE/SecPE private-buffer update (add/max semantics)
+        r_idx, r_val = recv[:, 0], recv[:, 1]
+        valid = r_idx >= 0
+        r_idx = jnp.where(valid, r_idx, 0)
+        r_val = jnp.where(valid, r_val, 0 if spec.combine == "add"
+                          else jnp.iinfo(jnp.int32).min)
+        buf = buffers_loc.reshape(buffers_loc.shape[-1:]
+                                  if buffers_loc.ndim == 2
+                                  else buffers_loc.shape[1:])
+        flat = buf.reshape(-1)
+        flat = (flat.at[r_idx].add(r_val) if spec.combine == "add"
+                else flat.at[r_idx].max(r_val))
+        new_buf = flat.reshape(buf.shape)
+
+        # --- profiler: my receive load + designated-load histogram share
+        my_load = jnp.sum(valid)
+        workload = jnp.zeros((num_pri,), jnp.int32).at[dst].add(1)
+        workload = jax.lax.psum(workload, axis)              # global hist
+        return (new_buf[None], my_load[None], dropped[None], workload)
+
+    pspec = P(axis)
+    return jax.jit(jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspec, pspec, P(), P()),
+        out_specs=(pspec, pspec, pspec, P())))
+
+
+def run_stream(spec: DittoSpec, mesh, tuples, num_pri: int, num_sec: int,
+               *, capacity: int, axis: str = "pe",
+               profile_chunks: int = 1):
+    """Host-driven streaming loop (the paper's CPU side): run chunks,
+    profile, generate the SecPE plan between chunks, merge at the end.
+
+    tuples: [num_chunks, P*T_loc, 2].  Returns (merged buffers [num_pri,
+    local], stats dict)."""
+    num_pe = dict(mesh.shape)[axis]
+    chunk_fn = make_distributed_executor(spec, mesh, num_pri, num_sec,
+                                         capacity=capacity, axis=axis)
+    buffers = spec.init_buffer(num_pe)
+    plan = core_mapper.init_plan(num_pri, num_sec)
+    hist = jnp.zeros((num_pri,), jnp.int32)
+    assignment = jnp.full((num_sec,), -1, jnp.int32)
+    loads, drops = [], []       # per chunk; plan active from profile_chunks
+    for c, chunk in enumerate(tuples):
+        buffers, load, dropped, workload = chunk_fn(
+            jnp.asarray(chunk), buffers, plan.table, plan.counter)
+        loads.append(int(jnp.max(load)))
+        drops.append(int(jnp.sum(dropped)))
+        hist = hist + workload
+        if c + 1 == profile_chunks and num_sec:
+            # the paper's re-enqueue: plan from the profiling window
+            assignment = core_scheduler.schedule_secpes(hist, num_sec)
+            plan = core_mapper.apply_schedule(
+                core_mapper.init_plan(num_pri, num_sec), assignment)
+    # merger: fold SecPE shadow buffers into their PriPEs
+    merged = buffers[:num_pri]
+    for j in range(num_sec):
+        tgt = int(assignment[j])
+        if tgt >= 0:
+            if spec.combine == "add":
+                merged = merged.at[tgt].add(buffers[num_pri + j])
+            else:
+                merged = merged.at[tgt].max(buffers[num_pri + j])
+    pc = profile_chunks
+    stats = {"max_load": max(loads),
+             "max_load_postplan": max(loads[pc:]) if loads[pc:] else None,
+             "dropped": sum(drops),
+             "dropped_postplan": sum(drops[pc:]),
+             "assignment": assignment}
+    return merged, stats

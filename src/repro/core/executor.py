@@ -1,0 +1,208 @@
+"""The streaming executor: chunks in, merged buffers out.
+
+This is the JAX realization of the full architecture in paper Fig. 3:
+
+  chunk -> PrePEs (spec.pre) -> data routing (mapper.redirect) ->
+  PriPEs/SecPEs (pe_update on partitioned buffers) -> merger
+
+driven by a `lax.scan` over fixed-size chunks (a chunk is the paper's
+profiling window / channel beat).  The runtime profiler + scheduler live in
+the scan carry, so plan generation and SecPE re-scheduling happen *between
+chunks without interrupting PriPEs*, mirroring §IV-B: on a re-schedule the
+SecPE shadow buffers are merged into their PriPEs and reset before the next
+plan re-assigns them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapper, merger, perfmodel, profiler, scheduler
+from repro.core.types import PROFILE_MODE, RUN_MODE, DittoSpec, ExecStats, RoutePlan
+
+Array = jax.Array
+
+
+def default_pe_update(buffers: Array, eff: Array, idx: Array, value: Array,
+                      combine: str) -> Array:
+    """Vectorized PriPE/SecPE buffer update: the semantic reference for the
+    Pallas route_accumulate kernel (kernels/ref.py reuses this)."""
+    if combine == "add":
+        return buffers.at[eff, idx].add(value.astype(buffers.dtype))
+    return buffers.at[eff, idx].max(value.astype(buffers.dtype))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExecState:
+    buffers: Any
+    plan: RoutePlan
+    rr_base: Array
+    mode: Array
+    profile_hist: Array
+    chunks_in_mode: Array
+    monitor: profiler.MonitorState
+    reschedules: Array
+
+
+def init_state(spec: DittoSpec, num_pri: int, num_sec: int) -> ExecState:
+    buffers = spec.init_buffer(num_pri + num_sec)
+    return ExecState(
+        buffers=buffers,
+        plan=mapper.init_plan(num_pri, num_sec),
+        rr_base=jnp.zeros((num_pri,), jnp.int32),
+        mode=jnp.int32(PROFILE_MODE),
+        profile_hist=jnp.zeros((num_pri,), jnp.int32),
+        chunks_in_mode=jnp.int32(0),
+        monitor=profiler.MonitorState.fresh(),
+        reschedules=jnp.int32(0),
+    )
+
+
+def make_executor(
+    spec: DittoSpec,
+    num_pri: int,
+    num_sec: int,
+    chunk_size: int,
+    *,
+    profile_chunks: int = 1,
+    threshold: float = 0.0,
+    mem_width_tuples: int = 8,
+    static_plan: bool = False,
+) -> Callable[..., tuple[Any, ExecStats]]:
+    """Build the jitted streaming executor.
+
+    Args:
+      spec: application specification (Listing-2 analogue).
+      num_pri/num_sec: M PriPEs and X SecPEs (the generated variant).
+      chunk_size: tuples per chunk (= profiling window granularity).
+      profile_chunks: chunks of profiling before a plan is generated.
+      threshold: throughput-drop fraction that triggers re-scheduling
+        (0.0 disables re-scheduling, the paper's escape hatch).
+      mem_width_tuples: tuples the memory interface feeds per cycle (Eq. 1 W).
+      static_plan: skip runtime profiling; caller passes a pre-made plan
+        (used by tests and by the offline path once a plan is known).
+
+    Returns fn(tuples, [plan]) -> (merged_buffers, ExecStats-per-chunk).
+      ``tuples`` is [num_chunks, chunk_size, ...]; the leading axis is scanned.
+    """
+    if spec.merge is not None and threshold > 0.0:
+        raise ValueError(
+            f"{spec.name}: non-decomposable applications keep per-PE output "
+            "regions and cannot re-merge mid-stream; use threshold=0.0")
+    pe_update = spec.pe_update or partial(default_pe_update, combine=spec.combine)
+    num_pe = num_pri + num_sec
+
+    def chunk_step(state: ExecState, chunk):
+        dst, idx, value = spec.pre(chunk, num_pri)
+        workload = profiler.workload_hist(dst, num_pri)
+
+        # --- data routing: designated PE -> effective PE (mapper, Fig. 4c)
+        rank, rr_base = mapper.occurrence_rank(dst, num_pri, state.rr_base)
+        eff = mapper.redirect(state.plan, dst, rank)
+
+        # --- PriPE/SecPE buffer updates
+        buffers = pe_update(state.buffers, eff, idx, value)
+
+        # --- port-limited cycle model for the monitor + stats
+        eff_load = jnp.zeros((num_pe,), jnp.int32).at[eff].add(1)
+        max_load = eff_load.max()
+        cycles = perfmodel.chunk_cycles(chunk_size, max_load,
+                                        mem_width_tuples, spec.ii_pe)
+
+        if static_plan:
+            stats = ExecStats(max_load=max_load, modeled_cycles=cycles,
+                              mode=jnp.int32(RUN_MODE),
+                              rescheduled=jnp.bool_(False), workload=workload)
+            return dataclasses.replace(state, buffers=buffers, rr_base=rr_base), stats
+
+        # --- runtime profiler: PROFILE mode accumulates the workload hist
+        in_profile = state.mode == PROFILE_MODE
+        profile_hist = jnp.where(in_profile, state.profile_hist + workload,
+                                 state.profile_hist)
+        chunks_in_mode = state.chunks_in_mode + 1
+
+        # PROFILE -> RUN: generate + apply the SecPE scheduling plan (Fig. 5)
+        plan_ready = jnp.logical_and(in_profile, chunks_in_mode >= profile_chunks)
+        assignment = scheduler.schedule_secpes(profile_hist, num_sec)
+        new_plan = mapper.apply_schedule(state.plan, assignment)
+        post_load = scheduler.post_plan_max_load(
+            profile_hist.astype(jnp.float32) / jnp.maximum(chunks_in_mode, 1),
+            assignment)
+        ref_cycles = perfmodel.chunk_cycles(chunk_size, post_load,
+                                            mem_width_tuples, spec.ii_pe)
+
+        def pick(new, old):
+            return jax.tree.map(lambda a, b: jnp.where(plan_ready, a, b), new, old)
+
+        plan = pick(new_plan, state.plan)
+        monitor = pick(
+            profiler.MonitorState(ref_cycles=ref_cycles, ema_cycles=jnp.float32(0.0)),
+            state.monitor)
+        mode = jnp.where(plan_ready, RUN_MODE, state.mode).astype(jnp.int32)
+        chunks_in_mode = jnp.where(plan_ready, 0, chunks_in_mode)
+
+        # RUN mode: throughput monitoring -> re-schedule trigger (§IV-B)
+        in_run = mode == RUN_MODE
+        monitor_on = jnp.logical_and(in_run, ~plan_ready)
+        monitor = jax.tree.map(
+            lambda upd, old: jnp.where(monitor_on, upd, old),
+            profiler.monitor_update(monitor, cycles), monitor)
+        fire = jnp.logical_and(
+            jnp.logical_and(in_run, ~plan_ready),
+            profiler.should_reschedule(monitor, jnp.float32(threshold)))
+
+        def do_reschedule(bufs):
+            merged = merger.merge_buffers(bufs, plan.assignment, num_pri, spec.combine)
+            bufs = bufs.at[:num_pri].set(merged)
+            return merger.reset_sec_buffers(bufs, num_pri, spec.combine)
+
+        if spec.merge is None:
+            buffers = jax.lax.cond(fire, do_reschedule, lambda b: b, buffers)
+        # else: non-decomposable apps keep per-PE regions; threshold=0.0
+        # (enforced above) makes `fire` statically False, and tracing
+        # merge_buffers on their custom buffer pytree would be invalid.
+        plan = jax.tree.map(
+            lambda fresh, cur: jnp.where(fire, fresh, cur),
+            mapper.init_plan(num_pri, num_sec), plan)
+        mode = jnp.where(fire, PROFILE_MODE, mode).astype(jnp.int32)
+        profile_hist = jnp.where(fire, 0, profile_hist)
+        chunks_in_mode = jnp.where(fire, 0, chunks_in_mode)
+        monitor = jax.tree.map(
+            lambda fresh, cur: jnp.where(fire, fresh, cur),
+            profiler.MonitorState.fresh(), monitor)
+
+        stats = ExecStats(max_load=max_load, modeled_cycles=cycles, mode=state.mode,
+                          rescheduled=fire, workload=workload)
+        new_state = ExecState(buffers=buffers, plan=plan, rr_base=rr_base,
+                              mode=mode, profile_hist=profile_hist,
+                              chunks_in_mode=chunks_in_mode, monitor=monitor,
+                              reschedules=state.reschedules + fire.astype(jnp.int32))
+        return new_state, stats
+
+    @jax.jit
+    def run(tuples, plan: Optional[RoutePlan] = None):
+        state = init_state(spec, num_pri, num_sec)
+        if plan is not None:
+            state = dataclasses.replace(state, plan=plan,
+                                        mode=jnp.int32(RUN_MODE))
+        state, stats = jax.lax.scan(chunk_step, state, tuples)
+        if spec.merge is not None:
+            merged = spec.merge(state.buffers, state.plan)
+        else:
+            merged = merger.merge_buffers(state.buffers, state.plan.assignment,
+                                          num_pri, spec.combine)
+        return merged, stats
+
+    return run
+
+
+def make_static_plan(num_pri: int, num_sec: int, workload) -> RoutePlan:
+    """Offline path: plan from a sampled workload distribution (the skew
+    analyzer's sample doubles as the profiling window)."""
+    assignment = scheduler.schedule_secpes(jnp.asarray(workload), num_sec)
+    return mapper.apply_schedule(mapper.init_plan(num_pri, num_sec), assignment)

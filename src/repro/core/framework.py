@@ -1,0 +1,105 @@
+"""The Ditto framework front-end (paper §V, Fig. 6).
+
+Workflow = implementation generation + implementation selection:
+
+  1. The developer writes a DittoSpec (the Listing-2 programming interface).
+  2. ``tune_pe_counts`` balances the pipeline (Eq. 1):
+         N_pre / II_pre = N_pri / II_pri = W_mem / W_tuple
+     On TPU the "II" is the per-tile absorb cost of the one-hot-matmul PE
+     (see DESIGN.md §2); the equation's form is unchanged.
+  3. ``generate`` produces the family of implementations X = 0..M-1 (on FPGA
+     these are distinct bitstreams; here, executor closures -- the
+     BRAM<->robustness trade-off shows up as accumulator capacity M/(M+X)*C).
+  4. ``build`` runs the skew analyzer (Eq. 2) on a dataset sample and returns
+     the selected implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyzer, executor
+from repro.core.types import DittoSpec
+
+
+def tune_pe_counts(mem_width_bytes: int, tuple_bytes: int, ii_pre: int,
+                   ii_pe: int) -> tuple[int, int, int]:
+    """Eq. 1: returns (N_PrePE, N_PriPE, W tuples/cycle)."""
+    w = mem_width_bytes // tuple_bytes
+    return w * ii_pre, w * ii_pe, w
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratedImpl:
+    """One point of the generated family: an executor with X SecPEs."""
+
+    num_pri: int
+    num_sec: int
+    run: Callable[..., Any]
+
+    @property
+    def buffer_capacity_fraction(self) -> float:
+        return analyzer.buffer_capacity_fraction(self.num_pri, self.num_sec)
+
+
+class Ditto:
+    """Framework object tying spec -> generation -> selection together."""
+
+    def __init__(self, spec: DittoSpec, *, mem_width_bytes: int = 64,
+                 chunk_size: int = 4096, profile_chunks: int = 1,
+                 threshold: float = 0.0):
+        self.spec = spec
+        n_pre, n_pri, w = tune_pe_counts(mem_width_bytes, spec.tuple_bytes,
+                                         spec.ii_pre, spec.ii_pe)
+        self.num_pre = n_pre
+        self.num_pri = n_pri
+        self.mem_width_tuples = w
+        self.chunk_size = chunk_size
+        self.profile_chunks = profile_chunks
+        self.threshold = threshold
+
+    def generate(self, xs: Optional[Sequence[int]] = None) -> list[GeneratedImpl]:
+        """M implementation variants, X = 0..M-1 (paper §V-C)."""
+        xs = range(self.num_pri) if xs is None else xs
+        out = []
+        for x in xs:
+            run = executor.make_executor(
+                self.spec, self.num_pri, x, self.chunk_size,
+                profile_chunks=self.profile_chunks, threshold=self.threshold,
+                mem_width_tuples=self.mem_width_tuples)
+            out.append(GeneratedImpl(self.num_pri, x, run))
+        return out
+
+    def select(self, keys: np.ndarray, tolerance: float = 0.01,
+               online: bool = False, sample_frac: float = 0.001) -> int:
+        """Skew analyzer: sample -> Eq. 2 -> X (paper §V-D)."""
+        if online:
+            return self.num_pri - 1
+        sample = analyzer.sample_dataset(np.asarray(keys), frac=sample_frac)
+        if sample.ndim == 1:          # bare keys -> single-column tuples
+            sample = sample[:, None]
+        dst, _, _ = self.spec.pre(jnp.asarray(sample), self.num_pri)
+        return analyzer.select_implementation(dst, self.num_pri, tolerance)
+
+    def build(self, keys: np.ndarray, tolerance: float = 0.01,
+              online: bool = False) -> GeneratedImpl:
+        x = self.select(keys, tolerance=tolerance, online=online)
+        return self.generate([x])[0]
+
+    def chunk(self, data: np.ndarray) -> jnp.ndarray:
+        """Reshape a flat tuple stream into [num_chunks, chunk_size, ...] for
+        the streaming executor.  Ragged tails are the data pipeline's job
+        (data/pipeline.py splits an exact multiple off and hands the tail to
+        a one-chunk executor); here exactness is required so that counting
+        semantics stay bit-exact."""
+        n = len(data)
+        c = self.chunk_size
+        if n % c:
+            raise ValueError(f"stream length {n} not a multiple of chunk {c}; "
+                             "use repro.data.pipeline.chunk_stream for ragged input")
+        return jnp.asarray(data.reshape(-1, c, *data.shape[1:]))

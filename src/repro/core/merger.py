@@ -1,0 +1,65 @@
+"""The merger module (paper §IV-B).
+
+By the end of processing (and on every re-schedule, before SecPEs are
+re-assigned to different PriPEEs), the results of PriPEs and SecPEs are merged
+according to the SecPE scheduling plan.  A SecPE shadows its PriPE's *local
+index space*, so merging is an element-wise combine of the shadow buffer into
+the primary buffer: `add` for counting state (HISTO/PR/HHD), `max` for
+register state (HLL).  Non-decomposable applications (DP) override `merge` in
+their DittoSpec and keep per-PE output regions (paper: "PrePEs and SecPEs
+output results to their own memory space").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_buffers(buffers: jax.Array, assignment: jax.Array, num_pri: int,
+                  combine: str) -> jax.Array:
+    """Merge SecPE shadow buffers into their PriPE buffers.
+
+    Args:
+      buffers: [M+X, *local] accumulator state for all PEs.
+      assignment: int32[X]; assignment[j] = PriPE shadowed by SecPE j (-1 idle).
+      num_pri: M.
+      combine: 'add' | 'max'.
+
+    Returns merged [M, *local] primary buffers.
+    """
+    pri = buffers[:num_pri]
+    sec = buffers[num_pri:]
+    if sec.shape[0] == 0:
+        return pri
+    if combine == "add":
+        # one-hot matmul keeps this MXU-friendly at scale
+        onehot = (assignment[:, None] == jnp.arange(num_pri)[None, :])
+        onehot = onehot.astype(pri.dtype)
+        flat = sec.reshape(sec.shape[0], -1)
+        add = jnp.einsum("xp,xb->pb", onehot, flat).reshape(pri.shape)
+        return pri + add
+    elif combine == "max":
+        seg = jnp.where(assignment >= 0, assignment, num_pri)  # idle -> dropped
+        mx = jax.ops.segment_max(sec, seg, num_segments=num_pri + 1,
+                                 indices_are_sorted=False)[:num_pri]
+        # segment_max fills empty segments with the dtype minimum, which can
+        # never win the element-wise maximum below -- no guard needed.
+        return jnp.maximum(pri, mx)
+    raise ValueError(combine)
+
+
+def reset_sec_buffers(buffers: jax.Array, num_pri: int, combine: str) -> jax.Array:
+    """Zero (add) or identity-fill (max) the SecPE shadow buffers after a
+    merge so a re-assigned SecPE never leaks another PriPE's partial state."""
+    sec = buffers[num_pri:]
+    if combine == "add":
+        fill = jnp.zeros_like(sec)
+    else:
+        fill = jnp.full_like(sec, _identity_for_max(sec.dtype))
+    return buffers.at[num_pri:].set(fill)
+
+
+def _identity_for_max(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    return jnp.array(-jnp.inf, dtype)

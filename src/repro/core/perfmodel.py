@@ -1,0 +1,44 @@
+"""Port-limited analytical performance model.
+
+The paper's designs are bound by buffer ports, not compute: a PE absorbs one
+tuple every II_pe cycles, and the memory interface feeds W tuples per cycle
+(W = W_mem / W_tuple, Eq. 1 balance).  For a chunk of T tuples whose
+max-loaded effective PE absorbs L tuples:
+
+    cycles(chunk) = max( T / W ,  L * II_pe )
+
+Uniform data: L = T/M and M = W * II_pe (Eq. 1) makes both terms equal -- the
+pipeline is balanced and throughput is the full W tuples/cycle.  Extreme skew
+without SecPEs: L = T, throughput collapses to 1/II_pe tuples/cycle = 1/M of
+uniform (the paper's Fig. 2b: alpha=3 runs at one-sixteenth).  This model is
+what the runtime profiler's throughput monitor observes and what the Fig. 2 /
+Fig. 7 / Fig. 9 benchmarks report, since cycle-accurate FPGA channels do not
+transfer to CPU/TPU wall-clock (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def chunk_cycles(chunk_size, max_load, mem_width_tuples: int, ii_pe: int):
+    """Port-limited cycles to drain one chunk."""
+    return jnp.maximum(
+        jnp.asarray(chunk_size, jnp.float32) / mem_width_tuples,
+        jnp.asarray(max_load, jnp.float32) * ii_pe,
+    )
+
+
+def throughput(chunk_size, cycles):
+    """Tuples per cycle."""
+    return jnp.asarray(chunk_size, jnp.float32) / jnp.maximum(cycles, 1.0)
+
+
+def uniform_cycles(chunk_size, mem_width_tuples: int):
+    return jnp.asarray(chunk_size, jnp.float32) / mem_width_tuples
+
+
+def reschedule_overhead_cycles(freq_mhz: float = 200.0, overhead_ms: float = 1.0):
+    """Kernel dequeue/enqueue overhead of a SecPE re-schedule, in cycles.
+    The paper observes throughput dips when the skew-change interval is within
+    an order of magnitude of this overhead (Fig. 9)."""
+    return overhead_ms * 1e-3 * freq_mhz * 1e6

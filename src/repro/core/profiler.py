@@ -1,0 +1,71 @@
+"""The runtime profiler (paper §IV-C3).
+
+Two duties:
+  1. generate the SecPE scheduling plan by monitoring the workload
+     distribution among PriPEs (N independent hist instances merged into a
+     global histogram after a profiling window);
+  2. monitor system throughput (processed tuples per clock-tick window) and
+     inform the system to re-schedule SecPEs when the distribution changed.
+
+The FPGA profiler counts N designated-PE ids per cycle with N `hist`
+instances; the vectorized equivalent is a segment-sum per chunk.  The
+structural N-partial-hist + merge path is kept (``partial_hists``) because
+tests verify the merged result is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def workload_hist(dst: Array, num_pri: int) -> Array:
+    """Global workload histogram over designated PriPE ids for one chunk."""
+    return jnp.zeros((num_pri,), jnp.int32).at[dst].add(1)
+
+
+def partial_hists(dst: Array, num_pri: int, num_lanes: int) -> Array:
+    """The paper's N independent hist instances: lane i counts tuples
+    i, i+N, i+2N, ... (the i-th element of each beat).  Shape [N, M]."""
+    t = dst.shape[0]
+    assert t % num_lanes == 0, "chunk must be a multiple of the lane count"
+    lanes = dst.reshape(t // num_lanes, num_lanes)
+    def one(lane):
+        return jnp.zeros((num_pri,), jnp.int32).at[lane].add(1)
+    return jax.vmap(one, in_axes=1)(lanes)
+
+
+def merge_partials(partials: Array) -> Array:
+    """Merge the N partial results into the global histogram."""
+    return partials.sum(axis=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MonitorState:
+    """Throughput-monitor state: processed-tuple count within the current
+    tick window and the reference (post-plan ideal) throughput."""
+
+    ref_cycles: Array     # float32[] modeled cycles/chunk right after planning
+    ema_cycles: Array     # float32[] EMA of modeled cycles/chunk
+
+    @staticmethod
+    def fresh() -> "MonitorState":
+        return MonitorState(ref_cycles=jnp.float32(0.0), ema_cycles=jnp.float32(0.0))
+
+
+def monitor_update(state: MonitorState, cycles: Array, alpha: float = 0.5) -> MonitorState:
+    ema = jnp.where(state.ema_cycles == 0.0, cycles, alpha * cycles + (1 - alpha) * state.ema_cycles)
+    return MonitorState(ref_cycles=state.ref_cycles, ema_cycles=ema)
+
+
+def should_reschedule(state: MonitorState, threshold: Array) -> Array:
+    """True when throughput (1/cycles) dropped below threshold * reference.
+
+    threshold = 0 disables re-scheduling (the paper's escape hatch when the
+    distribution changes faster than the re-schedule overhead)."""
+    degraded = state.ema_cycles * threshold > state.ref_cycles
+    return jnp.logical_and(threshold > 0.0, jnp.logical_and(state.ref_cycles > 0.0, degraded))

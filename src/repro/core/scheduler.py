@@ -1,0 +1,57 @@
+"""SecPE scheduling-plan generation (paper §IV-C3, Fig. 5).
+
+The runtime profiler assigns a SecPE to the PriPE whose workload is maximal
+and recalculates the workload distribution assuming the original workload is
+evenly shared with the attached SecPEs; repeated until all SecPEs are
+scheduled.  Scheduling-plan generation is off the critical path, so the paper
+executes it serially -- we keep the identical serial greedy under a
+`lax.fori_loop` (validated against the paper's Fig. 5 walkthrough).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def schedule_secpes(workload: jax.Array, num_sec: int) -> jax.Array:
+    """Greedy max-load splitting.
+
+    Args:
+      workload: int/float[M] per-PriPE tuple counts from the profiler.
+      num_sec:  X, the number of schedulable SecPEs.
+
+    Returns:
+      assignment: int32[X] with assignment[j] = PriPE id SecPE j shadows.
+      (Every SecPE is always scheduled, as in the paper; helping an already
+      balanced PriPE is harmless.)
+    """
+    m = workload.shape[0]
+    if num_sec == 0:
+        return jnp.zeros((0,), jnp.int32)
+    w = workload.astype(jnp.float32)
+    shares = jnp.ones((m,), dtype=jnp.float32)  # 1 + #SecPEs attached
+    assignment = jnp.full((num_sec,), -1, dtype=jnp.int32)
+
+    def body(j, carry):
+        shares, assignment = carry
+        eff = w / shares
+        p = jnp.argmax(eff).astype(jnp.int32)
+        shares = shares.at[p].add(1.0)
+        assignment = assignment.at[j].set(p)
+        return shares, assignment
+
+    _, assignment = jax.lax.fori_loop(0, num_sec, body, (shares, assignment))
+    return assignment
+
+
+def post_plan_max_load(workload: jax.Array, assignment: jax.Array) -> jax.Array:
+    """Max effective per-PE load after the plan divides hot PriPEs' work.
+
+    Used by the throughput monitor and the perf model: PriPE p with s_p
+    attached SecPEs absorbs workload[p] / (1 + s_p).
+    """
+    m = workload.shape[0]
+    num_sec = assignment.shape[0]
+    onehot = (assignment[:, None] == jnp.arange(m)[None, :]).astype(jnp.float32)
+    shares = 1.0 + onehot.sum(axis=0)
+    return jnp.max(workload.astype(jnp.float32) / shares)

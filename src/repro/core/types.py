@@ -1,0 +1,106 @@
+"""Core datatypes for the skew-oblivious data-routing architecture (Ditto).
+
+The paper's architecture has three PE classes:
+  * PrePE   -- prepares tuples into <dst, value> form (application `pre` logic)
+  * PriPE   -- M primary PEs, ids 0..M-1, each owning a private buffer that
+               holds a *distinct* partition of the application state
+  * SecPE   -- X secondary PEs, ids M..M+X-1, dynamically scheduled at run time
+               to shadow overloaded PriPEs (same local index space)
+
+A `RoutePlan` is the runtime artifact produced by the profiler+scheduler and
+consumed by the mappers and the merger.  `DittoSpec` is what a developer writes
+(the paper's Listing-2 programming interface): the `pre` logic, the PE update
+logic and the merge semantics.  Everything else is provided by the framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """SecPE scheduling plan + the mapper state that executes it (paper Fig. 4).
+
+    Attributes:
+      assignment: int32[X].  assignment[j] = PriPE id that SecPE (global id
+        M+j) is scheduled to shadow, or -1 when SecPE j is idle.
+      table: int32[M, X+1].  Mapping table; row p holds the effective PE ids
+        (PriPE p followed by its assigned SecPEs) that share p's workload.
+        Unused slots hold p itself so out-of-range lookups stay harmless.
+      counter: int32[M].  counter[p] = number of valid entries in row p
+        ("the number of available PEs from the left side of the row",
+        initialized to one).
+    """
+
+    assignment: Array
+    table: Array
+    counter: Array
+
+    @property
+    def num_pri(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def num_sec(self) -> int:
+        return self.assignment.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class DittoSpec:
+    """High-level application specification (the paper's Listing 2).
+
+    The developer supplies only:
+      * ``pre``: tuples -> (dst, idx, value).  ``dst`` in [0, M) is the
+        designated PriPE (the data-routing rule, e.g. low bits of the key
+        hash); ``idx`` is the index into the owning PE's private buffer;
+        ``value`` is the payload to combine.
+      * ``init_buffer``: (num_pe,) -> buffer array of shape (num_pe, *local).
+      * ``combine``: 'add' | 'max' -- how buffer cells absorb values and how
+        SecPE shadow buffers merge back into their PriPE (the merger).
+      * optionally a custom ``pe_update`` / ``merge`` for non-decomposable
+        applications (the paper's data-partitioning case).
+    """
+
+    name: str
+    pre: Callable[[Array, int], tuple[Array, Array, Array]]
+    init_buffer: Callable[[int], Array]
+    combine: str = "add"
+    # Optional overrides (signature documented in executor.py)
+    pe_update: Optional[Callable[..., Array]] = None
+    merge: Optional[Callable[..., Array]] = None
+    # Metadata used by the system-generation step (Eq. 1 analogue).
+    tuple_bytes: int = 8
+    ii_pre: int = 1
+    ii_pe: int = 2
+
+    def __post_init__(self):
+        if self.combine not in ("add", "max"):
+            raise ValueError(f"combine must be add|max, got {self.combine}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExecStats:
+    """Per-chunk execution statistics recorded by the streaming executor.
+
+    Used by the Fig. 2 / Fig. 7 / Fig. 9 benchmarks and by the throughput
+    monitor inside the runtime profiler.
+    """
+
+    max_load: Array          # int32[]  max tuples absorbed by one effective PE
+    modeled_cycles: Array    # float32[]  port-limited cycle model for chunk
+    mode: Array              # int32[]  0 = PROFILE, 1 = RUN
+    rescheduled: Array       # bool[]   True if a re-schedule fired this chunk
+    workload: Array          # int32[M] per-PriPE designated workload
+
+
+PROFILE_MODE = 0
+RUN_MODE = 1

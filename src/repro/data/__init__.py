@@ -1,0 +1,11 @@
+"""Datasets + input pipeline: Zipf tuple streams (paper §II-B, §VI-C),
+power-law graphs (paper §VI-C2) and the chunked streaming pipeline."""
+from repro.data.zipf import zipf_keys, zipf_tuples, evolving_zipf_tuples
+from repro.data.graphs import rmat_graph, uniform_graph, graph_to_edge_tuples
+from repro.data.pipeline import chunk_stream, TupleStream, token_batches
+
+__all__ = [
+    "zipf_keys", "zipf_tuples", "evolving_zipf_tuples",
+    "rmat_graph", "uniform_graph", "graph_to_edge_tuples",
+    "chunk_stream", "TupleStream", "token_batches",
+]

@@ -1,0 +1,74 @@
+"""Input pipeline: chunked tuple streams for the Ditto executor and token
+batches for LM training.
+
+The executor scans fixed-size chunks (= the paper's profiling window / the
+channel beat).  ``chunk_stream`` splits an arbitrary-length stream into an
+exact-multiple body plus a padded tail with a validity mask, so counting
+semantics stay bit-exact without host-side ragged handling.
+
+``token_batches`` is the LM-side pipeline used by examples/train_lm.py: an
+infinite deterministic synthetic-token stream with per-host sharding -- the
+same iterator contract a production loader (e.g. array_record + grain) would
+satisfy, so swapping in a real corpus changes one function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TupleStream:
+    """Chunked stream: body [num_chunks, chunk, ...] plus optional tail."""
+
+    body: np.ndarray           # [num_chunks, chunk_size, ...]
+    tail: Optional[np.ndarray]  # [tail_len, ...] or None
+    chunk_size: int
+
+    @property
+    def num_tuples(self) -> int:
+        n = self.body.shape[0] * self.body.shape[1]
+        return n + (len(self.tail) if self.tail is not None else 0)
+
+
+def chunk_stream(data: np.ndarray, chunk_size: int) -> TupleStream:
+    n = len(data)
+    body_len = (n // chunk_size) * chunk_size
+    body = data[:body_len].reshape(-1, chunk_size, *data.shape[1:])
+    tail = data[body_len:] if body_len < n else None
+    return TupleStream(body=body, tail=tail, chunk_size=chunk_size)
+
+
+def pad_tail_chunk(tail: np.ndarray, chunk_size: int,
+                   pad_key: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Pad the tail to one full chunk; mask marks real tuples.  Apps treat
+    masked tuples as no-ops by routing them with value 0 (add) / identity
+    (max), which the specs in repro.apps honour."""
+    pad = chunk_size - len(tail)
+    mask = np.concatenate([np.ones(len(tail), bool), np.zeros(pad, bool)])
+    padded = np.concatenate(
+        [tail, np.full((pad, *tail.shape[1:]), pad_key, tail.dtype)], axis=0)
+    return padded, mask
+
+
+def token_batches(global_batch: int, seq_len: int, vocab: int,
+                  num_hosts: int = 1, host_id: int = 0,
+                  seed: int = 0) -> Iterator[dict]:
+    """Deterministic synthetic LM batches, sharded by host.
+
+    Yields {'tokens': [B_host, S] int32, 'targets': [B_host, S] int32}.
+    Targets are tokens shifted by one (next-token LM).  Deterministic in
+    (seed, step, host) so restarts resume bit-identically mid-epoch -- the
+    property elastic checkpoint-restore relies on.
+    """
+    assert global_batch % num_hosts == 0
+    b_host = global_batch // num_hosts
+    step = 0
+    while True:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, step, host_id]))
+        toks = rng.integers(0, vocab, size=(b_host, seq_len + 1), dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        step += 1

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (see DESIGN.md §2):
+
+  route_accumulate -- PE buffer scatter-accumulate as one-hot MXU matmul
+  cms_update       -- count-min sketch multi-row update
+  moe_onehot       -- dispatch/combine one-hot contractions (routing network)
+  flash_attention  -- online-softmax attention fwd (LM prefill hot-spot)
+
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

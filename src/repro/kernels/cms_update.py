@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: count-min sketch update (HHD's hot loop).
+
+The FPGA PE updates D BRAM banks per tuple in parallel (one per sketch row).
+TPU adaptation: the whole [num_pe * depth, width] sketch-row space is updated
+per tuple tile with two one-hot factors contracted on the MXU:
+
+    out[r, w] += sum_t value[t] * [eff[t]*D + d(r) == r] * [cols[t, d(r)] == w]
+
+realized as  rows_onehot.T @ (cols_onehot * value)  per depth level d --
+a [R, TT] x [TT, WB] matmul, with the d loop unrolled statically (D <= 4).
+
+Grid: (width // WB, T // TT); tuple axis last (sequential reduction, output
+block resident).  All R = num_pe * depth rows stay in the block: R is small
+by construction (M <= 64, D <= 4 -> R <= 256 sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(eff_ref, cols_ref, val_ref, out_ref, *, depth: int,
+            block_w: int, rows: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    eff = eff_ref[...]                      # [TT]
+    val = val_ref[...]                      # [TT]
+    base_w = pl.program_id(0) * block_w
+    tt = eff.shape[0]
+    dtype = out_ref.dtype
+    acc = out_ref[...]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (tt, rows), 1)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (tt, block_w), 1)
+    for d in range(depth):
+        row = eff * depth + d               # [TT]; eff<0 -> no row matches
+        rows_onehot = (row[:, None] == row_iota).astype(dtype)      # [TT, R]
+        local_col = cols_ref[...][:, d] - base_w
+        cols_onehot = (local_col[:, None] == col_iota).astype(dtype)  # [TT, WB]
+        weighted = cols_onehot * val[:, None].astype(dtype)
+        acc = acc + jnp.dot(rows_onehot.T, weighted,
+                            preferred_element_type=dtype)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("num_pe", "depth", "width",
+                                             "block_w", "block_t", "interpret"))
+def cms_update(eff: jax.Array, cols: jax.Array, value: jax.Array,
+               num_pe: int, depth: int, width: int, *, block_w: int = 512,
+               block_t: int = 1024, interpret: bool = True) -> jax.Array:
+    """CMS update -> [num_pe, depth, width].  eff<0 entries are padding."""
+    t = eff.shape[0]
+    rows = num_pe * depth
+    wb = min(block_w, _round_up(width, 128))
+    tt = min(block_t, _round_up(t, 8))
+    wp = _round_up(width, wb)
+    tp = _round_up(t, tt)
+    eff_p = jnp.full((tp,), -1, jnp.int32).at[:t].set(eff.astype(jnp.int32))
+    cols_p = jnp.zeros((tp, depth), jnp.int32).at[:t].set(cols.astype(jnp.int32))
+    val_p = jnp.zeros((tp,), value.dtype).at[:t].set(value)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, depth=depth, block_w=wb, rows=rows),
+        grid=(wp // wb, tp // tt),
+        in_specs=[
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+            pl.BlockSpec((tt, depth), lambda i, j: (j, 0)),
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((rows, wb), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, wp), value.dtype),
+        interpret=interpret,
+    )(eff_p, cols_p, val_p)
+    return out[:, :width].reshape(num_pe, depth, width)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: flash (online-softmax) attention forward.
+
+The LM-side compute hotspot of the prefill/train cells.  models/attention
+keeps a pure-XLA chunked path as the portable default (the dry-run must
+compile on the CPU host mesh); this kernel is the TPU-native version of
+the same math, tiled for VMEM/MXU:
+
+  grid (B*H, Sq/BQ, Sk/BK) -- the KV axis is the LAST (sequential) grid
+  dimension, so the output tile and the running (m, l, acc) statistics
+  stay VMEM-resident across the online-softmax reduction (the same
+  revisiting-reduction pattern as route_accumulate -- which is exactly
+  the paper's PE-buffer discipline: private fast-memory state absorbing
+  a stream of tiles).
+
+  per step:  s = q @ k^T * scale                    [BQ, BK]  (MXU)
+             causal/window/padding mask via absolute positions
+             m' = max(m, rowmax(s)); p = exp(s - m')
+             l  = l * e^{m-m'} + rowsum(p)
+             acc = acc * e^{m-m'} + p @ v                     (MXU)
+  epilogue:  out = acc / l
+
+Block sizes default to 128 (MXU-aligned); dh is padded to a lane multiple
+by the wrapper.  GQA kv-head broadcast happens via indexing (never
+materialized).  Validated against ref.flash_attention (pure jnp) in
+interpret mode over shape/dtype/window sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, seq_len: int):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q_pos = q_i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    keep = k_pos < seq_len                    # key padding
+    if causal:
+        keep &= k_pos <= q_pos
+    if window:
+        keep &= k_pos > q_pos - window
+
+    q = q_ref[0].astype(jnp.float32)          # [BQ, dh]
+    k = k_ref[0].astype(jnp.float32)          # [BK, dh]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_ref[0]                          # [BQ]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)           # [BK, dh]
+    acc_ref[0] = (acc_ref[0] * alpha[:, None]
+                  + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[0] = m_new
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[0]
+                    / jnp.maximum(l_ref[0], 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q [B, Sq, H, dh], k/v [B, Sk, KV, dh] -> [B, Sq, H, dh].
+
+    Softmax scale = dh^-0.5.  window > 0 = sliding window (gemma2 local
+    layers).  Padding keys are masked by absolute position."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    scale = dh ** -0.5
+
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(sk, 8))
+    sq_p, sk_p = _round_up(sq, bq), _round_up(sk, bk)
+    dh_p = _round_up(dh, 128)
+
+    # [B*H, S, dh] layout; GQA: q head j reads kv head j // (h // kvh)
+    qf = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, dh_p - dh))) \
+        .transpose(0, 2, 1, 3).reshape(b * h, sq_p, dh_p)
+    kf = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, dh_p - dh))) \
+        .transpose(0, 2, 1, 3)
+    vf = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, dh_p - dh))) \
+        .transpose(0, 2, 1, 3)
+    heads = jnp.arange(b * h)
+    kf = kf[heads // h, (heads % h) // (h // kvh)]      # [B*H, Sk_p, dh_p]
+    vf = vf[heads // h, (heads % h) // (h // kvh)]
+
+    grid = (b * h, sq_p // bq, sk_p // bk)
+    blk_q = pl.BlockSpec((1, bq, dh_p), lambda g, i, j: (g, i, 0))
+    blk_kv = pl.BlockSpec((1, bk, dh_p), lambda g, i, j: (g, j, 0))
+    blk_stat = pl.BlockSpec((1, bq), lambda g, i, j: (g, i))
+
+    out, _, _, _ = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_q=bq, block_k=bk,
+                          causal=causal, window=window, seq_len=sk),
+        grid=grid,
+        in_specs=[blk_q, blk_kv, blk_kv],
+        out_specs=[blk_q, blk_stat, blk_stat, blk_q],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sq_p, dh_p), q.dtype),     # out
+            jax.ShapeDtypeStruct((b * h, sq_p), jnp.float32),       # m
+            jax.ShapeDtypeStruct((b * h, sq_p), jnp.float32),       # l
+            jax.ShapeDtypeStruct((b * h, sq_p, dh_p), jnp.float32), # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, h, sq_p, dh_p)[:, :, :sq, :dh]
+    return out.transpose(0, 2, 1, 3)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

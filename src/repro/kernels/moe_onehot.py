@@ -1,0 +1,141 @@
+"""Pallas TPU kernels: one-hot dispatch/combine (the routing network).
+
+The paper's combiner/decoder/filter dispatches N tuples/cycle into per-PE
+channels (§IV-C1).  The TPU-native equivalent of "compact each PE's tuples
+into its channel" is the capacity-slot one-hot contraction (exactly the MoE
+dispatch/combine einsum):
+
+    dispatch:  packed[p, c, d] = sum_t [eff[t]==p][slot[t]==c] * x[t, d]
+    combine:   y[t, d]         = gate[t] * packed[eff[t], slot[t], d]
+
+Both are dense matmuls over the combined (p*C + c) axis -> MXU work, no
+scatter.  ``slot`` is the occurrence rank (mapper round-robin position), and
+slot >= capacity means channel overflow -> tuple dropped, the FPGA
+back-pressure analogue (DESIGN.md §2).
+
+Used by apps/dp (pack per-partition regions) and by the Ditto-MoE layer
+(models/moe.py) for token->expert dispatch at scale.
+
+Grid (dispatch): (PC // PCB, dim // DB, T // TT), tuple axis last so the
+[PCB, DB] output block is resident across the reduction.
+Grid (combine):  (T // TT, dim // DB, PC // PCB), pc axis last, [TT, DB]
+output block resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dispatch_kernel(pc_ref, x_ref, out_ref, *, block_pc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    pc = pc_ref[...]                                   # [TT]
+    x = x_ref[...]                                     # [TT, DB]
+    base = pl.program_id(0) * block_pc
+    local = pc - base
+    rows = jax.lax.broadcasted_iota(jnp.int32, (pc.shape[0], block_pc), 1)
+    onehot = (local[:, None] == rows).astype(x.dtype)  # [TT, PCB]
+    out_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=out_ref.dtype)
+
+
+def _combine_kernel(pc_ref, gate_ref, packed_ref, out_ref, *, block_pc: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    pc = pc_ref[...]                                   # [TT]
+    gate = gate_ref[...]                               # [TT]
+    packed = packed_ref[...]                           # [PCB, DB]
+    base = k * block_pc
+    local = pc - base
+    rows = jax.lax.broadcasted_iota(jnp.int32, (pc.shape[0], block_pc), 1)
+    onehot = (local[:, None] == rows).astype(packed.dtype)
+    onehot = onehot * gate[:, None].astype(packed.dtype)
+    out_ref[...] += jnp.dot(onehot, packed, preferred_element_type=out_ref.dtype)
+
+
+def _flat_pc(eff, slot, num_pe, capacity):
+    keep = (eff >= 0) & (eff < num_pe) & (slot >= 0) & (slot < capacity)
+    return jnp.where(keep, eff * capacity + slot, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_pe", "capacity", "block_pc",
+                                             "block_d", "block_t", "interpret"))
+def onehot_dispatch(eff: jax.Array, slot: jax.Array, values: jax.Array,
+                    num_pe: int, capacity: int, *, block_pc: int = 512,
+                    block_d: int = 512, block_t: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """Pack values [T, dim] -> [num_pe, capacity, dim]."""
+    t, dim = values.shape
+    pc_total = num_pe * capacity
+    pcb = min(block_pc, _round_up(pc_total, 128))
+    db = min(block_d, _round_up(dim, 128))
+    tt = min(block_t, _round_up(t, 8))
+    pcp, dp_, tp = _round_up(pc_total, pcb), _round_up(dim, db), _round_up(t, tt)
+    pc = jnp.full((tp,), -1, jnp.int32).at[:t].set(
+        _flat_pc(eff, slot, num_pe, capacity))
+    x = jnp.zeros((tp, dp_), values.dtype).at[:t, :dim].set(values)
+
+    out = pl.pallas_call(
+        functools.partial(_dispatch_kernel, block_pc=pcb),
+        grid=(pcp // pcb, dp_ // db, tp // tt),
+        in_specs=[
+            pl.BlockSpec((tt,), lambda i, k, j: (j,)),
+            pl.BlockSpec((tt, db), lambda i, k, j: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((pcb, db), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((pcp, dp_), values.dtype),
+        interpret=interpret,
+    )(pc, x)
+    return out[:pc_total, :dim].reshape(num_pe, capacity, dim)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pc", "block_d", "block_t",
+                                             "interpret"))
+def onehot_combine(eff: jax.Array, slot: jax.Array, packed: jax.Array,
+                   gate: jax.Array | None = None, *, block_pc: int = 512,
+                   block_d: int = 512, block_t: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """Unpack [num_pe, capacity, dim] -> [T, dim] (scaled by gate)."""
+    num_pe, capacity, dim = packed.shape
+    t = eff.shape[0]
+    pc_total = num_pe * capacity
+    pcb = min(block_pc, _round_up(pc_total, 128))
+    db = min(block_d, _round_up(dim, 128))
+    tt = min(block_t, _round_up(t, 8))
+    pcp, dp_, tp = _round_up(pc_total, pcb), _round_up(dim, db), _round_up(t, tt)
+    if gate is None:
+        gate = jnp.ones((t,), packed.dtype)
+    pc = jnp.full((tp,), -1, jnp.int32).at[:t].set(
+        _flat_pc(eff, slot, num_pe, capacity))
+    g = jnp.zeros((tp,), packed.dtype).at[:t].set(gate.astype(packed.dtype))
+    pk = jnp.zeros((pcp, dp_), packed.dtype).at[:pc_total, :dim].set(
+        packed.reshape(pc_total, dim))
+
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, block_pc=pcb),
+        grid=(tp // tt, dp_ // db, pcp // pcb),
+        in_specs=[
+            pl.BlockSpec((tt,), lambda i, k, j: (i,)),
+            pl.BlockSpec((tt,), lambda i, k, j: (i,)),
+            pl.BlockSpec((pcb, db), lambda i, k, j: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tt, db), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((tp, dp_), packed.dtype),
+        interpret=interpret,
+    )(pc, g, pk)
+    return out[:t, :dim]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,75 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op dispatches to the Pallas kernel (interpret=True off-TPU so CPU tests
+execute the real kernel body) or to the pure-jnp oracle in ref.py when
+``use_kernel=False``.  Shapes/dtypes are validated here so kernels can assume
+clean inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cms_update as _cms
+from repro.kernels import moe_onehot as _moe
+from repro.kernels import ref
+from repro.kernels import route_accumulate as _ra
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def scatter_accumulate(flat_idx, value, num_bins: int, combine: str = "add",
+                       *, use_kernel: bool = True, **blocks):
+    if not use_kernel:
+        return ref.scatter_accumulate(flat_idx, value, num_bins, combine)
+    return _ra.route_accumulate(flat_idx, value, num_bins, combine,
+                                interpret=_interpret(), **blocks)
+
+
+def cms_update(eff, cols, value, num_pe: int, depth: int, width: int,
+               *, use_kernel: bool = True, **blocks):
+    if not use_kernel:
+        return ref.cms_update(eff, cols, value, num_pe, depth, width)
+    return _cms.cms_update(eff, cols, value, num_pe, depth, width,
+                           interpret=_interpret(), **blocks)
+
+
+def onehot_dispatch(eff, slot, values, num_pe: int, capacity: int,
+                    *, use_kernel: bool = True, **blocks):
+    if not use_kernel:
+        return ref.onehot_dispatch(eff, slot, values, num_pe, capacity)
+    return _moe.onehot_dispatch(eff, slot, values, num_pe, capacity,
+                                interpret=_interpret(), **blocks)
+
+
+def onehot_combine(eff, slot, packed, gate=None, *, use_kernel: bool = True,
+                   **blocks):
+    if not use_kernel:
+        return ref.onehot_combine(eff, slot, packed, gate)
+    return _moe.onehot_combine(eff, slot, packed, gate,
+                               interpret=_interpret(), **blocks)
+
+
+def occurrence_rank(eff: jax.Array, num_pe: int) -> jax.Array:
+    """Within-stream slot of each tuple for its effective PE (the mapper's
+    round-robin position): rank[t] = #{s < t : eff[s] == eff[t]}.
+
+    O(T * num_pe) one-hot prefix sum; memory-bound, XLA fuses it -- kept as
+    jnp (a kernel would not beat the fused VPU code).
+    """
+    onehot = (eff[:, None] == jnp.arange(num_pe, dtype=eff.dtype)[None, :])
+    incl = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+    return jnp.take_along_axis(incl - onehot.astype(jnp.int32),
+                               jnp.maximum(eff[:, None], 0).astype(jnp.int32),
+                               axis=1)[:, 0]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = True, **blocks):
+    from repro.kernels import flash_attention as _fa
+    if not use_kernel:
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interpret(), **blocks)

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: tests sweep shapes/dtypes and assert the
+Pallas kernels (interpret=True on CPU) match these bit-exactly for integer
+data and allclose for floats.  They are also the code path used on backends
+without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_accumulate(flat_idx: jax.Array, value: jax.Array, num_bins: int,
+                       combine: str = "add") -> jax.Array:
+    """Scatter-accumulate ``value`` into ``num_bins`` cells at ``flat_idx``.
+
+    Out-of-range indices (e.g. -1 padding) are dropped.  combine: add|max.
+    This is the PE private-buffer update (paper Listing 1 line 4) on a
+    flattened [num_pe * local] buffer.
+    """
+    valid = (flat_idx >= 0) & (flat_idx < num_bins)
+    idx = jnp.where(valid, flat_idx, 0)
+    out = jnp.zeros((num_bins,), value.dtype)
+    if combine == "add":
+        v = jnp.where(valid, value, 0)
+        return out.at[idx].add(v)
+    neutral = (jnp.iinfo(value.dtype).min
+               if jnp.issubdtype(value.dtype, jnp.integer) else -jnp.inf)
+    v = jnp.where(valid, value, neutral)
+    return out.at[idx].max(v)
+
+
+def cms_update(eff: jax.Array, cols: jax.Array, value: jax.Array,
+               num_pe: int, depth: int, width: int) -> jax.Array:
+    """Count-min sketch update: [num_pe, depth, width] sums.
+
+    eff: [T] effective PE id; cols: [T, depth] per-row columns; value: [T].
+    Invalid eff (<0, padding) is dropped.
+    """
+    valid = (eff >= 0) & (eff < num_pe)
+    v = jnp.where(valid, value, 0)
+    e = jnp.where(valid, eff, 0)
+    out = jnp.zeros((num_pe, depth, width), value.dtype)
+    for d in range(depth):
+        out = out.at[e, d, cols[:, d]].add(v)
+    return out
+
+
+def onehot_dispatch(eff: jax.Array, slot: jax.Array, values: jax.Array,
+                    num_pe: int, capacity: int) -> jax.Array:
+    """Pack tuple payloads into per-PE capacity slots (the combiner/decoder/
+    filter network, = the MoE dispatch einsum).
+
+    eff: [T] destination PE; slot: [T] within-PE slot (occurrence rank);
+    values: [T, dim].  Tuples with slot >= capacity or eff < 0 are dropped
+    (FPGA channel overflow semantics).  Returns [num_pe, capacity, dim].
+    """
+    keep = (eff >= 0) & (eff < num_pe) & (slot >= 0) & (slot < capacity)
+    pc = jnp.where(keep, eff * capacity + slot, num_pe * capacity)
+    onehot = jax.nn.one_hot(pc, num_pe * capacity, dtype=values.dtype)
+    packed = jnp.einsum("tb,td->bd", onehot, values)
+    return packed.reshape(num_pe, capacity, values.shape[-1])
+
+
+def onehot_combine(eff: jax.Array, slot: jax.Array, packed: jax.Array,
+                   gate: jax.Array | None = None) -> jax.Array:
+    """Unpack per-PE slots back to the tuple order (MoE combine einsum).
+
+    packed: [num_pe, capacity, dim] -> [T, dim]; dropped tuples get zeros.
+    gate: optional [T] per-tuple scale (MoE router weight).
+    """
+    num_pe, capacity, dim = packed.shape
+    keep = (eff >= 0) & (eff < num_pe) & (slot >= 0) & (slot < capacity)
+    pc = jnp.where(keep, eff * capacity + slot, num_pe * capacity)
+    onehot = jax.nn.one_hot(pc, num_pe * capacity, dtype=packed.dtype)
+    out = jnp.einsum("tb,bd->td", onehot, packed.reshape(-1, dim))
+    if gate is not None:
+        out = out * gate[:, None].astype(out.dtype)
+    return out
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """Dense-softmax attention oracle for the flash kernel.
+
+    q [B,Sq,H,dh], k/v [B,Sk,KV,dh] -> [B,Sq,H,dh]; GQA via head repeat.
+    """
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * dh ** -0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    keep = jnp.ones((sq, sk), bool)
+    if causal:
+        keep &= kp <= qp
+    if window:
+        keep &= kp > qp - window
+    s = jnp.where(keep[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

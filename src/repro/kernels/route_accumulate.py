@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: scatter-accumulate via one-hot MXU matmul.
+
+The PE private-buffer update (paper Listing 1 / §IV-C1) is a scatter: BRAM
+ports absorb one tuple per cycle.  TPUs have no BRAM ports -- random scatter
+into VMEM is serialized and slow.  The TPU-native adaptation (DESIGN.md §2)
+converts the scatter into a dense one-hot contraction so a whole tile of
+tuples is absorbed per grid step on the MXU/VPU:
+
+    out[b] (+|max)= reduce_t value[t] * [flat_idx[t] == b]
+
+Grid: (bins // BB, T // TT); the tuple axis is the *last* (sequential) grid
+dimension so the output block stays resident in VMEM across the reduction
+(the standard Pallas revisiting-reduction pattern).  BB is a lane-aligned
+multiple of 128; TT is the tuple tile.  Out-of-range indices (padding, -1)
+match no bin and are dropped -- exactly the ref.py semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, val_ref, out_ref, *, combine: str, block_bins: int):
+    j = pl.program_id(1)
+    dtype = out_ref.dtype
+    if combine == "add":
+        neutral = jnp.zeros((), dtype)
+    else:
+        neutral = (jnp.iinfo(dtype).min
+                   if jnp.issubdtype(dtype, jnp.integer)
+                   else jnp.array(-jnp.inf, dtype))
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, neutral, dtype)
+
+    idx = idx_ref[...]            # [TT] int32, already offset to this block
+    val = val_ref[...]            # [TT]
+    base = pl.program_id(0) * block_bins
+    local = idx - base
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], block_bins), 1)
+    onehot = local[:, None] == cols                       # [TT, BB]
+    if combine == "add":
+        contrib = jnp.dot(val[None, :].astype(dtype), onehot.astype(dtype),
+                          preferred_element_type=dtype)[0]
+        out_ref[...] = out_ref[...] + contrib
+    else:
+        tile = jnp.where(onehot, val[:, None].astype(dtype), neutral)
+        out_ref[...] = jnp.maximum(out_ref[...], jnp.max(tile, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "combine",
+                                             "block_bins", "block_t",
+                                             "interpret"))
+def route_accumulate(flat_idx: jax.Array, value: jax.Array, num_bins: int,
+                     combine: str = "add", *, block_bins: int = 512,
+                     block_t: int = 1024, interpret: bool = True) -> jax.Array:
+    """Scatter-accumulate with padding to block multiples.  See module doc.
+
+    flat_idx: [T] int32 (invalid/padding entries < 0 or >= num_bins).
+    value:    [T] int32/float32.
+    Returns [num_bins] accumulated buffer (add: zeros init; max: neutral
+    replaced by 0 to match ref.py's zeros-init .at[].max semantics).
+    """
+    t = flat_idx.shape[0]
+    bb = min(block_bins, _round_up(num_bins, 128))
+    tt = min(block_t, _round_up(t, 8))
+    nb = _round_up(num_bins, bb)
+    tp = _round_up(t, tt)
+    idx = jnp.full((tp,), -1, jnp.int32).at[:t].set(flat_idx.astype(jnp.int32))
+    val = jnp.zeros((tp,), value.dtype).at[:t].set(value)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, combine=combine, block_bins=bb),
+        grid=(nb // bb, tp // tt),
+        in_specs=[
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), value.dtype),
+        interpret=interpret,
+    )(idx, val)
+    out = out[:num_bins]
+    if combine == "max":
+        # ref semantics: zeros-initialized buffer -> result is max(0, values)
+        out = jnp.maximum(out, jnp.zeros((), value.dtype))
+    return out
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,202 @@
+"""Compiled-artifact analysis: cost, memory, and collective extraction.
+
+The dry-run's "profile" is the AOT artifact, not a wall-clock trace
+(CPU-only container; TPU v5e is the target).  Three roofline terms per
+(arch x shape x mesh) cell:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` reports the PARTITIONED (per-device) module, so its
+flops/bytes are per-chip -- we multiply by chip count to get the global
+numerators (and sanity-check against MODEL_FLOPS = 6*N*D).  Collective
+bytes are not in cost_analysis: we parse the optimized HLO text, classify
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, read its result shape + replica group size, and apply
+the standard ring-algorithm byte counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(dtype: str, dims: str) -> Optional[int]:
+    if dtype not in _DTYPE_BYTES:
+        return None
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> int:
+    """Sum of result-side shape tokens (before the op name).  For tuple
+    results of -start ops, take the largest element (the in-flight buffer),
+    not the sum, to avoid double counting the aliased input."""
+    lhs = line.split(" = ", 1)
+    sizes = []
+    target = lhs[1] if len(lhs) == 2 else line
+    # result shapes come before the first '(' that opens the operand list
+    head = target.split("(", 1)[0]
+    for m in _SHAPE_RE.finditer(head):
+        b = _shape_bytes(m.group(1), m.group(2))
+        if b:
+            sizes.append(b)
+    return max(sizes) if sizes else 0
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return world
+
+
+def _moved_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Ring-algorithm bytes crossing a chip boundary per chip."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * result_bytes           # result is full buffer
+    if kind == "reduce-scatter":
+        return (g - 1) * result_bytes               # result is 1/g of input
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return (g - 1) / g * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([^\s,)]+)")
+
+
+def parse_collectives(hlo_text: str, world: int,
+                      body_trip: int = 1) -> Dict[str, Any]:
+    """Classify every collective in optimized HLO text -> per-kind stats.
+
+    ``body_trip``: trip count applied to collectives that live inside a
+    `while` body computation.  HloCostAnalysis-style text shows a scanned
+    layer stack as ONE while body, so a collective there executes
+    num_periods times per step -- the parser attributes each op to its
+    computation and multiplies accordingly.  (Nested while bodies get the
+    same single multiplier; our inner seq-chunk scans carry no
+    collectives -- they are chip-local compute.)
+    """
+    body_names = set(m.group(1) for m in _WHILE_BODY_RE.finditer(hlo_text))
+    stats: Dict[str, Dict[str, float]] = {}
+    total = 0.0
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEAD_RE.match(line)
+            if m:
+                current_comp = m.group(1)
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for kind in COLLECTIVE_KINDS:
+            # match `kind(`, `kind-start(` but not `-done(` (aliases start)
+            if re.search(rf"\b{kind}(-start)?\(", s):
+                rb = _result_bytes(s)
+                g = _group_size(s, world)
+                mult = body_trip if current_comp in body_names else 1
+                mv = _moved_bytes(kind, rb, g) * mult
+                k = stats.setdefault(kind, {"count": 0, "bytes_moved": 0.0,
+                                            "result_bytes": 0.0,
+                                            "in_scan": 0})
+                k["count"] += 1
+                k["in_scan"] += int(mult > 1)
+                k["bytes_moved"] += mv
+                k["result_bytes"] += rb
+                total += mv
+                break
+    return {"per_kind": stats, "bytes_moved_total": total,
+            "body_trip": body_trip}
+
+
+# ------------------------------------------------------------------ roofline
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float, hw) -> RooflineTerms:
+    """cost_analysis is per-device, so `global / chips == per-device` and
+    the three terms reduce to per-device quantities over per-chip rates."""
+    return RooflineTerms(
+        compute_s=per_device_flops / hw.peak_flops,
+        memory_s=per_device_bytes / hw.hbm_bw,
+        collective_s=per_device_coll_bytes / hw.ici_bw,
+    )
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = dict(ca or {})
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def extract_memory(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["peak_bytes_per_device_est"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out

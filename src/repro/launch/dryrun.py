@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+#   init, and the production meshes below need 512 placeholder host devices.
+#   (Set here ONLY -- tests/benches see the real 1-CPU host.)
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell and each production mesh,
+``jax.jit(step).lower(**input_specs).compile()`` must succeed; we record
+memory_analysis / cost_analysis / collective schedule per cell into a JSON
+the roofline table (benchmarks/roofline.py, EXPERIMENTS.md) is built from.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun
+
+Incremental: existing JSONs are skipped unless --force.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get
+from repro.configs.base import SHAPES
+from repro.launch import analysis as AN
+from repro.launch import costmodel as CM
+from repro.launch.dryrun_rules import cell_skip_reason
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.models import zoo
+from repro.optim import make_optimizer, warmup_cosine
+from repro.sharding import policies as SH
+from repro.train import loop as TL
+from repro.train import state as TS
+
+
+def _place_moe_abstract(cfg, params_specs, pspec):
+    """Abstract (ShapeDtypeStruct) version of the Ditto slot-weight
+    placement for every MoE ffn in the stacked blocks tree + the matching
+    pspec surgery (no allocation; placement itself is a per-plan serve-
+    side pass, moe.place_slot_weights)."""
+    from repro.models import moe as MOE
+
+    moe_keys = [f"{j}.ffn" for j, fk in enumerate(cfg.ffn_pattern)
+                if fk == "moe"]
+    if not moe_keys:
+        return params_specs, pspec
+
+    assignment = jnp.zeros((cfg.ditto_secondary,), jnp.int32)
+
+    def place_blocks(blocks):
+        out = dict(blocks)
+        for k in moe_keys:
+            def place_one(f):
+                p = MOE.place_slot_weights(f, assignment, cfg.num_experts,
+                                           dtype=cfg.cdtype)
+                p.pop("slot_assignment")   # period-independent, added below
+                return p
+            out[k] = jax.vmap(place_one)(dict(blocks[k]))
+            # leading periods axis so the layer scan slices it like any
+            # other per-period leaf ([P, X] int32, replicated content)
+            out[k]["slot_assignment"] = jnp.broadcast_to(
+                assignment, (cfg.num_periods, cfg.ditto_secondary))
+        return out
+
+    new_specs = dict(params_specs)
+    new_specs["blocks"] = jax.eval_shape(place_blocks,
+                                         params_specs["blocks"])
+    from jax.sharding import PartitionSpec as P
+    isp = lambda x: isinstance(x, P)
+    strip = lambda tr: jax.tree.map(lambda p: P(*tuple(p)[1:]), tr,
+                                    is_leaf=isp)
+    readd = lambda tr: jax.tree.map(lambda p: P(None, *tuple(p)), tr,
+                                    is_leaf=isp)
+    new_pspec = dict(pspec)
+    blocks_pspec = dict(pspec["blocks"])
+    for k in moe_keys:
+        placed = MOE.slot_weights_pspec(strip(dict(blocks_pspec[k])))
+        placed.pop("slot_assignment")
+        placed = readd(placed)
+        placed["slot_assignment"] = P(None, None)   # [periods, X]
+        blocks_pspec[k] = placed
+    new_pspec["blocks"] = blocks_pspec
+    return new_specs, new_pspec
+
+
+def _bf16_params_specs(model):
+    """Serving stores params in compute dtype (bf16 checkpoints)."""
+    shapes = jax.eval_shape(model.init_params,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    cd = model.cfg.cdtype
+
+    def cast(s):
+        dt = cd if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree.map(cast, shapes)
+
+
+TP_ONLY_HBM_BUDGET = 6e9   # bf16 param bytes per device to allow replication
+
+
+def build_cell(cfg, shape_name: str, mesh, opt: bool = False):
+    """-> (step_fn, args tuple of ShapeDtypeStructs, in_shardings,
+    out_shardings, donate).  opt=True applies the beyond-paper serve-side
+    sharding (TP-only decode params when they fit; see policies.tp_only)."""
+    spec = SHAPES[shape_name]
+    kind = spec["kind"]
+    model = zoo.build(cfg)
+    batch_specs = zoo.input_specs(cfg, shape_name, model)
+    batch_sh = SH.named_sharding_tree(zoo.batch_pspec(cfg, shape_name, model),
+                                      mesh, shapes=batch_specs)
+
+    if kind == "train":
+        opt_ = make_optimizer(cfg.optimizer,
+                              warmup_cosine(cfg.max_lr, 100, 10000))
+        step = TL.make_train_step(model, opt_)
+        state_specs = TS.abstract_train_state(model, opt_)
+        state_sh = SH.named_sharding_tree(TS.train_state_pspec(model, opt_),
+                                          mesh, params=True,
+                                          shapes=state_specs)
+        return (step, (state_specs, batch_specs), (state_sh, batch_sh),
+                (state_sh, None), (0,))
+
+    params_specs = _bf16_params_specs(model)
+    pspec = model.params_pspec()
+    serve_sharding = "fsdp"
+    if opt and kind == "decode":
+        tp_bytes = 2 * zoo.param_count(cfg) / mesh.shape["model"]
+        if tp_bytes < TP_ONLY_HBM_BUDGET:
+            pspec = SH.tp_only(pspec)
+            serve_sharding = "tp-replicated"
+        if cfg.num_experts and cfg.ditto_secondary:
+            # iter-5: Ditto slot-weight placement at plan time -- the
+            # decode step receives pre-placed per-slot expert weights
+            params_specs, pspec = _place_moe_abstract(cfg, params_specs,
+                                                      pspec)
+            serve_sharding += "+moe-placed"
+    params_sh = SH.named_sharding_tree(pspec, mesh,
+                                       params=(serve_sharding == "fsdp"),
+                                       shapes=params_specs)
+    build_cell.last_serve_sharding = serve_sharding
+    if kind == "prefill":
+        return (model.prefill_fn, (params_specs, batch_specs),
+                (params_sh, batch_sh), None, ())
+    # decode: donate the cache (in-place update)
+    return (model.decode_fn, (params_specs, batch_specs),
+            (params_sh, batch_sh), (None, batch_sh["cache"]), (1,))
+
+
+def _compile_cell(cfg, shape_name: str, mesh, opt: bool = False):
+    step, args, in_sh, out_sh, donate = build_cell(cfg, shape_name, mesh,
+                                                   opt=opt)
+    jit_kw = dict(in_shardings=in_sh, donate_argnums=donate)
+    if out_sh is not None:
+        jit_kw["out_shardings"] = out_sh
+    # set_mesh (not `with mesh:`): the abstract mesh must be visible at
+    # trace time for the activation/logits anchors inside the models --
+    # under the legacy context manager get_abstract_mesh() is empty and
+    # the anchors silently no-op (measured: identical collective bytes).
+    jax.set_mesh(mesh)
+    lowered = jax.jit(step, **jit_kw).lower(*args)
+    return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt: bool = False) -> dict:
+    cfg = get(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "kind": SHAPES[shape_name]["kind"]}
+    if opt:
+        # the beyond-paper optimization bundle (EXPERIMENTS.md §Perf):
+        # padded-vocab TP unembedding + TP-only decode params (applied in
+        # build_cell when they fit).  moe_impl='sort' was measured and
+        # REVERTED for the distributed setting (§Perf iteration 4): the
+        # scatter packing defeats GSPMD; it remains a config knob for
+        # single-chip use.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, vocab_pad_to=16)
+        rec["optimizations"] = ["vocab_pad_to=16",
+                                "serve_tp_only(when fits)"]
+    reason = cell_skip_reason(cfg, shape_name)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape_name, mesh, opt)
+    t_compile = time.time() - t0
+    if opt:
+        rec["serve_sharding"] = getattr(build_cell, "last_serve_sharding",
+                                        None)
+
+    # Compiled-artifact numbers.  NOTE (EXPERIMENTS.md §Perf): XLA's
+    # HloCostAnalysis counts a while (lax.scan) body ONCE, not x trips --
+    # verified with a controlled scanned-matmul program -- and every model
+    # here scans its layer stack and its attention/SSD seq chunks, so the
+    # raw flops/bytes undercount badly.  FLOP/byte numerators therefore
+    # come from the analytic model (launch/costmodel.py, exact matmul
+    # counts); the compiled artifact supplies the collective schedule
+    # (with while-body attribution x num_periods) and memory_analysis.
+    raw_cost = AN.extract_cost(compiled)
+    memory = AN.extract_memory(compiled)
+    coll = AN.parse_collectives(compiled.as_text(), chips,
+                                body_trip=cfg.num_periods)
+
+    flops = CM.cell_flops(cfg, shape_name)
+    hbytes = CM.cell_bytes(cfg, shape_name)
+    terms = AN.roofline_terms(flops["total"] / chips,
+                              hbytes["total"] / chips,
+                              coll["bytes_moved_total"], V5E)
+    mf = zoo.model_flops(cfg, shape_name)
+    rec.update(
+        status="ok", chips=chips, compile_s=round(t_compile, 2),
+        cost_source="analytic+hlo-collectives",
+        cost={"flops_global": flops["total"],
+              "flops_forward_global": flops["forward"],
+              "bytes_global": hbytes["total"],
+              "hlo_raw_flops_per_dev": raw_cost["flops"],
+              "hlo_raw_bytes_per_dev": raw_cost["bytes_accessed"]},
+        memory=memory, collectives=coll,
+        model_flops=mf,
+        useful_flops_ratio=mf / flops["total"] if flops["total"] else None,
+        roofline={"compute_s": terms.compute_s, "memory_s": terms.memory_s,
+                  "collective_s": terms.collective_s,
+                  "dominant": terms.dominant, "bound_s": terms.bound_s},
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the beyond-paper optimization bundle")
+    ap.add_argument("--print-hlo", action="store_true",
+                    help="dump optimized HLO next to the JSON")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = "experiments/dryrun_opt" if args.opt \
+            else "experiments/dryrun"
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_root = Path(args.out)
+    failures = 0
+    for multi in meshes:
+        sub = out_root / ("multi" if multi else "single")
+        sub.mkdir(parents=True, exist_ok=True)
+        for arch in archs:
+            for shape_name in shapes:
+                path = sub / f"{arch}__{shape_name}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip existing] {path}")
+                    continue
+                tag = f"{arch} x {shape_name} x {'multi' if multi else 'single'}"
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi, opt=args.opt)
+                except Exception as e:  # a failure here is a bug in our system
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+                path.write_text(json.dumps(rec, indent=2, default=float))
+                if rec.get("status") == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"dominant={r['dominant']} bound={r['bound_s']:.4f}s "
+                          f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}",
+                          flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Cell applicability rules shared by dryrun.py, tests and benchmarks --
+importable WITHOUT the dry-run's 512-device XLA_FLAGS side effect."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES
+
+
+def cell_skip_reason(cfg, shape_name: str):
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is full-attention (DESIGN.md §5)")
+    return None

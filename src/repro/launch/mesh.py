@@ -1,0 +1,37 @@
+"""Production meshes + TPU v5e hardware constants (the roofline target).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state -- tests see 1 CPU
+device; only launch/dryrun.py requests 512 host devices via XLA_FLAGS
+before any jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (CPU) devices the host has -- used by
+    integration tests and the quickstart examples."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """Per-chip roofline constants (TPU v5e)."""
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: float = 16e9          # capacity
+
+
+V5E = Hardware()

@@ -1,0 +1,266 @@
+"""Attention: GQA + RoPE + optional sliding window + logit soft-capping,
+with a memory-bounded chunked (flash-style online-softmax) path for long
+sequences, a KV-cache decode path, and cross-attention for the enc-dec arch.
+
+Layout conventions: activations [B, S, D]; heads sharded over 'model'
+(q/k/v/o projections are TP-sharded on the head axis); batch over
+('pod','data').  The chunked path is pure XLA (scan over KV blocks with
+running max/sum), so it lowers on any backend -- a Pallas flash kernel would
+be TPU-only and the dry-run must compile on the CPU host mesh.  Score
+materialization is bounded to [B, H, q_blk, kv_blk].
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def attn_params(key, d_model, num_heads, num_kv, head_dim, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": L.truncnorm(kq, (d_model, num_heads, head_dim), s, dtype),
+        "wk": L.truncnorm(kk, (d_model, num_kv, head_dim), s, dtype),
+        "wv": L.truncnorm(kv, (d_model, num_kv, head_dim), s, dtype),
+        "wo": L.truncnorm(ko, (num_heads, head_dim, d_model),
+                          (num_heads * head_dim) ** -0.5, dtype),
+    }
+
+
+def attn_pspec():
+    return {"wq": P("data", "model", None), "wk": P("data", "model", None),
+            "wv": P("data", "model", None), "wo": P("model", None, "data")}
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, max_len, num_kv, head_dim]
+    v: jax.Array  # [B, max_len, num_kv, head_dim]
+
+
+def init_kv_cache(batch, max_len, num_kv, head_dim, dtype):
+    z = jnp.zeros((batch, max_len, num_kv, head_dim), dtype)
+    return KVCache(k=z, v=z)
+
+
+def kv_cache_pspec():
+    # seq over 'model': kv-head counts (4/8) never divide a 16-way TP axis,
+    # but decode caches are the big decode-side buffers -- sharding the
+    # sequence axis keeps them distributed and the one-shot decode
+    # attention (sdpa_decode) is einsum-only over seq, so GSPMD partial-
+    # reduces (small [B,H] stat all-reduces) instead of gathering the cache.
+    return KVCache(k=P(("pod", "data"), "model", None, None),
+                   v=P(("pod", "data"), "model", None, None))
+
+
+def _scores_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """[Q, K] bool keep-mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _sdpa_block(q, k, v, mask, scale, softcap_val):
+    """One (q-block, kv-block) tile: returns (numerator [B,H,Q,dh],
+    row max [B,H,Q], row sum [B,H,Q]) for online-softmax merging."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = L.softcap(s, softcap_val)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    num = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v.dtype), v)
+    return num, m, p.sum(axis=-1)
+
+
+def _merge(acc, new):
+    """Merge two online-softmax partials."""
+    num_a, m_a, den_a = acc
+    num_b, m_b, den_b = new
+    m = jnp.maximum(m_a, m_b)
+    ca = jnp.exp(m_a - m)[..., None].astype(num_a.dtype)
+    cb = jnp.exp(m_b - m)[..., None].astype(num_b.dtype)
+    return (num_a * ca + num_b * cb, m,
+            den_a * jnp.exp(m_a - m) + den_b * jnp.exp(m_b - m))
+
+
+def _repeat_kv(k, num_heads):
+    """GQA: repeat kv heads to match q heads ([B,S,Hkv,dh] -> [B,S,H,dh])."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // hkv, axis=2)
+
+
+def sdpa_chunked(q, k, v, *, q_pos, k_pos, causal=True, window=None,
+                 softcap_val=0.0, q_chunk=1024, kv_chunk=1024):
+    """Online-softmax attention: q [B,Sq,H,dh], k/v [B,Sk,Hkv,dh] ->
+    [B,Sq,H,dh].  Memory: one [B,H,q_chunk,kv_chunk] score tile."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # pad to multiples
+    sq_p, sk_p = -(-sq // q_chunk) * q_chunk, -(-sk // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, sq_p - sq), constant_values=-1)
+    kpos = jnp.pad(k_pos, (0, sk_p - sk), constant_values=2**30)
+
+    nq, nk = sq_p // q_chunk, sk_p // kv_chunk
+    hkv = k.shape[2]
+    qb = qp.reshape(b, nq, q_chunk, h, dh)
+    kb = kp.reshape(b, nk, kv_chunk, hkv, dh)
+    vb = vp.reshape(b, nk, kv_chunk, hkv, dh)
+    qposb = qpos.reshape(nq, q_chunk)
+    kposb = kpos.reshape(nk, kv_chunk)
+
+    def q_block(qi):
+        qq, qqpos = qb[:, qi], qposb[qi]
+
+        def kv_step(acc, kv_i):
+            # GQA repeat on the chunk only -- never materialize a
+            # head-repeated copy of the full KV cache
+            kk = _repeat_kv(kb[:, kv_i], h)
+            vv = _repeat_kv(vb[:, kv_i], h)
+            mask = _scores_mask(qqpos, kposb[kv_i], causal, window)
+            new = _sdpa_block(qq, kk, vv, mask, scale, softcap_val)
+            return _merge(acc, new), None
+
+        acc0 = (jnp.zeros((b, h, q_chunk, dh), v.dtype),
+                jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32))
+        (num, _, den), _ = jax.lax.scan(kv_step, acc0, jnp.arange(nk))
+        out = num / jnp.maximum(den, 1e-20)[..., None].astype(num.dtype)
+        return out.transpose(0, 2, 1, 3)  # [B, q_chunk, H, dh]
+
+    out = jax.lax.map(q_block, jnp.arange(nq))            # [nq, B, qc, H, dh]
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, dh)
+    return out[:, :sq]
+
+
+def sdpa_decode(q, k, v, *, q_pos, k_pos, window=None, softcap_val=0.0):
+    """One-shot single-token attention: q [B,1,H,dh], k/v [B,S,kv,dh] ->
+    [B,1,H,dh].  No kv-chunk scan and no head-repeat materialization: the
+    grouped einsum keeps S a plain contraction axis, so a seq-sharded cache
+    stays distributed (scores [B,kv,g,S] fp32 is the only S-sized temp).
+
+    q_pos [1]|[B] and k_pos [S]|[B,S]: per-slot positions supported (the
+    continuous-batching engine decodes mixed-progress slots)."""
+    b, _, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, kvh, h // kvh, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * dh ** -0.5
+    s = L.softcap(s, softcap_val)
+    kp = k_pos if k_pos.ndim == 2 else k_pos[None, :]     # [B|1, S]
+    qp = q_pos[:, None]                                   # [B|1, 1]
+    keep = kp <= qp
+    if window:
+        keep &= kp > qp - window
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(b, 1, h, dh)
+
+
+def attention(params, x, *, num_heads, num_kv, head_dim, positions,
+              rope_theta=10000.0, causal=True, window=None, softcap_val=0.0,
+              kv_override=None, q_chunk=1024, kv_chunk=1024,
+              compute_dtype=None, rope=True):
+    """Full-sequence attention (training / prefill).
+
+    x: [B, S, D]; positions: [S] absolute positions.
+    kv_override: (k_src [B, Sk, D], k_positions) for cross-attention.
+    """
+    cd = compute_dtype or x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+    src, k_pos = (x, positions) if kv_override is None else kv_override
+    src = src.astype(cd)
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(cd))
+    if rope:
+        cq, sq_ = L.rope_cos_sin(positions, head_dim, rope_theta, jnp.float32)
+        q = L.apply_rope(q, cq, sq_)
+        ck, sk_ = L.rope_cos_sin(k_pos, head_dim, rope_theta, jnp.float32)
+        k = L.apply_rope(k, ck, sk_)
+    out = sdpa_chunked(q, k, v, q_pos=positions, k_pos=k_pos, causal=causal,
+                       window=window, softcap_val=softcap_val,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+
+
+def attention_decode(params, x, cache: KVCache, cache_len, *, num_heads,
+                     num_kv, head_dim, rope_theta=10000.0, window=None,
+                     softcap_val=0.0, kv_chunk=2048, compute_dtype=None,
+                     rope=True, update_cache=True, ring=False):
+    """One-token decode: x [B, 1, D]; ``cache_len`` tokens decoded so far
+    (the new token's absolute position).
+
+    Returns (out [B,1,D], new cache).  Attends over the full cache with a
+    validity mask; KV-chunked so a 500k cache never materializes a huge
+    score tensor.  ring=True uses the cache as a ring buffer over absolute
+    positions (local/sliding-window layers keep only `window` slots -- the
+    paper's partial-range buffer in KV form).  update_cache=False reads
+    only (cross-attention)."""
+    cd = compute_dtype or x.dtype
+    b = x.shape[0]
+    max_len = cache.k.shape[1]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    vec = cache_len.ndim == 1          # per-slot positions ([B], engine)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+    pos = cache_len[:, None] if vec else jnp.full((1,), cache_len, jnp.int32)
+    if rope:
+        cq, sq_ = L.rope_cos_sin(pos, head_dim, rope_theta, jnp.float32)
+        # pos [B,1]|[1]: cos broadcasts over batch in the scalar case
+        cq = cq if vec else cq[None]
+        sq_ = sq_ if vec else sq_[None]
+        q = L.apply_rope(q, cq, sq_)
+    if update_cache:
+        k_new = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wk"].astype(cd))
+        v_new = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wv"].astype(cd))
+        if rope:
+            k_new = L.apply_rope(k_new, cq, sq_)
+        write = jnp.remainder(cache_len, max_len) if ring else cache_len
+        if vec:
+            rows = jnp.arange(b)
+            k_all = cache.k.at[rows, write].set(
+                k_new[:, 0].astype(cache.k.dtype))
+            v_all = cache.v.at[rows, write].set(
+                v_new[:, 0].astype(cache.v.dtype))
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k_new.astype(cache.k.dtype), (0, write, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v_new.astype(cache.v.dtype), (0, write, 0, 0))
+        cache = KVCache(k=k_all, v=v_all)
+        valid_len = cache_len + 1
+    else:
+        valid_len = cache_len
+    slots = jnp.arange(max_len, dtype=jnp.int32)
+    vl = valid_len[:, None] if vec else valid_len      # [B,1] | ()
+    if ring:
+        # slot i holds the largest absolute position p <= cache_len with
+        # p === i (mod max_len); negative p = never written
+        last = vl - 1
+        k_pos = last - jnp.remainder(last - slots, max_len)
+        k_pos = jnp.where(k_pos >= 0, k_pos, 2**30)
+    else:
+        k_pos = jnp.where(slots < vl, slots, 2**30)
+    q_pos = pos[:, 0] if vec else pos
+    out = sdpa_decode(q, cache.k.astype(cd), cache.v.astype(cd),
+                      q_pos=q_pos, k_pos=k_pos, window=window,
+                      softcap_val=softcap_val)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+    return y, cache

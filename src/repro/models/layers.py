@@ -1,0 +1,205 @@
+"""Shared neural-net layers (pure functional JAX; params are dict pytrees).
+
+Every ``*_params`` initializer has a ``*_pspec`` twin returning the same
+pytree of ``PartitionSpec``s -- the sharding policy lives next to the shape
+it shards (see sharding/policies.py for the axis conventions: 'model' = TP,
+'data' = FSDP parameter sharding, batch is ('pod','data')).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+
+def mesh_axes():
+    """Axis sizes of the current (abstract) mesh, {} outside a mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        return dict(mesh.shape) if mesh.axis_names else {}
+    except (AttributeError, RuntimeError, ValueError):
+        return {}
+
+
+def anchor(x, *entries):
+    """Mesh-aware with_sharding_constraint.  Entry vocabulary:
+    'batch' -> (pod, data) as available; 'model'/'data' -> kept if the
+    mesh has them AND the dim divides; None -> unsharded.  No-op outside
+    a mesh.  These anchors are load-bearing at scale: without them GSPMD
+    lets parameter (FSDP) shardings win einsum layouts and replicates
+    batch-sized tensors (EXPERIMENTS.md §Perf)."""
+    axes = mesh_axes()
+    if not axes:
+        return x
+    spec = []
+    for i, e in enumerate(entries):
+        if e == "batch":
+            bd = tuple(a for a in ("pod", "data") if a in axes)
+            size = 1
+            for a in bd:
+                size *= axes[a]
+            spec.append(bd if bd and x.shape[i] % size == 0 else None)
+        elif e in axes:
+            # intermediates may shard unevenly (GSPMD pads) -- e.g. 72
+            # expert slots over a 16-way model axis
+            spec.append(e)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def truncnorm(key, shape, scale, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype) * scale
+
+
+def dense_params(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": truncnorm(key, (d_in, d_out), scale, dtype)}
+
+
+def dense_pspec(in_axis, out_axis):
+    return {"w": P(in_axis, out_axis)}
+
+
+def dense(params, x, compute_dtype=None):
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    return x @ w
+
+
+def rmsnorm_params(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_pspec():
+    return {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def layernorm_params(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_pspec():
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def embed_params(key, vocab, d, dtype=jnp.float32):
+    return {"emb": truncnorm(key, (vocab, d), 1.0, dtype)}
+
+
+def embed_pspec():
+    # vocab over model (TP), feature over data (FSDP)
+    return {"emb": P("model", "data")}
+
+
+def embed_lookup(params, tokens, compute_dtype):
+    # gather is fine: XLA turns a sharded-vocab gather into a masked
+    # one-hot + all-reduce under GSPMD when beneficial
+    return params["emb"][tokens].astype(compute_dtype)
+
+
+def unembed(params, x, compute_dtype, vocab: int = 0):
+    """Tied unembedding: logits over the sharded vocab axis.
+
+    When the table is padded past `vocab` (vocab_pad_to perf knob -- rows
+    padded to a TP multiple so the vocab axis shards), the pad columns are
+    masked to -inf here so downstream softmax/argmax never see them."""
+    logits = x.astype(compute_dtype) @ params["emb"].T.astype(compute_dtype)
+    rows = params["emb"].shape[0]
+    if vocab and rows > vocab:
+        pad_mask = jnp.arange(rows) >= vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    return logits
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------- MLP (gated)
+def mlp_params(key, d, d_ff, dtype=jnp.float32, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_params(k1, d, d_ff, dtype),
+         "down": dense_params(k2, d_ff, d, dtype, scale=d_ff ** -0.5)}
+    if gated:
+        p["gate"] = dense_params(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp_pspec(gated=True):
+    p = {"up": dense_pspec("data", "model"),
+         "down": dense_pspec("model", "data")}
+    if gated:
+        p["gate"] = dense_pspec("data", "model")
+    return p
+
+
+def mlp(params, x, act="silu", compute_dtype=None):
+    h = dense(params["up"], x, compute_dtype)
+    if "gate" in params:
+        h = h * act_fn(act)(dense(params["gate"], x, compute_dtype))
+    else:
+        h = act_fn(act)(h)
+    return dense(params["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_cos_sin(positions, dim: int, theta: float, dtype=jnp.float32):
+    """positions [...]: returns cos/sin [..., dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, n, dim]; cos/sin [..., S, dim//2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1) \
+        .astype(x.dtype)
+
+
+# ---------------------------------------------------- cross-entropy (sharded)
+def softmax_xent(logits, targets, vocab: int):
+    """Mean next-token cross-entropy; stable in fp32; logits may be sharded
+    over the vocab axis (the log-sum-exp reduces over it)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD, state-space duality; arXiv:2405.21060) -- mamba2-780m and
+the Jamba hybrid's mamba layers.
+
+Chunked SSD forward: the sequence is split into chunks of length Q; within a
+chunk the dual (attention-like) quadratic form produces the intra-chunk
+output; chunk-boundary states are propagated by a `lax.scan` linear
+recurrence (per-head scalar decay).  Decode is the pure recurrence on a
+[B, H, P, N] state -- O(1) per token, which is why the 500k-decode cell runs
+on this family while full-attention archs are skipped (DESIGN.md §5).
+
+Layout: heads over 'model'; state dims replicated.  Single B/C group
+(ngroups=1, Mamba-2 default).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+CONV_K = 4  # depthwise causal conv kernel width (Mamba default)
+
+
+def mamba2_params(key, d_model, d_inner, num_heads, d_state,
+                  dtype=jnp.float32):
+    head_dim = d_inner // num_heads
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    conv_ch = d_inner + 2 * d_state
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": L.truncnorm(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + num_heads), s, dtype),
+        "conv_w": L.truncnorm(ks[1], (CONV_K, conv_ch), conv_ch ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((num_heads,), jnp.float32),
+        "d_skip": jnp.ones((num_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((num_heads,), jnp.float32),
+        "norm": L.rmsnorm_params(d_inner),
+        "out_proj": L.truncnorm(ks[3], (d_inner, d_model), d_inner ** -0.5, dtype),
+    }
+
+
+def mamba2_pspec():
+    return {"in_proj": P("data", "model"), "conv_w": P(None, "model"),
+            "conv_b": P("model"), "a_log": P("model"), "d_skip": P("model"),
+            "dt_bias": P("model"), "norm": L.rmsnorm_pspec(),
+            "out_proj": P("model", "data")}
+
+
+class MambaCache(NamedTuple):
+    state: jax.Array  # [B, H, P, N] SSM state
+    conv: jax.Array   # [B, CONV_K-1, d_inner + 2*d_state] conv tail
+
+
+def init_mamba_cache(batch, d_inner, num_heads, d_state, dtype):
+    head_dim = d_inner // num_heads
+    return MambaCache(
+        state=jnp.zeros((batch, num_heads, head_dim, d_state), dtype),
+        conv=jnp.zeros((batch, CONV_K - 1, d_inner + 2 * d_state), dtype))
+
+
+def mamba_cache_pspec():
+    return MambaCache(state=P(("pod", "data"), "model", None, None),
+                      conv=P(("pod", "data"), None, "model"))
+
+
+def _split_proj(proj, d_inner, d_state, num_heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    b = proj[..., 2 * d_inner:2 * d_inner + d_state]
+    c = proj[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = proj[..., -num_heads:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv over seq: u [B,S,C], w [K,C] -> [B,S,C]."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):  # K=4: unrolled shift-and-scale beats a conv op here
+        out = out + up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+    return out + bias[None, None, :]
+
+
+def mamba2_forward(params, xin, *, d_inner, num_heads, d_state, chunk=256,
+                   compute_dtype=None, initial_state=None):
+    """Full-sequence SSD. xin [B, S, D] -> [B, S, D] (+ final state)."""
+    cd = compute_dtype or xin.dtype
+    b, s, _ = xin.shape
+    hd = d_inner // num_heads
+    proj = jnp.einsum("bsd,de->bse", xin.astype(cd), params["in_proj"].astype(cd))
+    z, x, bb, cc, dt = _split_proj(proj, d_inner, d_state, num_heads)
+    xbc = jnp.concatenate([x, bb, cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(cd),
+                                   params["conv_b"].astype(cd)))
+    x, bb, cc = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + d_state],
+                 xbc[..., d_inner + d_state:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                     # [H]
+    da = dt * a[None, None, :]                                        # [B,S,H] (<=0)
+
+    # pad to chunk multiple
+    s_p = -(-s // chunk) * chunk
+    pad = s_p - s
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0))).reshape(b, -1, chunk, num_heads, hd)
+    bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0))).reshape(b, -1, chunk, d_state)
+    cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0))).reshape(b, -1, chunk, d_state)
+    dt_c = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))).reshape(b, -1, chunk, num_heads)
+    da_c = jnp.pad(da, ((0, 0), (0, pad), (0, 0))).reshape(b, -1, chunk, num_heads)
+
+    cum = jnp.cumsum(da_c, axis=2)                                    # [B,K,Q,H]
+    # intra-chunk dual form: L[i,j] = exp(cum_i - cum_j) * dt_j, i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]                # [B,K,Q,Q,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    lmat = lmat * dt_c[:, :, None, :, :]                              # [B,K,i,j,H]
+    cb = jnp.einsum("bkin,bkjn->bkij", cc, bb)                        # [B,K,Q,Q]
+    y_intra = jnp.einsum("bkij,bkijh,bkjhp->bkihp",
+                         cb.astype(jnp.float32), lmat,
+                         x.astype(jnp.float32))
+
+    # chunk states: S_k = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum) * dt_c            # [B,K,Q,H]
+    s_chunk = jnp.einsum("bkjh,bkjn,bkjhp->bkhnp",
+                         decay_to_end, bb.astype(jnp.float32),
+                         x.astype(jnp.float32))                       # [B,K,H,N,P]
+
+    # inter-chunk recurrence over K chunks (scan; per-head scalar decay)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # [B,K,H]
+
+    def step(carry, inp):
+        s_in = carry                                                  # [B,H,N,P]
+        dec, s_c = inp                                                # [B,H], [B,H,N,P]
+        s_out = s_in * dec[..., None, None] + s_c
+        return s_out, s_in                                            # emit state *entering* chunk
+
+    s0 = (initial_state.transpose(0, 1, 3, 2).astype(jnp.float32)
+          if initial_state is not None
+          else jnp.zeros((b, num_heads, d_state, hd), jnp.float32))
+    final_state, s_enter = jax.lax.scan(
+        step, s0,
+        (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    s_enter = s_enter.transpose(1, 0, 2, 3, 4)                        # [B,K,H,N,P]
+
+    y_inter = jnp.einsum("bkin,bkih,bkhnp->bkihp",
+                         cc.astype(jnp.float32), jnp.exp(cum), s_enter)
+
+    y = (y_intra + y_inter).reshape(b, s_p, num_heads, hd)[:, :s]
+    y = y + x.reshape(b, s_p, num_heads, hd)[:, :s] * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(cd)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cd))
+    final = final_state.transpose(0, 1, 3, 2).astype(cd)              # [B,H,P,N]
+    return out, final
+
+
+def mamba2_decode(params, xin, cache: MambaCache, *, d_inner, num_heads,
+                  d_state, compute_dtype=None):
+    """One-token recurrence. xin [B, 1, D] -> ([B, 1, D], new cache)."""
+    cd = compute_dtype or xin.dtype
+    b = xin.shape[0]
+    hd = d_inner // num_heads
+    proj = jnp.einsum("bsd,de->bse", xin.astype(cd), params["in_proj"].astype(cd))
+    z, x, bb, cc, dt = _split_proj(proj[:, 0], d_inner, d_state, num_heads)
+
+    # rolling depthwise conv on [x|B|C]
+    xbc = jnp.concatenate([x, bb, cc], axis=-1)                       # [B, C]
+    window = jnp.concatenate([cache.conv.astype(cd), xbc[:, None]], axis=1)
+    w = params["conv_w"].astype(cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(cd)
+    xbc = jax.nn.silu(conv_out)
+    x, bb, cc = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + d_state],
+                 xbc[..., d_inner + d_state:])
+    new_conv = window[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["a_log"])
+    dec = jnp.exp(dt * a[None, :])                                    # [B,H]
+    xh = x.reshape(b, num_heads, hd).astype(jnp.float32)
+    st = cache.state.astype(jnp.float32)
+    st = st * dec[..., None, None] + (dt[..., None, None]
+                                      * xh[..., None]
+                                      * bb[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", st, cc.astype(jnp.float32))
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b, d_inner).astype(cd)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(cd))
+    return out[:, None, :], MambaCache(state=st.astype(cache.state.dtype),
+                                       conv=new_conv.astype(cache.conv.dtype))

@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2) -- used by deepseek-v2-lite.
+
+Keys/values are compressed into a per-token latent c_kv (kv_lora_rank) plus
+a single shared RoPE key (qk_rope_dim); the decode cache stores ONLY
+(c_kv, k_rope) -- 576 floats/token vs 8192 for dense GQA.  Training expands
+K/V per head; decode uses the absorbed form (q absorbed through W_uk, output
+through W_uv) so attention runs directly over the latent cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.attention import sdpa_chunked
+
+
+def mla_params(key, d_model, num_heads, kv_lora, qk_nope, qk_rope, v_head,
+               dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    return {
+        "wq": L.truncnorm(ks[0], (d_model, num_heads, qk_nope + qk_rope), s, dtype),
+        "wdkv": L.truncnorm(ks[1], (d_model, kv_lora + qk_rope), s, dtype),
+        "kv_norm": L.rmsnorm_params(kv_lora),
+        "wuk": L.truncnorm(ks[2], (kv_lora, num_heads, qk_nope),
+                           kv_lora ** -0.5, dtype),
+        "wuv": L.truncnorm(ks[3], (kv_lora, num_heads, v_head),
+                           kv_lora ** -0.5, dtype),
+        "wo": L.truncnorm(ks[4], (num_heads, v_head, d_model),
+                          (num_heads * v_head) ** -0.5, dtype),
+    }
+
+
+def mla_pspec():
+    return {"wq": P("data", "model", None), "wdkv": P("data", None),
+            "kv_norm": L.rmsnorm_pspec(),
+            "wuk": P(None, "model", None), "wuv": P(None, "model", None),
+            "wo": P("model", None, "data")}
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # [B, max_len, kv_lora]
+    k_rope: jax.Array  # [B, max_len, qk_rope]
+
+
+def init_mla_cache(batch, max_len, kv_lora, qk_rope, dtype):
+    return MLACache(c_kv=jnp.zeros((batch, max_len, kv_lora), dtype),
+                    k_rope=jnp.zeros((batch, max_len, qk_rope), dtype))
+
+
+def mla_cache_pspec():
+    # seq over 'model' (same rationale as attention.kv_cache_pspec): the
+    # absorbed decode is einsum-only over the cache's seq axis.
+    return MLACache(c_kv=P(("pod", "data"), "model", None),
+                    k_rope=P(("pod", "data"), "model", None))
+
+
+def _project_latent(params, x, qk_rope, rope_theta, positions, cd):
+    """x -> (c_kv normalized [B,S,R], k_rope roped [B,S,rope])."""
+    dkv = jnp.einsum("bsd,dr->bsr", x.astype(cd), params["wdkv"].astype(cd))
+    c_kv, k_rope = dkv[..., :-qk_rope], dkv[..., -qk_rope:]
+    c_kv = L.rmsnorm(params["kv_norm"], c_kv)
+    ck, sk = L.rope_cos_sin(positions, qk_rope, rope_theta, jnp.float32)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], ck, sk)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(params, x, *, num_heads, qk_nope, qk_rope, v_head,
+                  positions, rope_theta=10000.0, q_chunk=1024, kv_chunk=1024,
+                  compute_dtype=None):
+    """Training/prefill path: expand per-head K/V from the latent."""
+    cd = compute_dtype or x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    cq, sq = L.rope_cos_sin(positions, qk_rope, rope_theta, jnp.float32)
+    q_rope = L.apply_rope(q_rope, cq, sq)
+
+    c_kv, k_rope = _project_latent(params, x, qk_rope, rope_theta, positions, cd)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wuk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wuv"].astype(cd))
+    # shared rope key broadcast to all heads; concat into one head_dim
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], qk_rope))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad V up to the qk head dim so one sdpa call serves both (scale uses
+    # the true qk dim; padding columns of V are sliced off after)
+    out = sdpa_chunked(qq, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                          (0, qq.shape[-1] - v_head))),
+                       q_pos=positions, k_pos=positions, causal=True,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk)[..., :v_head]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+
+
+def mla_decode(params, x, cache: MLACache, cache_len, *, num_heads, qk_nope,
+               qk_rope, v_head, rope_theta=10000.0, compute_dtype=None):
+    """Absorbed decode: attention runs over the latent cache directly.
+
+    score_h(t) = <W_uk_h^T q_nope_h, c_kv_t> + <q_rope, k_rope_t>
+    out_h      = W_uv_h^T (sum_t p_h(t) c_kv_t)
+    """
+    cd = compute_dtype or x.dtype
+    b = x.shape[0]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    vec = cache_len.ndim == 1          # per-slot positions ([B], engine)
+    pos = cache_len[:, None] if vec else jnp.full((1,), cache_len, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    cq, sq = L.rope_cos_sin(pos, qk_rope, rope_theta, jnp.float32)
+    cq_ = cq if vec else cq[None]
+    sq_ = sq if vec else sq[None]
+    q_rope = L.apply_rope(q_rope, cq_, sq_)[:, 0]        # [B, H, rope]
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["wuk"].astype(cd))
+
+    c_new, kr_new = _project_latent(params, x, qk_rope, rope_theta, pos, cd)
+    if vec:
+        rows = jnp.arange(b)
+        c_all = cache.c_kv.at[rows, cache_len].set(
+            c_new[:, 0].astype(cache.c_kv.dtype))
+        kr_all = cache.k_rope.at[rows, cache_len].set(
+            kr_new[:, 0].astype(cache.k_rope.dtype))
+    else:
+        c_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, cache_len, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, cache_len, 0))
+    new_cache = MLACache(c_kv=c_all, k_rope=kr_all)
+
+    max_len = c_all.shape[1]
+    scores = (jnp.einsum("bhr,btr->bht", q_abs, c_all.astype(cd))
+              + jnp.einsum("bhk,btk->bht", q_rope, kr_all.astype(cd)))
+    scores = scores.astype(jnp.float32) * (qk_nope + qk_rope) ** -0.5
+    t_idx = jnp.arange(max_len)
+    cl = cache_len[:, None, None] if vec else cache_len
+    scores = jnp.where(t_idx[None, None, :] <= cl, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p.astype(cd), c_all.astype(cd))
+    out = jnp.einsum("bhr,rhk->bhk", ctx, params["wuv"].astype(cd))
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(cd))
+    return y[:, None, :], new_cache

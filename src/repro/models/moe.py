@@ -1,0 +1,320 @@
+"""Ditto-MoE: mixture-of-experts with skew-oblivious expert replication.
+
+This is the paper's architecture applied to the MoE expert-imbalance problem
+(DESIGN.md §2, "beyond-paper integration"): experts are PriPEs owning token
+ranges; a skewed router distribution overloads hot experts exactly like Zipf
+keys overload a PriPE.  Per layer and per step:
+
+  1. profiler: GLOBAL histogram of designated expert ids across the batch
+     (the paper's N partial hists merged -- here per-group hists all-reduced
+     by GSPMD);
+  2. scheduler: greedy max-splitting assigns X secondary expert slots to the
+     hottest experts (core.scheduler.schedule_secpes, paper Fig. 5);
+  3. mapper: round-robin redirect of a hot expert's tokens across its slot
+     group via the shared mapping table (core.mapper, paper Fig. 4);
+  4. dispatch/combine: GShard-style grouped capacity-slot one-hot
+     contractions (kernels/moe_onehot semantics, group = batch row);
+     secondary slots compute with their primary expert's weights;
+  5. merger: the gate-weighted combine sums slot outputs per token -- the
+     "add" merge is implicit.
+
+The capacity win is the paper's BRAM win: without replication, per-expert
+capacity must be provisioned for the *hottest* expert (or tokens drop); with
+X slots the same drop rate is reached at ~uniform-load capacity.  Dropped
+tokens pass through the residual (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mapper as core_mapper
+from repro.core import scheduler as core_scheduler
+from repro.models import layers as L
+
+
+def moe_params(key, d_model, d_ff, num_experts, dtype=jnp.float32,
+               num_shared: int = 0, shared_d_ff: int = 0):
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    p = {
+        "router": L.truncnorm(ks[0], (d_model, num_experts), s, jnp.float32),
+        "up": L.truncnorm(ks[1], (num_experts, d_model, d_ff), s, dtype),
+        "gate": L.truncnorm(ks[2], (num_experts, d_model, d_ff), s, dtype),
+        "down": L.truncnorm(ks[3], (num_experts, d_ff, d_model),
+                            d_ff ** -0.5, dtype),
+    }
+    if num_shared:
+        p["shared"] = L.mlp_params(ks[4], d_model,
+                                   shared_d_ff or d_ff * num_shared, dtype)
+    return p
+
+
+def moe_pspec(num_shared: int = 0):
+    p = {"router": P(None, None),
+         "up": P("model", "data", None), "gate": P("model", "data", None),
+         "down": P("model", None, "data")}
+    if num_shared:
+        p["shared"] = L.mlp_pspec()
+    return p
+
+
+def _plan_from_hist(hist: jax.Array, num_experts: int, num_sec: int):
+    """Paper steps 1-2: histogram -> greedy plan -> mapping table."""
+    assignment = core_scheduler.schedule_secpes(hist, num_sec)      # [X]
+    plan = core_mapper.apply_schedule(
+        core_mapper.init_plan(num_experts, num_sec), assignment)
+    slot_expert = jnp.concatenate(
+        [jnp.arange(num_experts, dtype=jnp.int32),
+         jnp.where(assignment >= 0, assignment, 0).astype(jnp.int32)])
+    return plan, slot_expert
+
+
+def _dispatch_onehot(xg, eff, gates, num_slots, capacity, cd,
+                     anchored=True):
+    """GShard-style one-hot dispatch/combine (paper-faithful baseline).
+
+    Returns (packed [G,S_,C,D], combine_fn(out_slots)->[G,n,D], keep)."""
+    g, nk = eff.shape
+    n = xg.shape[1]
+    top_k = nk // n
+    onehot_eff = jax.nn.one_hot(eff, num_slots, dtype=jnp.int32)
+    incl = jnp.cumsum(onehot_eff, axis=1)
+    slot_rank = jnp.take_along_axis(incl - onehot_eff,
+                                    eff[..., None], axis=2)[..., 0]
+    keep = slot_rank < capacity
+    slot_oh = jax.nn.one_hot(jnp.where(keep, slot_rank, capacity),
+                             capacity, dtype=cd)
+    # GShard shardings: groups over the batch axes, expert slots over
+    # 'model' -- without the anchors XLA materializes and all-gathers the
+    # [G,nk,slots,C] dispatch tensor (measured 2.75 TB/step on deepseek
+    # train; EXPERIMENTS.md §Perf)
+    disp = onehot_eff.astype(cd)[..., None] * slot_oh[..., None, :]
+    if anchored:
+        disp = L.anchor(disp, "batch", None, "model", None)
+    xin = jnp.repeat(xg.astype(cd), top_k, axis=1)
+    packed = jnp.einsum("gtec,gtd->gecd", disp, xin)
+    if anchored:
+        packed = L.anchor(packed, "batch", "model", None, None)
+
+    def combine(out_slots):
+        comb = disp * gates[..., None, None].astype(cd)
+        y = jnp.einsum("gtec,gecd->gtd", comb, out_slots)
+        return y.reshape(g, n, top_k, -1).sum(axis=2)
+
+    return packed, combine, keep
+
+
+def _dispatch_sort(xg, eff, gates, num_slots, capacity, cd,
+                   anchored=True):
+    """Sort/gather dispatch (beyond-paper optimization, moe_impl='sort').
+
+    Same capacity semantics as the one-hot path -- occurrence rank within
+    (group, slot) in token order decides keeps -- but the [G,nk,S_,C]
+    one-hot contractions (2*2*k*S_*C*D FLOPs/token on MXU) become
+    gathers/scatters (bytes, not FLOPs).  Output is bit-comparable up to
+    float summation order."""
+    g, nk = eff.shape
+    n = xg.shape[1]
+    top_k = nk // n
+
+    # occurrence rank in token order (== one-hot path's slot_rank)
+    onehot_eff = jax.nn.one_hot(eff, num_slots, dtype=jnp.int32)
+    incl = jnp.cumsum(onehot_eff, axis=1)
+    slot_rank = jnp.take_along_axis(incl - onehot_eff,
+                                    eff[..., None], axis=2)[..., 0]
+    keep = slot_rank < capacity
+    # scatter tokens into their [slot, capacity] cell (dropped -> bin C)
+    flat_cell = jnp.where(keep, eff * capacity + slot_rank,
+                          num_slots * capacity)
+    xin = jnp.repeat(xg.astype(cd), top_k, axis=1)          # [G,nk,D]
+
+    def pack_group(cells, xi):
+        buf = jnp.zeros((num_slots * capacity + 1, xi.shape[-1]), cd)
+        return buf.at[cells].set(xi)[:-1]
+
+    packed = jax.vmap(pack_group)(flat_cell, xin) \
+        .reshape(g, num_slots, capacity, -1)
+    if anchored:
+        packed = L.anchor(packed, "batch", "model", None, None)
+
+    def combine(out_slots):
+        flat = out_slots.reshape(g, num_slots * capacity, -1)
+        picked = jnp.take_along_axis(
+            flat, jnp.minimum(flat_cell, num_slots * capacity - 1)[..., None],
+            axis=1)
+        picked = jnp.where(keep[..., None], picked, 0.0)
+        y = picked * gates[..., None].astype(cd)
+        return y.reshape(g, n, top_k, -1).sum(axis=2)
+
+    return packed, combine, keep
+
+
+def place_slot_weights(params, assignment: jax.Array, num_experts: int,
+                       *, pad_to: int = 16, dtype=None):
+    """Ditto slot-weight PLACEMENT (paper: SecPE re-enqueue by the CPU).
+
+    Expands the expert weights to per-slot copies ONCE per plan, so the
+    decode step stops paying the per-token slot-selection data movement
+    (EXPERIMENTS.md §Perf iteration 5: ~3.7 GB/token on deepseek).
+    Returns a params dict whose ffn entries carry `up_slots` [S_pad,d,f],
+    `gate_slots`, `down_slots` and `slot_assignment` (the plan the mapper
+    must follow); S_pad rounds slots up to a TP multiple so the placed
+    weights shard evenly over 'model' as jit ARGUMENTS.
+    """
+    num_sec = int(assignment.shape[0])
+    slots = num_experts + num_sec
+    s_pad = -(-slots // pad_to) * pad_to
+    slot_expert = jnp.concatenate([
+        jnp.arange(num_experts, dtype=jnp.int32),
+        jnp.where(assignment >= 0, assignment, 0).astype(jnp.int32),
+        jnp.zeros((s_pad - slots,), jnp.int32)])
+    dt = dtype or params["up"].dtype
+    out = {k: v for k, v in params.items()}
+    for name in ("up", "gate", "down"):
+        out[f"{name}_slots"] = jnp.take(params[name], slot_expert,
+                                        axis=0).astype(dt)
+        out.pop(name)
+    out["slot_assignment"] = assignment.astype(jnp.int32)
+    return out
+
+
+def slot_weights_pspec(base_pspec: dict) -> dict:
+    """pspec tree matching place_slot_weights output."""
+    out = {k: v for k, v in base_pspec.items()}
+    for name in ("up", "gate", "down"):
+        out[f"{name}_slots"] = out.pop(name)   # slots over 'model' likewise
+    out["slot_assignment"] = P(None)
+    return out
+
+
+def moe_apply(params, x, *, num_experts, top_k, capacity_factor: float = 1.25,
+              num_secondary: int = 0, act="silu", compute_dtype=None,
+              group_size: int = 512, capacity: Optional[int] = None,
+              router_noise_key: Optional[jax.Array] = None,
+              impl: str = "onehot"):
+    """x [B, S, D] -> (y [B, S, D], aux) with Ditto skew-oblivious dispatch.
+
+    Tokens are re-grouped into GShard-style dispatch groups of
+    ``group_size`` tokens (bounds the [G, n*k, slots, C] dispatch tensor);
+    capacity is PER SLOT PER GROUP, sized for the *uniform* load
+    (uniform_capacity) unless given.  num_secondary = X replica slots
+    (0 = plain MoE, the paper's '16P' baseline).  aux carries the
+    load-balance loss + Ditto diagnostics.
+    """
+    cd = compute_dtype or x.dtype
+    b, s, d = x.shape
+    t = b * s
+    n = min(group_size, t)
+    assert t % n == 0, f"tokens {t} not divisible by group {n}"
+    g = t // n
+    if capacity is None:
+        capacity = uniform_capacity(n, top_k, num_experts, capacity_factor)
+    nk = n * top_k                                                   # per group
+    placed = "up_slots" in params     # plan-time slot-weight placement
+    num_slots = (params["up_slots"].shape[0] if placed
+                 else num_experts + num_secondary)
+
+    logits = (x.reshape(-1, d).astype(jnp.float32) @ params["router"])
+    if router_noise_key is not None:
+        logits = logits + jax.random.gumbel(router_noise_key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)                          # [B*S, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)              # [B*S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    designated = expert_ids.reshape(g, nk).astype(jnp.int32)         # [G, n*k]
+    gates = gate_vals.reshape(g, nk)
+    xg = x.reshape(g, n, d)
+
+    # 1. global profiler histogram (per-group partials merged)
+    hist = jnp.sum(jax.nn.one_hot(designated, num_experts, dtype=jnp.int32),
+                   axis=(0, 1))
+    if placed and num_secondary > 0:
+        # serve path: the plan is FIXED at placement time (the paper's
+        # CPU re-enqueue) -- the mapper must follow params['slot_assignment']
+        plan = core_mapper.apply_schedule(
+            core_mapper.init_plan(num_experts, num_secondary),
+            params["slot_assignment"])
+        slot_expert = None
+
+        def redirect_group(dst):
+            rank, _ = core_mapper.occurrence_rank(
+                dst, num_experts, jnp.zeros((num_experts,), jnp.int32))
+            return core_mapper.redirect(plan, dst, rank)
+
+        eff = jax.vmap(redirect_group)(designated)                   # [G, n*k]
+    elif num_secondary > 0:
+        # 2.-3. shared plan; per-group round-robin redirect
+        plan, slot_expert = _plan_from_hist(hist, num_experts, num_secondary)
+
+        def redirect_group(dst):
+            rank, _ = core_mapper.occurrence_rank(
+                dst, num_experts, jnp.zeros((num_experts,), jnp.int32))
+            return core_mapper.redirect(plan, dst, rank)
+
+        eff = jax.vmap(redirect_group)(designated)                   # [G, n*k]
+    else:
+        eff = designated
+        slot_expert = jnp.arange(num_experts, dtype=jnp.int32)
+
+    # 4. capacity slotting within (group, slot): one-hot MXU contractions
+    # (paper-faithful GShard baseline) or sort/gather (beyond-paper perf)
+    # anchor only at training/prefill token counts: with a handful of
+    # decode tokens the anchors make XLA move the WEIGHTS to the (padded)
+    # slot sharding instead -- measured 13x decode regression
+    # (EXPERIMENTS.md §Perf iter-3 note)
+    anchored = t >= 256
+    dispatch = _dispatch_sort if impl == "sort" else _dispatch_onehot
+    packed, combine, keep = dispatch(xg, eff, gates, num_slots, capacity,
+                                     cd, anchored)
+
+    # expert compute; secondary slots gather their expert's weights via a
+    # one-hot matmul over the expert axis (MXU-friendly, shardable)
+    def _wa(w):
+        return L.anchor(w, "model", None, None) if anchored else w
+
+    if placed:
+        # no per-token slot selection: weights were placed per plan
+        w_up = params["up_slots"].astype(cd)
+        w_gate = params["gate_slots"].astype(cd)
+        w_down = params["down_slots"].astype(cd)
+    else:
+        sel = jax.nn.one_hot(slot_expert, num_experts, dtype=cd)     # [S_, E]
+        w_up = _wa(jnp.einsum("se,edf->sdf", sel, params["up"].astype(cd)))
+        w_gate = _wa(jnp.einsum("se,edf->sdf", sel,
+                                params["gate"].astype(cd)))
+        w_down = _wa(jnp.einsum("se,efd->sfd", sel,
+                                params["down"].astype(cd)))
+    h = jnp.einsum("gecd,edf->gecf", packed, w_up)
+    h = h * jax.nn.silu(jnp.einsum("gecd,edf->gecf", packed, w_gate))
+    out_slots = jnp.einsum("gecf,efd->gecd", h, w_down)              # [G,S_,C,D]
+    if anchored:
+        out_slots = L.anchor(out_slots, "batch", "model", None, None)
+
+    # 5. gate-weighted combine (implicit 'add' merge over slots and k)
+    onehot_eff = jax.nn.one_hot(eff, num_slots, dtype=jnp.int32)     # stats
+    y = combine(out_slots).reshape(b, s, d)
+
+    if "shared" in params:
+        y = y + L.mlp(params["shared"], x, act=act, compute_dtype=cd)
+
+    me = probs.mean(axis=0)
+    ce = hist.astype(jnp.float32) / jnp.maximum(hist.sum(), 1)
+    aux = {
+        "lb_loss": num_experts * jnp.sum(me * ce),
+        "drop_frac": 1.0 - keep.mean(),
+        "max_designated_load": hist.max(),
+        "max_slot_load": jnp.sum(onehot_eff, axis=(0, 1)).max(),
+    }
+    return y, aux
+
+
+def uniform_capacity(tokens_per_group: int, top_k: int, num_experts: int,
+                     capacity_factor: float) -> int:
+    """Per-slot-per-group capacity sized for the *uniform* load -- with
+    Ditto slots this is safe under skew; without them the hottest expert
+    drops tokens (the MoE face of paper Fig. 2b)."""
+    return max(4, int(capacity_factor * tokens_per_group * top_k / num_experts))

@@ -1,0 +1,355 @@
+"""Decoder-only LM assembly: scan over layer *periods* (the repeating
+mixer x FFN pattern from ArchConfig), so HLO size is independent of depth
+and heterogeneous archs (gemma2 local/global, jamba 1-attn:7-mamba + MoE
+interleave) scan cleanly -- the heterogeneity lives inside the period.
+
+Covers families: dense, moe, ssm, hybrid, vlm (stub patch frontend).
+Encoder-decoder (whisper) is in whisper.py and reuses the same period
+machinery for both stacks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+# ------------------------------------------------------------------ params
+
+def _mixer_params(cfg: ArchConfig, kind: str, key):
+    if kind in ("attn", "attn_local", "attn_nocausal"):
+        return A.attn_params(key, cfg.d_model, cfg.num_heads,
+                             cfg.num_kv_heads, cfg.head_dim, cfg.pdtype)
+    if kind == "mla":
+        return MLA.mla_params(key, cfg.d_model, cfg.num_heads,
+                              cfg.kv_lora_rank, cfg.qk_nope_dim,
+                              cfg.qk_rope_dim, cfg.v_head_dim, cfg.pdtype)
+    if kind == "mamba":
+        return M.mamba2_params(key, cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                               cfg.d_state, cfg.pdtype)
+    raise ValueError(kind)
+
+
+def _mixer_pspec(cfg: ArchConfig, kind: str):
+    if kind in ("attn", "attn_local", "attn_nocausal"):
+        return A.attn_pspec()
+    if kind == "mla":
+        return MLA.mla_pspec()
+    if kind == "mamba":
+        return M.mamba2_pspec()
+    raise ValueError(kind)
+
+
+def _ffn_params(cfg: ArchConfig, kind: str, key):
+    if kind == "dense":
+        return L.mlp_params(key, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                            gated=cfg.mlp_gated)
+    if kind == "moe":
+        return MOE.moe_params(key, cfg.d_model, cfg.moe_d_ff, cfg.num_experts,
+                              cfg.pdtype, cfg.num_shared_experts,
+                              cfg.shared_d_ff)
+    if kind == "none":          # pure-mamba blocks (mamba2-780m: d_ff=0)
+        return {}
+    raise ValueError(kind)
+
+
+def _ffn_pspec(cfg: ArchConfig, kind: str):
+    if kind == "dense":
+        return L.mlp_pspec(gated=cfg.mlp_gated)
+    if kind == "moe":
+        return MOE.moe_pspec(cfg.num_shared_experts)
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def period_params(cfg: ArchConfig, key):
+    """Parameters for ONE period (stacked over periods by init_params)."""
+    p = {}
+    keys = jax.random.split(key, 4 * cfg.period).reshape(cfg.period, 4, -1)
+    for j, (mk, fk) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        p[f"{j}.norm1"] = L.rmsnorm_params(cfg.d_model)
+        p[f"{j}.mixer"] = _mixer_params(cfg, mk, keys[j, 0])
+        if fk != "none":
+            p[f"{j}.norm2"] = L.rmsnorm_params(cfg.d_model)
+            p[f"{j}.ffn"] = _ffn_params(cfg, fk, keys[j, 1])
+    return p
+
+
+def period_pspec(cfg: ArchConfig):
+    p = {}
+    for j, (mk, fk) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        p[f"{j}.norm1"] = L.rmsnorm_pspec()
+        p[f"{j}.mixer"] = _mixer_pspec(cfg, mk)
+        if fk != "none":
+            p[f"{j}.norm2"] = L.rmsnorm_pspec()
+            p[f"{j}.ffn"] = _ffn_pspec(cfg, fk)
+    return p
+
+
+def init_params(cfg: ArchConfig, key):
+    ke, kb, kf = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: period_params(cfg, k))(
+        jax.random.split(kb, cfg.num_periods))
+    p = {"embed": L.embed_params(ke, cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+         "blocks": stacked,
+         "final_norm": L.rmsnorm_params(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_params(kf, cfg.d_model, cfg.vocab, cfg.pdtype)
+    if cfg.num_patches:
+        p["patch_proj"] = L.dense_params(kf, cfg.patch_embed_dim,
+                                         cfg.d_model, cfg.pdtype)
+    return p
+
+
+def params_pspec(cfg: ArchConfig):
+    stacked = jax.tree.map(
+        lambda spec: P(None, *spec), period_pspec(cfg),
+        is_leaf=lambda x: isinstance(x, P))
+    p = {"embed": L.embed_pspec(), "blocks": stacked,
+         "final_norm": L.rmsnorm_pspec()}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_pspec("data", "model")
+    if cfg.num_patches:
+        p["patch_proj"] = L.dense_pspec(None, "data")
+    return p
+
+
+# ----------------------------------------------------------------- forward
+
+def _apply_mixer(cfg: ArchConfig, kind: str, pp, x, positions, ssm_state):
+    cd = cfg.cdtype
+    if kind in ("attn", "attn_local", "attn_nocausal"):
+        y = A.attention(
+            pp, x, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=(kind != "attn_nocausal"),
+            window=cfg.window if kind == "attn_local" else None,
+            softcap_val=cfg.attn_softcap, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk, compute_dtype=cd, rope=cfg.use_rope)
+        return y, ssm_state
+    if kind == "mla":
+        y = MLA.mla_attention(
+            pp, x, num_heads=cfg.num_heads, qk_nope=cfg.qk_nope_dim,
+            qk_rope=cfg.qk_rope_dim, v_head=cfg.v_head_dim,
+            positions=positions, rope_theta=cfg.rope_theta,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, compute_dtype=cd)
+        return y, ssm_state
+    if kind == "mamba":
+        y, final = M.mamba2_forward(
+            pp, x, d_inner=cfg.d_inner, num_heads=cfg.ssm_heads,
+            d_state=cfg.d_state, chunk=cfg.ssm_chunk, compute_dtype=cd,
+            initial_state=ssm_state)
+        return y, final
+    raise ValueError(kind)
+
+
+def _apply_ffn(cfg: ArchConfig, kind: str, pp, x):
+    cd = cfg.cdtype
+    if kind == "none":
+        return None, None
+    if kind == "dense":
+        return L.mlp(pp, x, act=cfg.act, compute_dtype=cd), None
+    y, aux = MOE.moe_apply(
+        pp, x, num_experts=cfg.num_experts, top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        num_secondary=cfg.ditto_secondary,
+        act=cfg.act, compute_dtype=cd, group_size=cfg.moe_group_size,
+        impl=cfg.moe_impl)
+    return y, aux
+
+
+def _period_forward(cfg: ArchConfig, pp, x, positions):
+    """One period of layers; returns (x, stacked-aux).
+
+    The per-sublayer ``_shard_act`` anchors are load-bearing: without
+    them GSPMD lets the FSDP 'data' axis of the weights win the einsum
+    sharding, producing batch-REPLICATED attention/FFN outputs that get
+    all-reduced over the whole mesh inside the scan (measured 718 GB/step
+    on llama3.2-3b train before anchoring; EXPERIMENTS.md §Perf)."""
+    lb_loss = jnp.zeros((), jnp.float32)
+    for j, (mk, fk) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        h = L.rmsnorm(pp[f"{j}.norm1"], x, cfg.norm_eps)
+        y, _ = _apply_mixer(cfg, mk, pp[f"{j}.mixer"], h, positions, None)
+        x = _shard_act(x + y)
+        if fk != "none":
+            h = L.rmsnorm(pp[f"{j}.norm2"], x, cfg.norm_eps)
+            y, aux = _apply_ffn(cfg, fk, pp[f"{j}.ffn"], h)
+            x = _shard_act(x + y)
+            if aux is not None:
+                lb_loss = lb_loss + aux["lb_loss"]
+    return x, lb_loss
+
+
+def forward(cfg: ArchConfig, params, tokens, *, patches=None):
+    """tokens [B, S(-P)] (+ patches [B, P, patch_dim] for VLM) -> logits.
+
+    Full causal forward used by train_step and prefill."""
+    cd = cfg.cdtype
+    x = L.embed_lookup(params["embed"], tokens, cd)
+    if cfg.num_patches:
+        pe = L.dense(params["patch_proj"], patches, cd)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = _shard_act(x)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    body = functools.partial(_period_forward, cfg)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def scan_body(x, pp):
+        x, lb = body(pp, x, positions)
+        return _shard_act(x), lb
+
+    x, lbs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x, cd, cfg.vocab)
+              if cfg.tie_embeddings else L.dense(params["unembed"], x, cd))
+    logits = shard_logits(L.softcap(logits, cfg.logit_softcap))
+    return logits, {"lb_loss": lbs.sum()}
+
+
+def _mesh_axes():
+    """Axis sizes of the current (abstract) mesh, {} outside a mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        return dict(mesh.shape) if mesh.axis_names else {}
+    except (AttributeError, RuntimeError, ValueError):
+        return {}
+
+
+def _batch_axes(axes):
+    bd = tuple(a for a in ("pod", "data") if a in axes)
+    return bd if bd else None
+
+
+def _shard_act(x):
+    """Activation layout anchor: batch over (pod,data), features replicated
+    then TP-resharded inside the ops (GSPMD propagates)."""
+    axes = _mesh_axes()
+    if not axes:
+        return x  # outside a mesh context (CPU unit tests)
+    return jax.lax.with_sharding_constraint(
+        x, P(_batch_axes(axes), *([None] * (x.ndim - 1))))
+
+
+def shard_logits(x):
+    """Logits anchor: batch over (pod,data), vocab over model.  Forces the
+    unembed to all-gather the (small) embedding shard instead of
+    replicating the (huge) [B,S,V] logits -- without it XLA all-reduces
+    fp32 logits over the data axis (measured 63 GB/step + 2x33 GB bwd
+    all-gathers on llama3.2-3b; EXPERIMENTS.md §Perf).  Vocab widths that
+    do not divide the model axis (unpadded whisper/mamba2; see
+    vocab_pad_to) anchor the batch axis only."""
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    msize = axes.get("model", 1)
+    vspec = "model" if x.shape[-1] % max(msize, 1) == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, P(_batch_axes(axes), *([None] * (x.ndim - 2)), vspec))
+
+
+# ------------------------------------------------------------------ decode
+
+class LayerCache(NamedTuple):
+    kv: Any       # KVCache | MLACache | MambaCache per period position
+    length: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Stacked per-period caches (pytree leaves [num_periods, ...])."""
+    def one_period(_):
+        caches = {}
+        for j, mk in enumerate(cfg.block_pattern):
+            if mk in ("attn", "attn_local", "attn_nocausal"):
+                # local layers only need the window, a 'data locality' win
+                # identical to the paper's partial-range buffers
+                ln = min(max_len, cfg.window) if mk == "attn_local" else max_len
+                caches[str(j)] = A.init_kv_cache(batch, ln, cfg.num_kv_heads,
+                                                 cfg.head_dim, cfg.cdtype)
+            elif mk == "mla":
+                caches[str(j)] = MLA.init_mla_cache(batch, max_len,
+                                                    cfg.kv_lora_rank,
+                                                    cfg.qk_rope_dim, cfg.cdtype)
+            elif mk == "mamba":
+                caches[str(j)] = M.init_mamba_cache(batch, cfg.d_inner,
+                                                    cfg.ssm_heads, cfg.d_state,
+                                                    cfg.cdtype)
+        return caches
+
+    return jax.vmap(one_period)(jnp.arange(cfg.num_periods))
+
+
+def cache_pspec(cfg: ArchConfig):
+    caches = {}
+    for j, mk in enumerate(cfg.block_pattern):
+        if mk in ("attn", "attn_local", "attn_nocausal"):
+            caches[str(j)] = A.kv_cache_pspec()
+        elif mk == "mla":
+            caches[str(j)] = MLA.mla_cache_pspec()
+        elif mk == "mamba":
+            caches[str(j)] = M.mamba_cache_pspec()
+    return jax.tree.map(lambda spec: P(None, *spec), caches,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, cache_len):
+    """One-token decode: tokens [B, 1] -> (logits [B, 1, V], new cache).
+
+    cache_len is the number of valid positions already in the cache."""
+    cd = cfg.cdtype
+    x = L.embed_lookup(params["embed"], tokens, cd)
+
+    def scan_body(x, inputs):
+        pp, pc = inputs
+        new_pc = {}
+        for j, mk in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+            mk, fk = mk
+            h = L.rmsnorm(pp[f"{j}.norm1"], x, cfg.norm_eps)
+            if mk in ("attn", "attn_local", "attn_nocausal"):
+                y, c = A.attention_decode(
+                    pp[f"{j}.mixer"], h, pc[str(j)], cache_len,
+                    num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                    head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                    window=cfg.window if mk == "attn_local" else None,
+                    softcap_val=cfg.attn_softcap, kv_chunk=cfg.kv_chunk,
+                    compute_dtype=cd, rope=cfg.use_rope,
+                    ring=(mk == "attn_local"))
+            elif mk == "mla":
+                y, c = MLA.mla_decode(
+                    pp[f"{j}.mixer"], h, pc[str(j)], cache_len,
+                    num_heads=cfg.num_heads, qk_nope=cfg.qk_nope_dim,
+                    qk_rope=cfg.qk_rope_dim, v_head=cfg.v_head_dim,
+                    rope_theta=cfg.rope_theta, compute_dtype=cd)
+            else:  # mamba
+                y, c = M.mamba2_decode(
+                    pp[f"{j}.mixer"], h, pc[str(j)], d_inner=cfg.d_inner,
+                    num_heads=cfg.ssm_heads, d_state=cfg.d_state,
+                    compute_dtype=cd)
+            new_pc[str(j)] = c
+            x = x + y
+            if fk != "none":
+                h = L.rmsnorm(pp[f"{j}.norm2"], x, cfg.norm_eps)
+                y, _ = _apply_ffn(cfg, fk, pp[f"{j}.ffn"], h)
+                x = x + y
+        return x, new_pc
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x, cd, cfg.vocab)
+              if cfg.tie_embeddings else L.dense(params["unembed"], x, cd))
+    return L.softcap(logits, cfg.logit_softcap), new_cache

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone ([audio] arch).
+
+Per the assignment stub rule, the conv frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings [B, frames, d_model] (the output the
+two conv layers would produce).  The encoder is a non-causal transformer
+over the frames; the decoder is a causal transformer with interleaved
+cross-attention.  Whisper uses no RoPE -- sinusoidal positions are added to
+frames, learned positions to tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import _shard_act, shard_logits
+
+
+def _sinusoid(length, dim):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.layernorm_params(cfg.d_model),
+            "attn": A.attn_params(k1, cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.head_dim, cfg.pdtype),
+            "norm2": L.layernorm_params(cfg.d_model),
+            "ffn": L.mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                                gated=False),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.layernorm_params(cfg.d_model),
+            "self_attn": A.attn_params(k1, cfg.d_model, cfg.num_heads,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       cfg.pdtype),
+            "norm_x": L.layernorm_params(cfg.d_model),
+            "cross_attn": A.attn_params(k2, cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.head_dim,
+                                        cfg.pdtype),
+            "norm2": L.layernorm_params(cfg.d_model),
+            "ffn": L.mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                                gated=False),
+        }
+
+    return {
+        "embed": L.embed_params(ks[0], cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+        "pos_dec": L.truncnorm(ks[1], (cfg.max_positions, cfg.d_model),
+                               0.01, cfg.pdtype),
+        "encoder": jax.vmap(enc_layer)(
+            jax.random.split(ks[2], cfg.encoder_layers)),
+        "enc_norm": L.layernorm_params(cfg.d_model),
+        "decoder": jax.vmap(dec_layer)(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "dec_norm": L.layernorm_params(cfg.d_model),
+    }
+
+
+def params_pspec(cfg: ArchConfig):
+    enc = {"norm1": L.layernorm_pspec(), "attn": A.attn_pspec(),
+           "norm2": L.layernorm_pspec(), "ffn": L.mlp_pspec(gated=False)}
+    dec = {"norm1": L.layernorm_pspec(), "self_attn": A.attn_pspec(),
+           "norm_x": L.layernorm_pspec(), "cross_attn": A.attn_pspec(),
+           "norm2": L.layernorm_pspec(), "ffn": L.mlp_pspec(gated=False)}
+    stack = lambda tree: jax.tree.map(lambda s: P(None, *s), tree,
+                                      is_leaf=lambda x: isinstance(x, P))
+    return {"embed": L.embed_pspec(), "pos_dec": P(None, "data"),
+            "encoder": stack(enc), "enc_norm": L.layernorm_pspec(),
+            "decoder": stack(dec), "dec_norm": L.layernorm_pspec()}
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames [B, F, D] (precomputed stub embeddings) -> memory [B, F, D]."""
+    cd = cfg.cdtype
+    f = frames.shape[1]
+    x = frames.astype(cd) + _sinusoid(f, cfg.d_model).astype(cd)[None]
+    positions = jnp.arange(f, dtype=jnp.int32)
+
+    def body(x, pp):
+        h = L.layernorm(pp["norm1"], x, cfg.norm_eps)
+        x = x + A.attention(pp["attn"], h, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                            positions=positions, causal=False, rope=False,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            compute_dtype=cd)
+        h = L.layernorm(pp["norm2"], x, cfg.norm_eps)
+        x = _shard_act(x + L.mlp(pp["ffn"], h, act="gelu", compute_dtype=cd))
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(cfg: ArchConfig, params, tokens, memory):
+    """Teacher-forced decoder: tokens [B, S], memory [B, F, D] -> logits."""
+    cd = cfg.cdtype
+    s = tokens.shape[1]
+    f = memory.shape[1]
+    x = L.embed_lookup(params["embed"], tokens, cd) \
+        + params["pos_dec"][:s].astype(cd)[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    mem_pos = jnp.arange(f, dtype=jnp.int32)
+
+    def body(x, pp):
+        h = L.layernorm(pp["norm1"], x, cfg.norm_eps)
+        x = x + A.attention(pp["self_attn"], h, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                            positions=positions, causal=True, rope=False,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            compute_dtype=cd)
+        h = L.layernorm(pp["norm_x"], x, cfg.norm_eps)
+        x = x + A.attention(pp["cross_attn"], h, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                            positions=positions, causal=False, rope=False,
+                            kv_override=(memory, mem_pos),
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            compute_dtype=cd)
+        h = L.layernorm(pp["norm2"], x, cfg.norm_eps)
+        x = _shard_act(x + L.mlp(pp["ffn"], h, act="gelu", compute_dtype=cd))
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cd, cfg.vocab)
+    # vocab shards over 'model' only when padded (51865 is odd); the
+    # anchor still batch-shards the [B,S,V] logits either way
+    return shard_logits(logits), {}
+
+
+class WhisperCache(NamedTuple):
+    self_kv: Any     # stacked KVCache [layers, ...]
+    cross_k: Any     # [layers, B, F, H, dh] precomputed from memory
+    cross_v: Any
+
+
+def init_cache(cfg: ArchConfig, params, batch, max_len, memory=None):
+    """Self-attn cache + precomputed cross-attention K/V (prefill of the
+    encoder memory -- computed once per request)."""
+    cd = cfg.cdtype
+    self_kv = jax.vmap(lambda _: A.init_kv_cache(
+        batch, max_len, cfg.num_kv_heads, cfg.head_dim, cd))(
+            jnp.arange(cfg.num_layers))
+    if memory is None:
+        memory = jnp.zeros((batch, cfg.encoder_len, cfg.d_model), cd)
+
+    def cross_kv(pp):
+        k = jnp.einsum("bsd,dhk->bshk", memory.astype(cd),
+                       pp["cross_attn"]["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", memory.astype(cd),
+                       pp["cross_attn"]["wv"].astype(cd))
+        return k, v
+
+    ck, cv = jax.vmap(cross_kv)(params["decoder"])
+    return WhisperCache(self_kv=self_kv, cross_k=ck, cross_v=cv)
+
+
+def cache_pspec(cfg: ArchConfig):
+    kv = jax.tree.map(lambda s: P(None, *s), A.kv_cache_pspec(),
+                      is_leaf=lambda x: isinstance(x, P))
+    cross = P(None, ("pod", "data"), None, "model", None)
+    return WhisperCache(self_kv=kv, cross_k=cross, cross_v=cross)
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache: WhisperCache,
+                cache_len):
+    """One decoder token with self-cache append + static cross K/V."""
+    cd = cfg.cdtype
+    cl = jnp.asarray(cache_len, jnp.int32)
+    pe = jnp.take(params["pos_dec"], jnp.atleast_1d(cl), axis=0).astype(cd)
+    pe = pe[:, None, :] if cl.ndim else pe[None]     # [B,1,D] | [1,1,D]
+    x = L.embed_lookup(params["embed"], tokens, cd) + pe
+
+    def body(x, inp):
+        pp, kv, ck, cv = inp
+        h = L.layernorm(pp["norm1"], x, cfg.norm_eps)
+        y, kv = A.attention_decode(pp["self_attn"], h, kv, cache_len,
+                                   num_heads=cfg.num_heads,
+                                   num_kv=cfg.num_kv_heads,
+                                   head_dim=cfg.head_dim, rope=False,
+                                   kv_chunk=cfg.kv_chunk, compute_dtype=cd)
+        x = x + y
+        h = L.layernorm(pp["norm_x"], x, cfg.norm_eps)
+        f = ck.shape[1]
+        y, _ = A.attention_decode(
+            pp["cross_attn"], h, A.KVCache(k=ck, v=cv), f,
+            num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope=False, kv_chunk=cfg.kv_chunk,
+            compute_dtype=cd, update_cache=False)
+        x = x + y
+        h = L.layernorm(pp["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(pp["ffn"], h, act="gelu", compute_dtype=cd)
+        return x, kv
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["decoder"], cache.self_kv, cache.cross_k,
+                  cache.cross_v))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cd, cfg.vocab)
+    return logits, WhisperCache(self_kv=new_kv, cross_k=cache.cross_k,
+                                cross_v=cache.cross_v)

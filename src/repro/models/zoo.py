@@ -1,0 +1,218 @@
+"""The model zoo: one uniform API over all 10 assigned architectures.
+
+``build(cfg)`` returns a ``Model`` whose members are pure functions ready
+for ``jax.jit`` -- the launcher, the dry-run, the train loop and the smoke
+tests all consume this interface and never dispatch on family themselves.
+
+Batch layouts (everything is a dict of arrays / ShapeDtypeStructs):
+  train   {"tokens" [B,St] i32, "labels" [B,St] i32, ("patches"|"frames")}
+  prefill same minus "labels"
+  decode  {"tokens" [B,1] i32, "cache" pytree, "cache_len" () i32}
+
+For the [vlm] arch the text length is St = seq_len - num_patches so the
+TOTAL sequence through the backbone matches the assigned shape; loss is
+computed on token positions only.  For [audio] (whisper) the frames input
+is the fixed 1500-frame encoder stub.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import frontends as F
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+LB_LOSS_WEIGHT = 0.01  # MoE load-balance auxiliary weight
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable[[jax.Array], Any]
+    params_pspec: Callable[[], Any]
+    loss_fn: Callable[[Any, Dict[str, Any]], Any]     # -> (loss, metrics)
+    prefill_fn: Callable[[Any, Dict[str, Any]], Any]  # -> logits
+    decode_fn: Callable[[Any, Dict[str, Any]], Any]   # -> (logits, cache)
+    init_cache: Callable[..., Any]                    # (params,batch,max_len)
+    cache_pspec: Callable[[], Any]
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_whisper(cfg)
+    return _build_decoder_only(cfg)
+
+
+# ------------------------------------------------------- decoder-only family
+
+def _build_decoder_only(cfg: ArchConfig) -> Model:
+    def loss_fn(params, batch):
+        logits, aux = T.forward(cfg, params, batch["tokens"],
+                                patches=batch.get("patches"))
+        if cfg.num_patches:
+            logits = logits[:, cfg.num_patches:, :]
+        xent = L.softmax_xent(logits, batch["labels"], cfg.vocab)
+        loss = xent + LB_LOSS_WEIGHT * aux.get("lb_loss", 0.0)
+        return loss, {"xent": xent, "lb_loss": aux.get("lb_loss", 0.0)}
+
+    def prefill_fn(params, batch):
+        logits, _ = T.forward(cfg, params, batch["tokens"],
+                              patches=batch.get("patches"))
+        return logits
+
+    def decode_fn(params, batch):
+        return T.decode_step(cfg, params, batch["tokens"], batch["cache"],
+                             batch["cache_len"])
+
+    def init_cache(params, batch, max_len):
+        del params
+        return T.init_cache(cfg, batch, max_len)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: T.init_params(cfg, key),
+        params_pspec=lambda: T.params_pspec(cfg),
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        init_cache=init_cache, cache_pspec=lambda: T.cache_pspec(cfg))
+
+
+# ------------------------------------------------------------ whisper family
+
+def _build_whisper(cfg: ArchConfig) -> Model:
+    def loss_fn(params, batch):
+        memory = W.encode(cfg, params, batch["frames"])
+        logits, _ = W.decode_train(cfg, params, batch["tokens"], memory)
+        xent = L.softmax_xent(logits, batch["labels"], cfg.vocab)
+        return xent, {"xent": xent, "lb_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill_fn(params, batch):
+        memory = W.encode(cfg, params, batch["frames"])
+        logits, _ = W.decode_train(cfg, params, batch["tokens"], memory)
+        return logits
+
+    def decode_fn(params, batch):
+        return W.decode_step(cfg, params, batch["tokens"], batch["cache"],
+                             batch["cache_len"])
+
+    def init_cache(params, batch, max_len, memory=None):
+        return W.init_cache(cfg, params, batch, max_len, memory=memory)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: W.init_params(cfg, key),
+        params_pspec=lambda: W.params_pspec(cfg),
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        init_cache=init_cache, cache_pspec=lambda: W.cache_pspec(cfg))
+
+
+# -------------------------------------------------------------- input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                model: Optional[Model] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one assigned
+    (arch x shape) cell -- weak-type-correct, shardable, no allocation.
+
+    For decode kinds the returned dict embeds the cache spec tree obtained
+    by eval_shape over init_cache (again: no allocation)."""
+    spec = SHAPES[shape_name]
+    seq, gb, kind = spec["seq_len"], spec["global_batch"], spec["kind"]
+    model = model or build(cfg)
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = {"frames": _sds(F.audio_frames_shape(cfg, gb), cfg.cdtype),
+                     "tokens": _sds((gb, seq), i32)}
+            if kind == "train":
+                batch["labels"] = _sds((gb, seq), i32)
+            return batch
+        st = seq - cfg.num_patches if cfg.num_patches else seq
+        batch = {"tokens": _sds((gb, st), i32)}
+        if cfg.num_patches:
+            batch["patches"] = _sds(F.vision_patches_shape(cfg, gb),
+                                    cfg.cdtype)
+        if kind == "train":
+            batch["labels"] = _sds((gb, st), i32)
+        return batch
+
+    # decode: one new token against a seq-length cache
+    if cfg.family == "encdec":
+        params_shapes = jax.eval_shape(model.init_params,
+                                       jax.ShapeDtypeStruct((2,), jnp.uint32))
+        cache = jax.eval_shape(
+            lambda p: model.init_cache(p, gb, seq), params_shapes)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(None, gb, seq))
+    return {"tokens": _sds((gb, 1), i32), "cache": cache,
+            "cache_len": _sds((), i32)}
+
+
+def batch_pspec(cfg: ArchConfig, shape_name: str,
+                model: Optional[Model] = None):
+    """PartitionSpec tree matching input_specs: batch over ('pod','data'),
+    cache per the model's cache_pspec, scalars replicated."""
+    spec = SHAPES[shape_name]
+    kind = spec["kind"]
+    model = model or build(cfg)
+    out: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out["frames"] = P(("pod", "data"), None, None)
+        out["tokens"] = P(("pod", "data"), None)
+        if cfg.num_patches:
+            out["patches"] = P(("pod", "data"), None, None)
+        if kind == "train":
+            out["labels"] = P(("pod", "data"), None)
+        return out
+    return {"tokens": P(("pod", "data"), None),
+            "cache": model.cache_pspec(), "cache_len": P()}
+
+
+# ----------------------------------------------------------- param counting
+
+def param_count(cfg: ArchConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    import math
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init_params,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token: MoE routed experts count top_k/num_experts
+    of their weights (6*N_active*D convention for the roofline table)."""
+    total = param_count(cfg)
+    if cfg.num_experts and cfg.top_k:
+        moe_layers = sum(1 for f in cfg.ffn_pattern if f == "moe") \
+            * cfg.num_periods
+        routed = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_experts * moe_layers
+        inactive = routed * (1.0 - cfg.top_k / cfg.num_experts)
+        return int(total - inactive)
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the roofline
+    'useful compute' ratio.  D = tokens processed by the cell: B*S for
+    train/prefill (train counts fwd+bwd via the 6x), B*1 for decode."""
+    spec = SHAPES[shape_name]
+    n = active_param_count(cfg)
+    if spec["kind"] == "train":
+        d = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n * d
+    if spec["kind"] == "prefill":
+        d = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n * d          # forward-only
+    return 2.0 * n * spec["global_batch"]  # decode: one token per sequence

@@ -1,0 +1,12 @@
+"""Optimizers + schedules + gradient compression (no external deps)."""
+from repro.optim.adamw import (AdamW8bitState, AdamWState, adamw, adamw8bit,
+                               clip_by_global_norm, make_optimizer)
+from repro.optim.compression import (CompressionState, compress_decompress,
+                                     init_compression)
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "AdamWState", "AdamW8bitState", "adamw", "adamw8bit", "make_optimizer",
+    "clip_by_global_norm", "warmup_cosine", "constant",
+    "CompressionState", "init_compression", "compress_decompress",
+]

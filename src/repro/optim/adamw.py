@@ -1,0 +1,157 @@
+"""AdamW, plus an 8-bit-moment variant (per-row blockwise quantization).
+
+Functional optimizer API (optax-shaped, no optax dependency):
+
+    opt = adamw(schedule)               # or adamw8bit(schedule)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+The 8-bit variant stores both Adam moments as int8 with one fp32 scale per
+trailing row (scale shape = leaf.shape[:-1]), so the scale tensors inherit
+the parameter sharding with the last axis dropped -- memory is cut 4x
+(2 x fp32 -> 2 x int8 + small scales), which is what lets the 398B Jamba's
+optimizer state fit the single-pod HBM budget (configs/jamba docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    mu: Params
+    nu: Params
+
+
+class AdamW8bitState(NamedTuple):
+    mu_q: Params        # int8, same shapes as params
+    mu_scale: Params    # fp32, shape[:-1]
+    nu_q: Params
+    nu_scale: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., Any]   # (grads, state, params, step) -> (upd, state)
+    state_pspec: Callable[[Any], Any]  # params_pspec -> state pspec tree
+    name: str = "adamw"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _bias_correct(m, decay, step):
+    return m / (1.0 - decay ** (step + 1))
+
+
+# ------------------------------------------------------------- fp32 moments
+
+def adamw(schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(grads, state: AdamWState, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, g32)
+        lr = schedule(step)
+
+        def upd(m, v, p):
+            mh = _bias_correct(m, b1, step)
+            vh = _bias_correct(v, b2, step)
+            return -lr * (mh / (jnp.sqrt(vh) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+
+        return (jax.tree.map(upd, mu, nu, params), AdamWState(mu=mu, nu=nu))
+
+    def state_pspec(params_pspec):
+        return AdamWState(mu=params_pspec, nu=params_pspec)
+
+    return Optimizer(init=init, update=update, state_pspec=state_pspec,
+                     name="adamw")
+
+
+# ------------------------------------------------------------- int8 moments
+
+_Q = 127.0
+
+
+def _quantize(x):
+    """Per-trailing-row symmetric int8: x [.., d] -> (int8 [.., d],
+    fp32 scale [..])."""
+    scale = jnp.max(jnp.abs(x), axis=-1) / _Q
+    q = jnp.round(x / jnp.maximum(scale, 1e-30)[..., None])
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def adamw8bit(schedule, b1=0.9, b2=0.95, eps=1e-8,
+              weight_decay=0.1) -> Optimizer:
+    def init(params):
+        qz = lambda p: jnp.zeros(p.shape, jnp.int8)
+        sz = lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+        return AdamW8bitState(mu_q=jax.tree.map(qz, params),
+                              mu_scale=jax.tree.map(sz, params),
+                              nu_q=jax.tree.map(qz, params),
+                              nu_scale=jax.tree.map(sz, params))
+
+    def update(grads, state: AdamW8bitState, params, step):
+        lr = schedule(step)
+
+        def upd(g, mq, ms, vq, vs, p):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequantize(mq, ms) + (1 - b1) * g
+            v = b2 * _dequantize(vq, vs) + (1 - b2) * g * g
+            mh = _bias_correct(m, b1, step)
+            vh = _bias_correct(v, b2, step)
+            u = -lr * (mh / (jnp.sqrt(vh) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            mq, ms = _quantize(m)
+            vq, vs = _quantize(v)
+            return u, mq, ms, vq, vs
+
+        out = jax.tree.map(upd, grads, state.mu_q, state.mu_scale,
+                           state.nu_q, state.nu_scale, params)
+        # unzip the 5-tuple leaves
+        treedef = jax.tree.structure(grads)
+        flat = treedef.flatten_up_to(out)
+        unzip = lambda i: treedef.unflatten([t[i] for t in flat])
+        return unzip(0), AdamW8bitState(mu_q=unzip(1), mu_scale=unzip(2),
+                                        nu_q=unzip(3), nu_scale=unzip(4))
+
+    def state_pspec(params_pspec):
+        from jax.sharding import PartitionSpec as P
+        drop_last = lambda s: P(*s[:-1]) if len(s) else P()
+        scales = jax.tree.map(drop_last, params_pspec,
+                              is_leaf=lambda x: isinstance(x, P))
+        return AdamW8bitState(mu_q=params_pspec, mu_scale=scales,
+                              nu_q=params_pspec, nu_scale=scales)
+
+    return Optimizer(init=init, update=update, state_pspec=state_pspec,
+                     name="adamw8bit")
+
+
+def make_optimizer(name: str, schedule, **kw) -> Optimizer:
+    return {"adamw": adamw, "adamw8bit": adamw8bit}[name](schedule, **kw)

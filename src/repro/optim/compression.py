@@ -1,0 +1,47 @@
+"""Int8 gradient compression with error feedback (cross-pod wire format).
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce is the slowest
+collective; compressing the pod-boundary traffic 4x (fp32->int8) with error
+feedback (Seide et al. 1-bit SGD lineage; EF-SGD) keeps convergence while
+cutting the DCN bytes.  The quantize->dequantize roundtrip here IS the wire
+format -- XLA sees int8 values crossing the `pod` axis when the all-reduce
+is decomposed as psum(int8-dequantized); the residual (quantization error)
+is carried to the next step per leaf.
+
+Used by train/loop.py when `compress_grads=True`; OFF by default (exact
+reproduction first, compression is a recorded beyond-paper optimization).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_Q = 127.0
+
+
+class CompressionState(NamedTuple):
+    error: Any   # per-leaf fp32 residual (error feedback memory)
+
+
+def init_compression(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_decompress(grads, state: CompressionState):
+    """grads -> (dequantized grads, new state).  Per-trailing-row int8."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / _Q
+        q = jnp.round(g / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+
+    out = jax.tree.map(one, grads, state.error)
+    treedef = jax.tree.structure(grads)
+    flat = treedef.flatten_up_to(out)
+    deq = treedef.unflatten([t[0] for t in flat])
+    err = treedef.unflatten([t[1] for t in flat])
+    return deq, CompressionState(error=err)

@@ -1,0 +1,3 @@
+from repro.serve.engine import DecodeEngine, greedy_generate, prefill_cache
+
+__all__ = ["DecodeEngine", "greedy_generate", "prefill_cache"]

@@ -1,0 +1,159 @@
+"""Serving: batched decode with KV/SSM/latent caches + slot scheduler.
+
+Two layers:
+  * pure jitted primitives -- ``prefill_cache`` (scan the decode step over
+    the prompt; family-agnostic because it reuses the same cache-update
+    code paths decode uses) and ``decode_tokens`` (one greedy token for
+    the whole batch);
+  * ``DecodeEngine`` -- a continuous-batching slot manager: requests join
+    free slots mid-flight, finished slots free immediately.  Per-slot
+    lengths live in a [B] cache_len vector; attention masks derive from it
+    so mixed-progress slots are correct.
+
+Note the per-slot cache_len vector vs the scalar the one-shot dry-run
+shapes use: decode_fn accepts either (broadcasting handles [B] vs ()).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.zoo import Model
+
+
+def prefill_cache(model: Model, params, prompts: jax.Array, cache,
+                  start_len=0):
+    """Teacher-forced prefill by scanning decode steps over the prompt.
+
+    prompts [B, S].  Returns (logits of last position [B, V], cache after
+    S tokens).  O(S) decode steps -- fine for example/serving scale; the
+    32k-prefill production path lowers prefill_fn (one fused forward)."""
+
+    def step(carry, tok):
+        cache, cache_len = carry
+        logits, cache = model.decode_fn(
+            params, {"tokens": tok[:, None], "cache": cache,
+                     "cache_len": cache_len})
+        return (cache, cache_len + 1), logits[:, 0]
+
+    (cache, _), logits = jax.lax.scan(
+        step, (cache, jnp.asarray(start_len, jnp.int32)), prompts.T)
+    return logits[-1], cache
+
+
+def decode_tokens(model: Model, params, tokens, cache, cache_len,
+                  temperature: float = 0.0, key=None):
+    """One decode step for the batch; greedy unless temperature > 0."""
+    logits, cache = model.decode_fn(
+        params, {"tokens": tokens[:, None], "cache": cache,
+                 "cache_len": cache_len})
+    lg = logits[:, 0]
+    if temperature > 0.0 and key is not None:
+        nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(lg, axis=-1)
+    return nxt.astype(jnp.int32), cache
+
+
+def greedy_generate(model: Model, params, prompts: jax.Array, *,
+                    max_new_tokens: int, max_len: Optional[int] = None):
+    """prompts [B, S] -> generated [B, max_new_tokens] (greedy)."""
+    b, s = prompts.shape
+    max_len = max_len or (s + max_new_tokens)
+    cache = model.init_cache(params, b, max_len)
+    last_logits, cache = prefill_cache(model, params, prompts, cache)
+    first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    def step(carry, i):
+        tok, cache = carry
+        nxt, cache = decode_tokens(model, params, tok, cache, s + i)
+        return (nxt, cache), tok
+
+    (_, _), toks = jax.lax.scan(step, (first, cache),
+                                jnp.arange(max_new_tokens))
+    return toks.T  # [B, new]
+
+
+# ----------------------------------------------------- continuous batching
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    """Slot-based continuous batching over a fixed decode batch width.
+
+    The jitted step decodes every slot each tick; empty slots decode a pad
+    token into a scratch slot range and are masked out host-side.  This is
+    the standard TPU serving shape (fixed batch, varying occupancy)."""
+
+    def __init__(self, model: Model, params, *, slots: int, max_len: int):
+        self.model, self.params = model, params
+        self.slots, self.max_len = slots, max_len
+        self.cache = model.init_cache(params, slots, max_len)
+        self.cache_len = jnp.zeros((), jnp.int32)  # per-engine tick counter
+        self.slot_len = np.zeros((slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.tokens = jnp.zeros((slots,), jnp.int32)
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, l: decode_tokens(model, p, t, c, l))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                # per-slot prefill at admission (single-request prompt
+                # scan).  Cache leaves are [num_periods, B, ...]: batch is
+                # axis 1 (periods are stacked for the layer scan).
+                cache_b = jax.tree.map(lambda c: c[:, i:i + 1], self.cache)
+                logits, cache_b = prefill_cache(
+                    self.model, self.params,
+                    jnp.asarray(req.prompt)[None, :], cache_b)
+                self.cache = jax.tree.map(
+                    lambda c, cb: c.at[:, i:i + 1].set(cb),
+                    self.cache, cache_b)
+                first = int(jnp.argmax(logits[0]))
+                req.out.append(first)
+                self.slot_req[i] = req
+                self.slot_len[i] = len(req.prompt)
+                self.tokens = self.tokens.at[i].set(first)
+
+    def step(self) -> int:
+        """Admit + decode one token for all active slots; returns number of
+        active requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        lens = jnp.asarray(self.slot_len)
+        nxt, self.cache = self._decode(self.params, self.tokens, self.cache,
+                                       lens)
+        self.tokens = nxt
+        host = np.asarray(nxt)
+        for i in active:
+            req = self.slot_req[i]
+            req.out.append(int(host[i]))
+            self.slot_len[i] += 1
+            if (len(req.out) >= req.max_new_tokens
+                    or self.slot_len[i] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[i] = None
+                self.slot_len[i] = 0
+        return len(active)
+
+    def run(self):
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()

@@ -1,0 +1,5 @@
+from repro.sharding.policies import (named_sharding_tree, promote_fsdp,
+                                     replicated, to_shardings)
+
+__all__ = ["promote_fsdp", "named_sharding_tree", "to_shardings",
+           "replicated"]

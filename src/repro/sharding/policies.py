@@ -1,0 +1,116 @@
+"""Sharding policies: logical axis conventions -> physical mesh axes.
+
+Conventions (see models/layers.py docstring):
+  'model'          tensor parallelism: heads / experts / vocab / d_ff
+  'data'           FSDP parameter+optimizer sharding AND batch data axis
+  ('pod','data')   batch dimension of activations/caches (explicit in specs)
+
+``promote_fsdp`` widens parameter FSDP sharding onto the pod axis when the
+mesh has one: a bare 'data' in a PARAMETER spec becomes ('data','pod'), so
+on the 2x16x16 production mesh parameters and optimizer state shard 32-way
+instead of 16-way (ZeRO-3 across pods; this is what fits the 398B Jamba).
+Batch/cache specs already name ('pod','data') explicitly and are untouched.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def promote_fsdp(spec_tree: Any, mesh: Mesh) -> Any:
+    """Replace bare 'data' entries with ('data','pod') when the mesh has a
+    pod axis.  Entries that are tuples (already explicit) pass through."""
+    if "pod" not in mesh.axis_names:
+        return spec_tree
+
+    def widen(p: P) -> P:
+        return P(*(("data", "pod") if ax == "data" else ax for ax in p))
+
+    return jax.tree.map(widen, spec_tree, is_leaf=_is_p)
+
+
+def _clean_entry(ax, mesh: Mesh):
+    """Normalize one PartitionSpec entry to a tuple of valid mesh axes."""
+    if ax is None:
+        return ()
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _fit_spec(p: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes a dimension cannot divide (jit arguments require
+    exact divisibility).  Axes are dropped from the END of an entry until
+    the product divides the dim -- e.g. kv-heads=8 over a 16-way 'model'
+    axis becomes unsharded; batch=1 over ('data','pod') becomes unsharded;
+    ('data','pod')=32 stays when d_model % 32 == 0."""
+    clean = []
+    for i, ax in enumerate(p):
+        axes = list(_clean_entry(ax, mesh))
+        dim = shape[i] if (shape is not None and i < len(shape)) else None
+        if dim is not None:
+            while axes:
+                total = 1
+                for a in axes:
+                    total *= mesh.shape[a]
+                if dim % total == 0:
+                    break
+                axes.pop()
+        clean.append(tuple(axes) if axes else None)
+    return P(*clean)
+
+
+def named_sharding_tree(spec_tree: Any, mesh: Mesh, params: bool = False,
+                        shapes: Any = None) -> Any:
+    """PartitionSpec tree -> NamedSharding tree.
+
+    params=True applies the FSDP pod promotion; `shapes` (a matching tree
+    of arrays / ShapeDtypeStructs) enables the divisibility fixup."""
+    if params:
+        spec_tree = promote_fsdp(spec_tree, mesh)
+
+    if shapes is None:
+        fix = lambda p: NamedSharding(mesh, _fit_spec(p, None, mesh))
+        return jax.tree.map(fix, spec_tree, is_leaf=_is_p)
+
+    # walk specs and shapes together: each P leaf pairs with the matching
+    # array/ShapeDtypeStruct leaf (or subtree, if one P covers several)
+    def fix2(p, sub):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, _fit_spec(p, s.shape, mesh)), sub)
+
+    return jax.tree.map(fix2, spec_tree, shapes, is_leaf=_is_p)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh, params: bool = False,
+                 shapes: Any = None) -> Any:
+    return named_sharding_tree(spec_tree, mesh, params=params, shapes=shapes)
+
+
+def tp_only(spec_tree: Any) -> Any:
+    """Serving-time parameter policy: keep tensor parallelism ('model'),
+    replicate across the data/pod axes.  FSDP-sharded decode params force
+    per-layer all-gathers on EVERY decoded token; when the TP-sharded
+    copy fits HBM (all archs here but jamba-398B), replicating over
+    'data' removes that collective entirely -- the serve-side hillclimb
+    (EXPERIMENTS.md §Perf)."""
+    def fix(p: P) -> P:
+        out = []
+        for ax in p:
+            axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+            kept = tuple(a for a in axes
+                         if a is not None and a not in ("data", "pod"))
+            out.append(kept if kept else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=_is_p)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

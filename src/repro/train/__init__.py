@@ -1,0 +1,5 @@
+from repro.train.loop import make_eval_step, make_train_step, train
+from repro.train.state import TrainState, init_train_state, train_state_pspec
+
+__all__ = ["TrainState", "init_train_state", "train_state_pspec",
+           "make_train_step", "make_eval_step", "train"]

@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop.
+
+``make_train_step`` builds the jitted (state, batch) -> (state, metrics)
+function the dry-run lowers and the driver executes; ``train`` is the
+driver: data pipeline in, checkpoints + preemption handling + straggler
+telemetry around the step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+from repro.optim import compression as C
+from repro.optim.adamw import (Optimizer, apply_updates,
+                               clip_by_global_norm)
+from repro.train.state import TrainState
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *,
+                    clip_norm: float = 1.0,
+                    compress_grads: bool = False) -> Callable:
+    """The jitted step.  Donate `state` at jit time:
+    jax.jit(step, donate_argnums=0)."""
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        comp_state = state.comp_state
+        if compress_grads:
+            grads, cs = C.compress_decompress(
+                grads, C.CompressionState(error=comp_state))
+            comp_state = cs.error
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, state.step)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt_state=opt_state, comp_state=comp_state)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=state.step.astype(jnp.float32))
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def train(model: Model, optimizer: Optimizer, data_iter, *,
+          num_steps: int, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 100, keep: int = 3, seed: int = 0,
+          log_every: int = 10, clip_norm: float = 1.0,
+          compress_grads: bool = False,
+          hooks: Optional[list] = None) -> TrainState:
+    """CPU/single-host driver (examples + integration tests; the multi-pod
+    path goes through launch/train.py which wraps this with mesh +
+    shardings).  Resumes from the latest checkpoint when ckpt_dir has one;
+    checkpoints asynchronously; checkpoints-and-exits on SIGTERM (ft.py)."""
+    from repro.checkpoint import ckpt as CK
+    from repro.train import ft
+
+    step_fn = jax.jit(make_train_step(model, optimizer, clip_norm=clip_norm,
+                                      compress_grads=compress_grads),
+                      donate_argnums=0)
+    comp = None
+    if compress_grads:
+        comp = jax.eval_shape(model.init_params, jax.random.PRNGKey(seed))
+        comp = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), comp)
+
+    manager = CK.CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+    state = None
+    if manager is not None and manager.latest_step() is not None:
+        from repro.train.state import TrainState as TS
+        template = jax.eval_shape(
+            lambda: TS(step=jnp.zeros((), jnp.int32),
+                       params=model.init_params(jax.random.PRNGKey(seed)),
+                       opt_state=optimizer.init(
+                           model.init_params(jax.random.PRNGKey(seed))),
+                       comp_state=comp))
+        state = manager.restore(template)
+    if state is None:
+        from repro.train.state import init_train_state
+        state = init_train_state(model, optimizer, jax.random.PRNGKey(seed),
+                                 comp_state=comp)
+
+    guard = ft.PreemptionGuard()
+    telem = ft.StepTelemetry()
+    start = int(state.step)
+    for i, batch in zip(range(start, num_steps), data_iter):
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            jax.block_until_ready(metrics["loss"])
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {i:6d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f}", flush=True)
+        telem.record(time.perf_counter() - t0)
+        for h in (hooks or []):
+            h(i, state, metrics)
+        if manager is not None and (i + 1) % ckpt_every == 0:
+            manager.save(int(state.step), state)
+        if guard.preempted:
+            print(f"preemption signal at step {i}; checkpointing and "
+                  "exiting cleanly", flush=True)
+            if manager is not None:
+                manager.save(int(state.step), state, block=True)
+            break
+    if manager is not None:
+        manager.save(int(state.step), state, block=True)
+        manager.close()
+    return state

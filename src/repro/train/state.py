@@ -1,0 +1,56 @@
+"""TrainState: the carried pytree of the training loop.
+
+Mesh-agnostic by construction -- specs are PartitionSpec trees resolved
+against whatever mesh the job has (sharding/policies.py), which is what
+makes checkpoints elastic (checkpoint/ckpt.py restores onto any mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.zoo import Model
+from repro.optim.adamw import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array          # () int32
+    params: Any
+    opt_state: Any
+    comp_state: Optional[Any] = None   # gradient-compression error feedback
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key,
+                     comp_state=None) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=optimizer.init(params),
+                      comp_state=comp_state)
+
+
+def train_state_pspec(model: Model, optimizer: Optimizer,
+                      compress: bool = False) -> TrainState:
+    pspec = model.params_pspec()
+    return TrainState(step=P(), params=pspec,
+                      opt_state=optimizer.state_pspec(pspec),
+                      comp_state=pspec if compress else None)
+
+
+def abstract_train_state(model: Model, optimizer: Optimizer,
+                         compress: bool = False) -> TrainState:
+    """ShapeDtypeStruct TrainState -- the dry-run's no-allocation stand-in."""
+    from repro.optim.compression import init_compression
+
+    def make():
+        params = model.init_params(jax.random.PRNGKey(0))
+        comp = init_compression(params).error if compress else None
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=optimizer.init(params), comp_state=comp)
+
+    return jax.eval_shape(make)

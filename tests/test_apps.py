@@ -1,0 +1,158 @@
+"""Application-level equivalence: each of the paper's five apps, run through
+the full skew-oblivious executor (profiler -> plan -> mapper -> merger), must
+be bit-exact against its sequential oracle on uniform AND skewed inputs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import dp, hhd, histo, hll, pagerank
+from repro.apps.hashes import murmur3_fmix32, murmur3_fmix32_np
+from repro.core import make_executor
+from repro.data import graphs as G
+from repro.data import zipf
+
+M = 8          # PriPEs (small for CPU tests; Eq. 1 gives 16 on the paper HW)
+CHUNK = 256
+
+
+def _stream(alpha, n=4096, domain=4096, seed=0):
+    return zipf.zipf_tuples(n, domain, alpha, seed=seed)
+
+
+def test_hashes_jnp_matches_np():
+    x = np.arange(10000, dtype=np.int64)
+    for seed in (0, 0x9E3779B9):
+        a = np.asarray(murmur3_fmix32(jnp.asarray(x), seed=seed))
+        b = murmur3_fmix32_np(x, seed=seed)
+        np.testing.assert_array_equal(a.astype(np.uint32), b)
+
+
+@pytest.mark.parametrize("alpha", [0.0, 1.2, 3.0])
+@pytest.mark.parametrize("num_sec", [0, M - 1])
+class TestAppsEquivalence:
+    def test_histo(self, alpha, num_sec):
+        data = _stream(alpha)
+        spec = histo.make_spec(num_bins=512, key_domain=4096, num_pri=M)
+        run = make_executor(spec, M, num_sec, CHUNK, profile_chunks=1)
+        merged, _ = run(jnp.asarray(data.reshape(-1, CHUNK, 2)))
+        np.testing.assert_array_equal(
+            np.asarray(merged),
+            histo.oracle(data[:, 0].astype(np.int64), 512, 4096, M))
+
+    def test_hll(self, alpha, num_sec):
+        data = _stream(alpha, domain=100000)
+        spec = hll.make_spec(p_bits=10, num_pri=M)
+        run = make_executor(spec, M, num_sec, CHUNK, profile_chunks=1)
+        merged, _ = run(jnp.asarray(data.reshape(-1, CHUNK, 2)))
+        np.testing.assert_array_equal(
+            np.asarray(merged), hll.oracle(data[:, 0], 10, M))
+
+    def test_hhd(self, alpha, num_sec):
+        data = _stream(alpha)
+        spec = hhd.make_spec(depth=4, width=256, num_pri=M)
+        run = make_executor(spec, M, num_sec, CHUNK, profile_chunks=1)
+        merged, _ = run(jnp.asarray(data.reshape(-1, CHUNK, 2)))
+        np.testing.assert_array_equal(
+            np.asarray(merged), hhd.oracle(data[:, 0], 4, 256, M))
+
+    def test_dp(self, alpha, num_sec):
+        data = _stream(alpha)
+        bits = 5
+        spec = dp.make_spec(radix_bits=bits, num_pri=M,
+                            capacity_per_pe=len(data))
+        run = make_executor(spec, M, num_sec, CHUNK, profile_chunks=1)
+        bufs, _ = run(jnp.asarray(data.reshape(-1, CHUNK, 2)))
+        got = dp.partitions_from_buffers(bufs, 1 << bits)
+        want = dp.oracle(data, bits)
+        for g, w in zip(got, want):
+            assert dp.multiset_equal(g, w)
+
+    def test_pagerank_scatter(self, alpha, num_sec):
+        # destination skew comes from the graph; alpha picks the generator
+        if alpha == 0.0:
+            edges = G.uniform_graph(512, 4096, seed=1)
+        else:
+            edges = G.rmat_graph(512, 2048, seed=1)
+        v = 512
+        deg = G.out_degrees(edges, v)
+        rank = pagerank.init_rank(v)
+        tuples = np.asarray(pagerank.edge_contributions(
+            jnp.asarray(edges), jnp.asarray(rank), jnp.asarray(deg)))
+        n = (len(tuples) // CHUNK) * CHUNK
+        tuples = tuples[:n]
+        spec = pagerank.make_spec(v, M)
+        run = make_executor(spec, M, num_sec, CHUNK, profile_chunks=1)
+        merged, _ = run(jnp.asarray(tuples.reshape(-1, CHUNK, 2)))
+        want = np.zeros((M, -(-v // M)), np.int32)
+        np.add.at(want, (tuples[:, 0] % M, tuples[:, 0] // M), tuples[:, 1])
+        np.testing.assert_array_equal(np.asarray(merged), want)
+
+
+class TestAppSemantics:
+    def test_hll_estimate_accuracy(self):
+        keys = np.random.default_rng(0).integers(0, 1 << 30, 50000)
+        true_card = len(np.unique(keys))
+        merged = hll.oracle(keys, p_bits=12, num_pri=M)
+        est = hll.estimate(merged, 12)
+        assert abs(est - true_card) / true_card < 0.05  # ~1.04/sqrt(2^12)=1.6%
+
+    def test_hhd_recall_is_one(self):
+        data = _stream(2.0, n=8192, domain=10000, seed=3)
+        keys = data[:, 0]
+        merged = hhd.oracle(keys, 4, 1024, M)
+        thr = 100
+        true_counts = np.bincount(keys, minlength=10000)
+        true_hh = np.where(true_counts >= thr)[0]
+        cand = np.unique(keys)
+        found = hhd.heavy_hitters(merged, cand, 4, 1024, thr)
+        assert set(true_hh).issubset(set(found.tolist()))
+
+    def test_pagerank_converges_to_float_reference(self):
+        v = 256
+        edges = G.rmat_graph(v, 2048, seed=5)
+        deg = G.out_degrees(edges, v)
+        rank = pagerank.init_rank(v)
+        for _ in range(15):
+            sums = pagerank.oracle_scatter(edges, rank, deg, v, M)
+            rank = pagerank.apply_damping(sums, v)
+        got = rank.astype(np.float64) / pagerank.ONE / v
+        want = pagerank.pagerank_reference(edges, v, iters=15)
+        assert np.abs(got - want).max() < 1e-3
+
+    def test_histo_flat_matches_numpy(self):
+        data = _stream(1.0)
+        merged = histo.oracle(data[:, 0].astype(np.int64), 512, 4096, M)
+        flat = histo.flat_histogram(merged, 512)
+        want = np.bincount(
+            histo.bin_of_np(data[:, 0].astype(np.int64), 512, 4096),
+            minlength=512)
+        np.testing.assert_array_equal(flat, want)
+
+
+class TestDataGen:
+    def test_zipf_uniform_alpha0(self):
+        k = zipf.zipf_keys(100000, 64, 0.0, seed=0)
+        counts = np.bincount(k, minlength=64)
+        assert counts.min() > 0.8 * counts.mean()
+
+    def test_zipf_skew_increases_with_alpha(self):
+        tops = []
+        for a in (0.5, 1.5, 3.0):
+            k = zipf.zipf_keys(50000, 1024, a, seed=0, permute=False)
+            counts = np.bincount(k, minlength=1024)
+            tops.append(counts.max() / counts.sum())
+        assert tops[0] < tops[1] < tops[2]
+        assert tops[2] > 0.8  # alpha=3: dominated by one key
+
+    def test_evolving_changes_hot_keys(self):
+        t = zipf.evolving_zipf_tuples(20000, 1024, 3.0, 10000, seed=0)
+        hot_a = np.bincount(t[:10000, 0], minlength=1024).argmax()
+        hot_b = np.bincount(t[10000:, 0], minlength=1024).argmax()
+        assert hot_a != hot_b
+
+    def test_rmat_is_skewed_uniform_is_not(self):
+        r = G.rmat_graph(1024, 8192, seed=0)
+        u = G.uniform_graph(1024, 8192, seed=0)
+        rc = np.bincount(r[:, 1], minlength=1024)
+        uc = np.bincount(u[:, 1], minlength=1024)
+        assert rc.max() > 4 * uc.max()

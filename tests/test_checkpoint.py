@@ -1,0 +1,98 @@
+"""Checkpoint subsystem: atomicity, keep-k, async, elastic restore."""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, restore_pytree,
+                                   save_pytree)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                       "c": jnp.float32(2.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(tmp_path / "ck", t)
+    got = restore_pytree(tmp_path / "ck", jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    save_pytree(tmp_path / "ck", _tree())
+    assert not (tmp_path / "ck.tmp").exists()
+    assert (tmp_path / "ck" / "manifest.json").exists()
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    save_pytree(tmp_path / "ck", _tree())
+    bad_template = {"only": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="leaves"):
+        restore_pytree(tmp_path / "ck", bad_template)
+
+
+def test_manager_keep_k_and_latest(tmp_path):
+    m = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, {"x": jnp.full((2,), s)}, block=True)
+    assert m.steps() == [3, 4]
+    assert m.latest_step() == 4
+    got = m.restore({"x": jnp.zeros(2)})
+    np.testing.assert_array_equal(np.asarray(got["x"]), [4, 4])
+    m.close()
+
+
+def test_manager_restore_none_when_empty(tmp_path):
+    m = CheckpointManager(tmp_path)
+    assert m.latest_step() is None
+    assert m.restore({"x": jnp.zeros(2)}) is None
+    m.close()
+
+
+def test_async_save_then_wait(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(7, _tree())           # async
+    m.wait()
+    assert m.steps() == [7]
+    m.close()
+
+
+def test_half_written_checkpoint_is_invisible(tmp_path):
+    """A .tmp dir (preempted writer) must not be listed or restored."""
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(), block=True)
+    crash = tmp_path / "step_2.tmp"
+    crash.mkdir()
+    (crash / "leaf_0.npy").write_bytes(b"garbage")
+    broken = tmp_path / "step_3"
+    broken.mkdir()                      # dir without manifest
+    assert m.steps() == [1]
+    assert m.latest_step() == 1
+    m.close()
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restore casts to the template dtype (e.g. serve-time bf16)."""
+    save_pytree(tmp_path / "ck", {"w": jnp.ones((4,), jnp.float32)})
+    got = restore_pytree(tmp_path / "ck",
+                         {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)})
+    assert got["w"].dtype == jnp.bfloat16
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_pytree(tmp_path / "ck", {"w": jnp.ones((4,))})
+    p = tmp_path / "ck" / "leaf_0.npy"
+    np.save(p, np.ones((5,), np.float32))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_pytree(tmp_path / "ck", {"w": jnp.zeros((4,))})

@@ -1,0 +1,98 @@
+"""Optimizer + compression tests (including hypothesis properties)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim.adamw import (adamw, adamw8bit, apply_updates,
+                               clip_by_global_norm)
+from repro.optim.compression import (CompressionState, compress_decompress,
+                                     init_compression)
+from repro.optim.schedules import constant, warmup_cosine
+
+
+def _quadratic_losses(opt, steps=60):
+    target = jnp.array([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    losses = []
+    for i in range(steps):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        upd, state = opt.update(grads, state, params, jnp.int32(i))
+        params = apply_updates(params, upd)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(adamw(constant(0.1), weight_decay=0.0))
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_adamw8bit_tracks_fp32():
+    l32 = _quadratic_losses(adamw(constant(0.1), weight_decay=0.0))
+    l8 = _quadratic_losses(adamw8bit(constant(0.1), weight_decay=0.0))
+    assert l8[-1] < 1e-2 * l8[0]
+    # quantized moments may converge slightly differently but same order
+    assert l8[-1] < 10 * max(l32[-1], 1e-6)
+
+
+def test_weight_decay_shrinks_params():
+    opt = adamw(constant(0.01), weight_decay=0.5)
+    params = {"w": jnp.ones(4) * 3.0}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(4)}
+    for i in range(50):
+        upd, state = opt.update(zero_g, state, params, jnp.int32(i))
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 3.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0, "b": jnp.ones(9) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert abs(float(total) - 1.0) < 1e-5
+    assert abs(float(gn) - np.sqrt(13 * 100)) < 1e-3
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) <= 0.1 + 1e-6
+    assert float(s(5)) == 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=32))
+def test_compression_error_feedback_conserves_mass(vals):
+    """Error feedback property: after compressing the same gradient twice,
+    the sum of (dequantized streams + remaining error) equals the sum of
+    the raw gradients -- nothing is lost, only delayed."""
+    g = {"w": jnp.asarray(np.array(vals, np.float32)).reshape(1, -1)}
+    state = init_compression(g)
+    total_sent = jnp.zeros_like(g["w"])
+    for _ in range(3):
+        sent, state = compress_decompress(g, state)
+        total_sent = total_sent + sent["w"]
+    lhs = np.asarray(total_sent + state.error["w"])
+    rhs = 3 * np.asarray(g["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 7), st.integers(2, 64))
+def test_8bit_roundtrip_error_bounded(seed, n):
+    """int8 per-row quantization error <= scale/2 = max|x|/254."""
+    from repro.optim.adamw import _dequantize, _quantize
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, n)) * 10
+    q, s = _quantize(x)
+    err = np.abs(np.asarray(_dequantize(q, s) - x))
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1) / 254 + 1e-6)
+    assert (err <= bound[:, None] + 1e-5).all()

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system invariants (DESIGN.md §7).
+
+1. Conservation  -- the mapper redirect moves every tuple to exactly one
+   effective PE in the designated PriPE's slot group.
+2. Equivalence   -- Ditto(app, data, ANY valid plan) == sequential oracle.
+3. RR fidelity   -- redirect round-robins the slot group exactly.
+4. Plan bounds   -- scheduler output is a valid plan; the oblivious bound
+   holds for X = M-1.
+5. Analyzer      -- Eq. 2 never picks X > M-1 nor X < 0; uniform -> 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.apps import histo
+from repro.core import (analyze_skew, apply_schedule, init_plan,
+                        make_executor, occurrence_rank, post_plan_max_load,
+                        redirect, schedule_secpes)
+
+MAX_M, MAX_X = 8, 7
+
+
+@st.composite
+def plan_and_dst(draw):
+    m = draw(st.integers(2, MAX_M))
+    x = draw(st.integers(0, m - 1))
+    assignment = draw(st.lists(
+        st.one_of(st.integers(0, m - 1), st.just(-1)),
+        min_size=x, max_size=x))
+    dst = draw(st.lists(st.integers(0, m - 1), min_size=1, max_size=64))
+    return m, x, np.array(assignment, np.int32), np.array(dst, np.int32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(plan_and_dst())
+def test_conservation_and_group_membership(args):
+    m, x, assignment, dst = args
+    plan = apply_schedule(init_plan(m, x), jnp.asarray(assignment))
+    rank, _ = occurrence_rank(jnp.asarray(dst), m,
+                              jnp.zeros((m,), jnp.int32))
+    eff = np.asarray(redirect(plan, jnp.asarray(dst), rank))
+    # every tuple processed by exactly one PE (shape preserved)
+    assert eff.shape == dst.shape
+    table = np.asarray(plan.table)
+    counter = np.asarray(plan.counter)
+    for d, e in zip(dst, eff):
+        group = set(table[d, :counter[d]].tolist())
+        assert int(e) in group          # effective PE shadows designated
+        # secondary ids map back to the designated PriPE
+        if e >= m:
+            assert assignment[e - m] == d
+
+
+@settings(max_examples=40, deadline=None)
+@given(plan_and_dst())
+def test_round_robin_fidelity(args):
+    """Occurrence k of PriPE p goes to slot (k mod counter[p]) -- the
+    paper's Fig. 4c sequence, for arbitrary plans and streams."""
+    m, x, assignment, dst = args
+    plan = apply_schedule(init_plan(m, x), jnp.asarray(assignment))
+    rank, _ = occurrence_rank(jnp.asarray(dst), m,
+                              jnp.zeros((m,), jnp.int32))
+    eff = np.asarray(redirect(plan, jnp.asarray(dst), rank))
+    table = np.asarray(plan.table)
+    counter = np.asarray(plan.counter)
+    seen = {p: 0 for p in range(m)}
+    for d, e in zip(dst, eff):
+        k = seen[int(d)]
+        assert e == table[d, k % counter[d]]
+        seen[int(d)] += 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, MAX_M), st.integers(0, MAX_X),
+       st.lists(st.integers(0, 2**20 - 1), min_size=16, max_size=256),
+       st.integers(0, 3))
+def test_executor_equivalence_any_plan(m, x, keys, seed):
+    """Invariant 2: merged result == oracle for any runtime-generated
+    plan, any skew, any (m, x)."""
+    x = min(x, m - 1)
+    num_bins = 4 * m
+    keys = np.array(keys, np.int64)
+    spec = histo.make_spec(num_bins, 1 << 20, m)
+    run = make_executor(spec, m, x, chunk_size=len(keys),
+                        profile_chunks=1, mem_width_tuples=4)
+    tuples = np.stack([keys, keys], axis=1).astype(np.int32)[None]
+    merged, _ = run(jnp.asarray(tuples))
+    ref = histo.oracle(keys, num_bins, 1 << 20, m)
+    np.testing.assert_array_equal(np.asarray(merged), ref)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, MAX_M), st.lists(st.integers(0, 10_000),
+                                       min_size=2, max_size=MAX_M))
+def test_scheduler_plan_bounds_and_oblivious_guarantee(m, wl):
+    wl = (wl + [0] * m)[:m]
+    workload = jnp.asarray(np.array(wl, np.float32))
+    x = m - 1
+    assignment = np.asarray(schedule_secpes(workload, x))
+    # valid plan: every assigned SecPE points at a real PriPE
+    assert ((assignment >= -1) & (assignment < m)).all()
+    # oblivious bound (paper: X=M-1 handles the worst case): max post-plan
+    # load <= max(total/m, ceil-ish fair share)
+    post = float(post_plan_max_load(workload, jnp.asarray(assignment)))
+    total = float(workload.sum())
+    if total > 0:
+        assert post <= max(total / m * 2.0, float(workload.max()) / 1.0)
+        # splitting the hottest PE across its group never exceeds the
+        # no-plan maximum
+        assert post <= float(workload.max()) + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, MAX_M), st.lists(st.integers(0, 1 << 16),
+                                       min_size=32, max_size=512),
+       st.floats(0.01, 0.5))
+def test_analyzer_bounds(m, dsts, tol):
+    dst = jnp.asarray(np.array(dsts, np.int32) % m)
+    x = analyze_skew(dst, m, tol)
+    assert 0 <= x <= m - 1
+
+
+def test_analyzer_uniform_picks_zero():
+    dst = jnp.asarray(np.arange(1024, dtype=np.int32) % 8)
+    assert analyze_skew(dst, 8, 0.01) == 0

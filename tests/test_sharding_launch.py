@@ -1,0 +1,142 @@
+"""Sharding policies + launch analysis unit tests (no multi-device
+requirement: _fit_spec and the HLO parser are pure functions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import analysis as AN
+from repro.launch import costmodel as CM
+from repro.launch.mesh import V5E, make_host_mesh
+from repro.sharding.policies import _fit_spec, promote_fsdp
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestFitSpec:
+    def test_keeps_divisible(self):
+        assert _fit_spec(P("data", "model"), (32, 64), MESH) \
+            == P(("data",), ("model",))
+
+    def test_drops_nondivisible_axis(self):
+        # 8 kv-heads cannot split over a 16-way model axis
+        assert _fit_spec(P(None, "model", None), (4, 8, 64), MESH) \
+            == P(None, None, None)
+
+    def test_partial_drop_from_tuple(self):
+        # d=2304 divides 32? no (2304/32=72 yes!) -> use d=40: 40 % 32 != 0,
+        # 40 % ... drop 'pod' -> ('data',) works if 40 % 16 != 0 -> drop all
+        got = _fit_spec(P(("data", "pod")), (40,), MESH3)
+        assert got == P(None)
+        got = _fit_spec(P(("data", "pod")), (64,), MESH3)
+        assert got == P(("data", "pod"))
+
+    def test_batch_one_unsharded(self):
+        assert _fit_spec(P(("pod", "data"), None), (1, 128), MESH3) \
+            == P(None, None)
+
+    def test_unknown_axis_dropped(self):
+        assert _fit_spec(P("expert"), (16,), MESH) == P(None)
+
+
+def test_promote_fsdp_widens_params_only_on_pod_mesh():
+    tree = {"w": P("data", "model"), "b": P(None)}
+    out = promote_fsdp(tree, MESH3)
+    assert out["w"] == P(("data", "pod"), "model")
+    out2 = promote_fsdp(tree, MESH)
+    assert out2["w"] == P("data", "model")
+
+
+HLO = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ag = f32[128,256]{1,0} all-gather(f32[8,256]{1,0} %x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %y), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %w = (s32[], f32[128,256]) while((s32[], f32[128,256]) %init), condition=%cond.1, body=%body.1
+  %rs = f32[8,256]{1,0} reduce-scatter(f32[128,256]{1,0} %z), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %q), source_target_pairs={{0,1}}
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_attribution_and_bytes(self):
+        out = AN.parse_collectives(HLO, world=256, body_trip=10)
+        pk = out["per_kind"]
+        # all-gather inside while body: result 128*256*4 bytes, g=16,
+        # moved = 15/16 * rb, x10 trips
+        rb = 128 * 256 * 4
+        assert pk["all-gather"]["count"] == 1
+        np.testing.assert_allclose(pk["all-gather"]["bytes_moved"],
+                                   10 * (15 / 16) * rb)
+        # all-reduce explicit groups of 4: 2*(3/4)*512 bytes, x10
+        np.testing.assert_allclose(pk["all-reduce"]["bytes_moved"],
+                                   10 * 2 * (3 / 4) * 128 * 4)
+        # reduce-scatter outside body: (g-1) * result(8*256*4), x1
+        np.testing.assert_allclose(pk["reduce-scatter"]["bytes_moved"],
+                                   15 * 8 * 256 * 4)
+        assert pk["collective-permute"]["bytes_moved"] == 64 * 4
+
+    def test_done_ops_not_double_counted(self):
+        text = ("ENTRY %m (x: f32[4]) -> f32[4] {\n"
+                "  %s = f32[4]{0} all-gather-start(f32[1]{0} %x), replica_groups=[1,4]<=[4]\n"
+                "  %d = f32[4]{0} all-gather-done(f32[4]{0} %s)\n}")
+        out = AN.parse_collectives(text, world=4)
+        assert out["per_kind"]["all-gather"]["count"] == 1
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        t = AN.roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5, V5E)
+        assert abs(t.compute_s - 1.0) < 1e-9
+        assert abs(t.memory_s - 2.0) < 1e-9
+        assert abs(t.collective_s - 0.5) < 1e-9
+        assert t.dominant == "memory"
+        assert t.bound_s == 2.0
+
+
+class TestCostModel:
+    def test_useful_ratio_sane_everywhere(self):
+        from repro.configs import ARCH_IDS, get
+        from repro.configs.base import SHAPES
+        from repro.launch.dryrun_rules import cell_skip_reason
+        from repro.models import zoo
+        for arch in ARCH_IDS:
+            cfg = get(arch)
+            for shape in SHAPES:
+                if cell_skip_reason(cfg, shape):
+                    continue
+                f = CM.cell_flops(cfg, shape)["total"]
+                mf = zoo.model_flops(cfg, shape)
+                assert 0.05 < mf / f <= 1.05, (arch, shape, mf / f)
+
+    def test_flops_scale_with_depth(self):
+        import dataclasses
+        from repro.configs import get
+        cfg = get("llama3_2_3b")
+        f1 = CM.cell_flops(cfg, "prefill_32k")["total"]
+        f2 = CM.cell_flops(dataclasses.replace(cfg, num_layers=56),
+                           "prefill_32k")["total"]
+        assert 1.8 < f2 / f1 < 2.05
+
+    def test_decode_bytes_dominated_by_cache_or_params(self):
+        from repro.configs import get
+        cfg = get("llama3_2_3b")
+        b = CM.cell_bytes(cfg, "decode_32k")["total"]
+        from repro.models import zoo
+        assert b > 2 * zoo.param_count(cfg)   # params in bf16 + cache
