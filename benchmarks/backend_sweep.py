@@ -1,0 +1,74 @@
+"""Kernel backend sweep: wall-clock of each dispatched kernel under the
+jnp-reference and Pallas-interpret realizations (and Pallas-native when a
+TPU/GPU is attached), plus the executor end-to-end under each backend pin.
+
+This is the dispatch-layer counterpart of the paper's HLS-transformations
+argument: one portable semantic spec, several performance realizations,
+measured side by side.  On CPU the jnp realization should win by orders of
+magnitude over emulation -- that gap is exactly why tier-1 defaults to it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_json
+from repro.kernels import dispatch as K
+
+BACKENDS_CPU = (K.JNP, K.INTERPRET)
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(t: int = 4096, bins: int = 512, dim: int = 128, iters: int = 3):
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, bins, t), jnp.int32)
+    val = jnp.asarray(rng.integers(0, 100, t), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 256, (t, 2)), jnp.int32)
+    eff = jnp.asarray(rng.integers(0, 8, t), jnp.int32)
+    slot = jnp.asarray(rng.integers(0, 64, t), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((t, dim)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), jnp.float32)
+
+    backends = list(BACKENDS_CPU)
+    if jax.default_backend() in ("tpu", "gpu"):
+        backends.append(K.PALLAS)
+
+    cases = {
+        "route_accumulate": lambda b: K.scatter_accumulate(
+            idx, val, bins, "add", backend=b),
+        "cms_update": lambda b: K.cms_update(
+            eff, cols, val, 8, 2, 256, backend=b),
+        "onehot_dispatch": lambda b: K.onehot_dispatch(
+            eff, slot, x, 8, 64, backend=b),
+        "flash_attention": lambda b: K.flash_attention(
+            q, q, q, backend=b),
+    }
+    rows = []
+    for name, fn in cases.items():
+        row = {"kernel": name}
+        ref = None
+        for b in backends:
+            s = _time(fn, b, iters=iters)
+            row[f"{b} s"] = s
+            ref = ref or s
+            row[f"{b} rel"] = round(s / ref, 2)
+        rows.append(row)
+    print_table(f"Kernel backend sweep (default={K.default_backend()})", rows)
+    save_json("backend_sweep", {"rows": rows, "backends": backends})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -12,9 +12,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig2_skew, fig7_secpe_sweep, fig8_pagerank,
-                        fig9_evolving, moe_balance, roofline, table2_sota,
-                        table3_resources)
+from benchmarks import (backend_sweep, fig2_skew, fig7_secpe_sweep,
+                        fig8_pagerank, fig9_evolving, moe_balance, roofline,
+                        table2_sota, table3_resources)
 
 BENCHES = {
     "fig2": fig2_skew.run,
@@ -24,6 +24,7 @@ BENCHES = {
     "fig8": fig8_pagerank.run,
     "fig9": fig9_evolving.run,
     "moe_balance": moe_balance.run,
+    "backend_sweep": backend_sweep.run,
     "roofline": roofline.run,
 }
 
@@ -33,6 +34,7 @@ FAST_KW = {
     "table2": dict(n_tuples=1 << 15),
     "fig8": dict(num_vertices=1 << 10),
     "fig9": dict(total_chunks=128),
+    "backend_sweep": dict(t=1024, iters=1),
 }
 
 

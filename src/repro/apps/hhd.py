@@ -16,15 +16,19 @@ import numpy as np
 
 from repro.apps.hashes import murmur3_fmix32, murmur3_fmix32_np
 from repro.core.types import DittoSpec
+from repro.kernels import dispatch as K
 
 ROW_SEEDS = (0x9E3779B9, 0x7F4A7C15, 0x94D049BB, 0xD6E8FEB8)
 
 
-def make_spec(depth: int, width: int, num_pri: int) -> DittoSpec:
+def make_spec(depth: int, width: int, num_pri: int,
+              kernel_backend: str | None = None) -> DittoSpec:
     """CMS spec.  ``idx`` carries the D per-row column indices packed as a
-    [T, D] int32 array; a custom pe_update scatters all D cells per tuple
-    (the FPGA PE updates D BRAM banks in parallel -- same D-way parallelism,
-    one scatter per row here)."""
+    [T, D] int32 array; pe_update routes through the cms_update kernel
+    dispatcher (the FPGA PE updates D BRAM banks in parallel; the TPU
+    realization contracts all D rows per tuple tile on the MXU) and folds
+    the chunk sketch into the carried state -- exact because CMS is
+    linear."""
     assert depth <= len(ROW_SEEDS)
     assert width & (width - 1) == 0, "power-of-two width"
 
@@ -43,9 +47,9 @@ def make_spec(depth: int, width: int, num_pri: int) -> DittoSpec:
         return jnp.zeros((num_pe, depth, width), jnp.int32)
 
     def pe_update(buffers, eff, idx, value):
-        for i in range(depth):
-            buffers = buffers.at[eff, i, idx[:, i]].add(value)
-        return buffers
+        num_pe = buffers.shape[0]
+        return buffers + K.cms_update(eff, idx, value, num_pe, depth, width,
+                                      backend=kernel_backend)
 
     return DittoSpec(name="hhd", pre=pre, init_buffer=init_buffer,
                      combine="add", pe_update=pe_update,

@@ -105,8 +105,19 @@ def make_distributed_executor(spec: DittoSpec, mesh, num_pri: int,
         workload = jax.lax.psum(workload, axis)              # global hist
         return (new_buf[None], my_load[None], dropped[None], workload)
 
+    # jax.shard_map only exists from jax 0.6; fall back to the
+    # experimental home it had before that
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as _sm
+
+        def shard_map(f, mesh, in_specs, out_specs):
+            return _sm(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+
     pspec = P(axis)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(pspec, pspec, P(), P()),
         out_specs=(pspec, pspec, pspec, P())))

@@ -23,17 +23,18 @@ import jax.numpy as jnp
 
 from repro.core import mapper, merger, perfmodel, profiler, scheduler
 from repro.core.types import PROFILE_MODE, RUN_MODE, DittoSpec, ExecStats, RoutePlan
+from repro.kernels import dispatch as K
 
 Array = jax.Array
 
 
 def default_pe_update(buffers: Array, eff: Array, idx: Array, value: Array,
-                      combine: str) -> Array:
-    """Vectorized PriPE/SecPE buffer update: the semantic reference for the
-    Pallas route_accumulate kernel (kernels/ref.py reuses this)."""
-    if combine == "add":
-        return buffers.at[eff, idx].add(value.astype(buffers.dtype))
-    return buffers.at[eff, idx].max(value.astype(buffers.dtype))
+                      combine: str, backend: Optional[str] = None) -> Array:
+    """PriPE/SecPE buffer update, routed through the kernel backend
+    dispatcher: jnp scatter on CPU, the route_accumulate one-hot MXU kernel
+    on TPU/GPU (kernels/dispatch.pe_buffer_update)."""
+    return K.pe_buffer_update(buffers, eff, idx, value, combine,
+                              backend=backend)
 
 
 @jax.tree_util.register_dataclass
@@ -73,6 +74,7 @@ def make_executor(
     threshold: float = 0.0,
     mem_width_tuples: int = 8,
     static_plan: bool = False,
+    kernel_backend: Optional[str] = None,
 ) -> Callable[..., tuple[Any, ExecStats]]:
     """Build the jitted streaming executor.
 
@@ -86,6 +88,10 @@ def make_executor(
       mem_width_tuples: tuples the memory interface feeds per cycle (Eq. 1 W).
       static_plan: skip runtime profiling; caller passes a pre-made plan
         (used by tests and by the offline path once a plan is known).
+      kernel_backend: pin the PE-update kernel realization ('jnp' |
+        'interpret' | 'pallas'); None = auto per jax.default_backend().
+        Only applies to the default pe_update (custom spec.pe_update
+        callables pick their own backend).
 
     Returns fn(tuples, [plan]) -> (merged_buffers, ExecStats-per-chunk).
       ``tuples`` is [num_chunks, chunk_size, ...]; the leading axis is scanned.
@@ -94,7 +100,9 @@ def make_executor(
         raise ValueError(
             f"{spec.name}: non-decomposable applications keep per-PE output "
             "regions and cannot re-merge mid-stream; use threshold=0.0")
-    pe_update = spec.pe_update or partial(default_pe_update, combine=spec.combine)
+    pe_update = spec.pe_update or partial(default_pe_update,
+                                          combine=spec.combine,
+                                          backend=kernel_backend)
     num_pe = num_pri + num_sec
 
     def chunk_step(state: ExecState, chunk):
@@ -199,6 +207,43 @@ def make_executor(
         return merged, stats
 
     return run
+
+
+def make_multistream_executor(
+    spec: DittoSpec,
+    num_pri: int,
+    num_sec: int,
+    chunk_size: int,
+    **kw,
+) -> Callable[..., tuple[Any, ExecStats]]:
+    """Vmapped multi-stream executor: S independent chunk streams in one
+    scan.
+
+    The single-stream executor is vmapped over a leading streams axis, so
+    every stream carries its OWN profiler/scheduler state (plan, mode,
+    monitor, reschedule counter) while the per-chunk work of all streams
+    fuses into one batched ``lax.scan`` -- the serving shape for many
+    concurrent skewed workloads (one tenant per stream).
+
+    Returns fn(tuples, [plans]) -> (merged_buffers, ExecStats), where
+      tuples: [num_streams, num_chunks, chunk_size, ...]
+      plans:  optional RoutePlan pytree with leading [num_streams] axis
+              (e.g. from stacking make_static_plan outputs); when given,
+              every stream starts in RUN mode under its own plan.
+    Outputs gain the same leading [num_streams] axis and are bit-identical
+    to running each stream alone (integer apps; float apps up to the usual
+    reduction-order caveats, which vmap does not change).
+    """
+    run = make_executor(spec, num_pri, num_sec, chunk_size, **kw)
+    free = jax.jit(jax.vmap(lambda t: run(t)))
+    planned = jax.jit(jax.vmap(run))
+
+    def run_streams(tuples, plans: Optional[RoutePlan] = None):
+        if plans is None:
+            return free(tuples)
+        return planned(tuples, plans)
+
+    return run_streams
 
 
 def make_static_plan(num_pri: int, num_sec: int, workload) -> RoutePlan:

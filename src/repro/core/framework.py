@@ -36,11 +36,17 @@ def tune_pe_counts(mem_width_bytes: int, tuple_bytes: int, ii_pre: int,
 
 @dataclasses.dataclass(frozen=True)
 class GeneratedImpl:
-    """One point of the generated family: an executor with X SecPEs."""
+    """One point of the generated family: an executor with X SecPEs.
+
+    ``run`` executes one chunk stream; ``run_streams`` is the vmapped
+    multi-stream variant ([num_streams, num_chunks, chunk, ...] in, a
+    leading streams axis on every output, per-stream profiler/plan carry).
+    """
 
     num_pri: int
     num_sec: int
     run: Callable[..., Any]
+    run_streams: Optional[Callable[..., Any]] = None
 
     @property
     def buffer_capacity_fraction(self) -> float:
@@ -52,7 +58,7 @@ class Ditto:
 
     def __init__(self, spec: DittoSpec, *, mem_width_bytes: int = 64,
                  chunk_size: int = 4096, profile_chunks: int = 1,
-                 threshold: float = 0.0):
+                 threshold: float = 0.0, kernel_backend: Optional[str] = None):
         self.spec = spec
         n_pre, n_pri, w = tune_pe_counts(mem_width_bytes, spec.tuple_bytes,
                                          spec.ii_pre, spec.ii_pe)
@@ -62,17 +68,22 @@ class Ditto:
         self.chunk_size = chunk_size
         self.profile_chunks = profile_chunks
         self.threshold = threshold
+        self.kernel_backend = kernel_backend
 
     def generate(self, xs: Optional[Sequence[int]] = None) -> list[GeneratedImpl]:
         """M implementation variants, X = 0..M-1 (paper §V-C)."""
         xs = range(self.num_pri) if xs is None else xs
         out = []
         for x in xs:
+            kw = dict(profile_chunks=self.profile_chunks,
+                      threshold=self.threshold,
+                      mem_width_tuples=self.mem_width_tuples,
+                      kernel_backend=self.kernel_backend)
             run = executor.make_executor(
-                self.spec, self.num_pri, x, self.chunk_size,
-                profile_chunks=self.profile_chunks, threshold=self.threshold,
-                mem_width_tuples=self.mem_width_tuples)
-            out.append(GeneratedImpl(self.num_pri, x, run))
+                self.spec, self.num_pri, x, self.chunk_size, **kw)
+            run_streams = executor.make_multistream_executor(
+                self.spec, self.num_pri, x, self.chunk_size, **kw)
+            out.append(GeneratedImpl(self.num_pri, x, run, run_streams))
         return out
 
     def select(self, keys: np.ndarray, tolerance: float = 0.01,

@@ -5,8 +5,11 @@
   moe_onehot       -- dispatch/combine one-hot contractions (routing network)
   flash_attention  -- online-softmax attention fwd (LM prefill hot-spot)
 
-ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+dispatch.py is the backend-dispatch layer: every kernel has jnp-reference,
+Pallas-interpret, and Pallas-native realizations, selected per
+``jax.default_backend()`` with explicit overrides.  ops.py holds the public
+wrappers (all routed through dispatch); ref.py the pure-jnp oracles.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["dispatch", "ops", "ref"]

@@ -53,7 +53,7 @@ def _kernel(eff_ref, cols_ref, val_ref, out_ref, *, depth: int,
                                              "block_w", "block_t", "interpret"))
 def cms_update(eff: jax.Array, cols: jax.Array, value: jax.Array,
                num_pe: int, depth: int, width: int, *, block_w: int = 512,
-               block_t: int = 1024, interpret: bool = True) -> jax.Array:
+               block_t: int = 1024, interpret: bool = False) -> jax.Array:
     """CMS update -> [num_pe, depth, width].  eff<0 entries are padding."""
     t = eff.shape[0]
     rows = num_pe * depth

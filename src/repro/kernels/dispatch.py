@@ -1,0 +1,254 @@
+"""Backend dispatch for the compute kernels (the HLS-style split between
+portable reference and performance realization).
+
+Every kernel in this package has three registered realizations:
+
+  ``jnp``        -- the pure-jnp oracle from ref.py.  Fast to trace, runs on
+                    any backend, no Pallas emulation overhead.  Default on
+                    CPU, where Pallas interpret mode is orders of magnitude
+                    slower than fused XLA.
+  ``interpret``  -- the Pallas kernel body executed in interpret mode.
+                    Opt-in: used by kernel-semantics tests to prove the
+                    Pallas code matches the oracle without TPU hardware.
+  ``pallas``     -- the Pallas kernel compiled natively.  Default on
+                    TPU/GPU, where the tiled MXU/VMEM realization is the
+                    point of the exercise.
+
+Selection order (first hit wins):
+
+  1. explicit ``backend=`` argument on the op,
+  2. an active ``use_backend(...)`` context,
+  3. the ``REPRO_KERNEL_BACKEND`` environment variable,
+  4. ``jax.default_backend()``: tpu/gpu -> ``pallas``, else ``jnp``.
+
+This replaces the scattered ``interpret: bool = True`` defaults the kernels
+used to carry: the kernel modules now default to native compilation and the
+*dispatcher* decides when emulation is wanted.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cms_update as _cms
+from repro.kernels import moe_onehot as _moe
+from repro.kernels import ref
+from repro.kernels import route_accumulate as _ra
+
+JNP = "jnp"
+INTERPRET = "interpret"
+PALLAS = "pallas"
+BACKENDS = (JNP, INTERPRET, PALLAS)
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+KERNELS = ("route_accumulate", "cms_update", "onehot_dispatch",
+           "onehot_combine", "flash_attention")
+
+_REGISTRY: Dict[str, Dict[str, Callable[..., Any]]] = {k: {} for k in KERNELS}
+_local = threading.local()
+
+
+def register(kernel: str, backend: str, fn: Callable[..., Any]) -> None:
+    """Register ``fn`` as the ``backend`` realization of ``kernel``."""
+    if kernel not in _REGISTRY:
+        _REGISTRY[kernel] = {}
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    _REGISTRY[kernel][backend] = fn
+
+
+def registered(kernel: str) -> tuple[str, ...]:
+    """Backends registered for ``kernel`` (test/introspection hook)."""
+    return tuple(_REGISTRY[kernel])
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Force a backend for every dispatched kernel inside the context."""
+    _check(backend)
+    stack = getattr(_local, "stack", None)
+    if stack is None:
+        stack = _local.stack = []
+    stack.append(backend)
+    try:
+        yield backend
+    finally:
+        stack.pop()
+
+
+def default_backend() -> str:
+    """The backend the dispatcher would pick with no explicit override."""
+    stack = getattr(_local, "stack", None)
+    if stack:
+        return stack[-1]
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        _check(env)
+        return env
+    return PALLAS if jax.default_backend() in ("tpu", "gpu") else JNP
+
+
+def resolve(backend: Optional[str] = None) -> str:
+    """Explicit request -> validated name; None -> automatic selection."""
+    if backend is None:
+        return default_backend()
+    _check(backend)
+    return backend
+
+
+def get_impl(kernel: str, backend: Optional[str] = None) -> Callable[..., Any]:
+    impls = _REGISTRY[kernel]
+    name = resolve(backend)
+    if name not in impls:
+        raise ValueError(
+            f"kernel {kernel!r} has no {name!r} realization "
+            f"(registered: {tuple(impls)})")
+    return impls[name]
+
+
+def _check(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+
+
+# --------------------------------------------------------------------------
+# Registered realizations.  The jnp entries ignore Pallas block-size kwargs
+# so call sites can pass tuning knobs without caring which backend runs.
+# --------------------------------------------------------------------------
+
+def _drop_blocks(fn, *allowed):
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        return fn(*args, **{k: v for k, v in kw.items() if k in allowed})
+    return wrapped
+
+
+# jit'd mirrors of the ref oracles (the Pallas wrappers are already jit'd;
+# an un-jit'd jnp realization would eagerly dispatch op-by-op and lose to
+# emulation on small inputs)
+_jnp_route = jax.jit(ref.scatter_accumulate, static_argnums=(2, 3))
+_jnp_cms = jax.jit(ref.cms_update, static_argnums=(3, 4, 5))
+_jnp_disp = jax.jit(ref.onehot_dispatch, static_argnums=(3, 4))
+_jnp_comb = jax.jit(ref.onehot_combine)
+_jnp_flash = jax.jit(ref.flash_attention, static_argnames=("causal", "window"))
+
+register("route_accumulate", JNP, _drop_blocks(_jnp_route))
+register("route_accumulate", INTERPRET,
+         functools.partial(_ra.route_accumulate, interpret=True))
+register("route_accumulate", PALLAS,
+         functools.partial(_ra.route_accumulate, interpret=False))
+
+register("cms_update", JNP, _drop_blocks(_jnp_cms))
+register("cms_update", INTERPRET,
+         functools.partial(_cms.cms_update, interpret=True))
+register("cms_update", PALLAS,
+         functools.partial(_cms.cms_update, interpret=False))
+
+register("onehot_dispatch", JNP, _drop_blocks(_jnp_disp))
+register("onehot_dispatch", INTERPRET,
+         functools.partial(_moe.onehot_dispatch, interpret=True))
+register("onehot_dispatch", PALLAS,
+         functools.partial(_moe.onehot_dispatch, interpret=False))
+
+register("onehot_combine", JNP, _drop_blocks(_jnp_comb))
+register("onehot_combine", INTERPRET,
+         functools.partial(_moe.onehot_combine, interpret=True))
+register("onehot_combine", PALLAS,
+         functools.partial(_moe.onehot_combine, interpret=False))
+
+
+from repro.kernels import flash_attention as _fa  # noqa: E402
+
+register("flash_attention", JNP,
+         _drop_blocks(_jnp_flash, "causal", "window"))
+register("flash_attention", INTERPRET,
+         functools.partial(_fa.flash_attention, interpret=True))
+register("flash_attention", PALLAS,
+         functools.partial(_fa.flash_attention, interpret=False))
+
+
+# --------------------------------------------------------------------------
+# Dispatched ops: one call signature, three realizations.
+# --------------------------------------------------------------------------
+
+def scatter_accumulate(flat_idx, value, num_bins: int, combine: str = "add",
+                       *, backend: Optional[str] = None, **blocks):
+    """Scatter-accumulate ``value`` into ``num_bins`` cells at ``flat_idx``.
+
+    Out-of-range indices (padding, -1) are dropped; combine: add|max."""
+    return get_impl("route_accumulate", backend)(
+        flat_idx, value, num_bins, combine, **blocks)
+
+
+def cms_update(eff, cols, value, num_pe: int, depth: int, width: int,
+               *, backend: Optional[str] = None, **blocks):
+    """Count-min sketch update -> [num_pe, depth, width]; eff<0 dropped."""
+    return get_impl("cms_update", backend)(
+        eff, cols, value, num_pe, depth, width, **blocks)
+
+
+def onehot_dispatch(eff, slot, values, num_pe: int, capacity: int,
+                    *, backend: Optional[str] = None, **blocks):
+    """Pack values [T, dim] -> [num_pe, capacity, dim]; overflow dropped."""
+    return get_impl("onehot_dispatch", backend)(
+        eff, slot, values, num_pe, capacity, **blocks)
+
+
+def onehot_combine(eff, slot, packed, gate=None,
+                   *, backend: Optional[str] = None, **blocks):
+    """Unpack [num_pe, capacity, dim] -> [T, dim] (scaled by gate)."""
+    return get_impl("onehot_combine", backend)(eff, slot, packed, gate,
+                                               **blocks)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: Optional[str] = None, **blocks):
+    """Online-softmax attention forward; see kernels/flash_attention.py."""
+    return get_impl("flash_attention", backend)(
+        q, k, v, causal=causal, window=window, **blocks)
+
+
+def pe_buffer_update(buffers, eff, idx, value, combine: str,
+                     *, backend: Optional[str] = None, **blocks):
+    """The executor's PriPE/SecPE buffer update, dispatched.
+
+    buffers [num_pe, local]; tuple t lands in cell (eff[t], idx[t]);
+    out-of-range tuples (eff or idx < 0 or beyond the buffer -- padding)
+    are dropped on EVERY backend.  The jnp realization is the bit-exact
+    semantic reference (masked ``.at[eff, idx].add/max``).  The Pallas
+    realizations flatten the buffer to [num_pe * local] and run
+    route_accumulate, then fold the fresh contribution into the carried
+    state; for ``max`` this is exact whenever the accumulation domain is
+    non-negative (true for every paper app -- HLL rho >= 1 on
+    zero-initialized registers).
+    """
+    name = resolve(backend)
+    num_pe, local = buffers.shape
+    if name == JNP:
+        valid = (eff >= 0) & (eff < num_pe) & (idx >= 0) & (idx < local)
+        e = jnp.where(valid, eff, 0)
+        i = jnp.where(valid, idx, 0)
+        v = value.astype(buffers.dtype)
+        if combine == "add":
+            return buffers.at[e, i].add(jnp.where(valid, v, 0))
+        neutral = (jnp.iinfo(buffers.dtype).min
+                   if jnp.issubdtype(buffers.dtype, jnp.integer)
+                   else jnp.array(-jnp.inf, buffers.dtype))
+        return buffers.at[e, i].max(jnp.where(valid, v, neutral))
+    # invalid (eff, idx) must not alias a valid flat cell: route everything
+    # out-of-range to flat=-1, which route_accumulate drops
+    valid = (eff >= 0) & (eff < num_pe) & (idx >= 0) & (idx < local)
+    flat = jnp.where(valid, eff.astype(jnp.int32) * local
+                     + idx.astype(jnp.int32), -1)
+    contrib = scatter_accumulate(flat, value.astype(buffers.dtype),
+                                 num_pe * local, combine, backend=name,
+                                 **blocks).reshape(num_pe, local)
+    if combine == "add":
+        return buffers + contrib
+    return jnp.maximum(buffers, contrib)

@@ -84,7 +84,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """q [B, Sq, H, dh], k/v [B, Sk, KV, dh] -> [B, Sq, H, dh].
 
     Softmax scale = dh^-0.5.  window > 0 = sliding window (gemma2 local

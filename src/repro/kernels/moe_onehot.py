@@ -74,7 +74,7 @@ def _flat_pc(eff, slot, num_pe, capacity):
 def onehot_dispatch(eff: jax.Array, slot: jax.Array, values: jax.Array,
                     num_pe: int, capacity: int, *, block_pc: int = 512,
                     block_d: int = 512, block_t: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """Pack values [T, dim] -> [num_pe, capacity, dim]."""
     t, dim = values.shape
     pc_total = num_pe * capacity
@@ -105,7 +105,7 @@ def onehot_dispatch(eff: jax.Array, slot: jax.Array, values: jax.Array,
 def onehot_combine(eff: jax.Array, slot: jax.Array, packed: jax.Array,
                    gate: jax.Array | None = None, *, block_pc: int = 512,
                    block_d: int = 512, block_t: int = 512,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = False) -> jax.Array:
     """Unpack [num_pe, capacity, dim] -> [T, dim] (scaled by gate)."""
     num_pe, capacity, dim = packed.shape
     t = eff.shape[0]

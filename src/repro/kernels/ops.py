@@ -1,55 +1,55 @@
-"""Public jit'd entry points for the Pallas kernels.
+"""Public jit'd entry points for the compute kernels.
 
-Each op dispatches to the Pallas kernel (interpret=True off-TPU so CPU tests
-execute the real kernel body) or to the pure-jnp oracle in ref.py when
-``use_kernel=False``.  Shapes/dtypes are validated here so kernels can assume
-clean inputs.
+Each op routes through the backend dispatcher (dispatch.py): pure-jnp
+reference on CPU, Pallas-native on TPU/GPU, Pallas-interpret on request.
+Pass ``backend='jnp'|'interpret'|'pallas'`` to pin a realization, or use
+``dispatch.use_backend(...)`` to pin every op in a scope.  The legacy
+``use_kernel=False`` flag is kept as an alias for ``backend='jnp'``.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import cms_update as _cms
-from repro.kernels import moe_onehot as _moe
-from repro.kernels import ref
-from repro.kernels import route_accumulate as _ra
+from repro.kernels import dispatch
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _backend(backend: Optional[str], use_kernel: bool) -> Optional[str]:
+    if not use_kernel:
+        return dispatch.JNP
+    return backend
 
 
 def scatter_accumulate(flat_idx, value, num_bins: int, combine: str = "add",
-                       *, use_kernel: bool = True, **blocks):
-    if not use_kernel:
-        return ref.scatter_accumulate(flat_idx, value, num_bins, combine)
-    return _ra.route_accumulate(flat_idx, value, num_bins, combine,
-                                interpret=_interpret(), **blocks)
+                       *, use_kernel: bool = True,
+                       backend: Optional[str] = None, **blocks):
+    return dispatch.scatter_accumulate(
+        flat_idx, value, num_bins, combine,
+        backend=_backend(backend, use_kernel), **blocks)
 
 
 def cms_update(eff, cols, value, num_pe: int, depth: int, width: int,
-               *, use_kernel: bool = True, **blocks):
-    if not use_kernel:
-        return ref.cms_update(eff, cols, value, num_pe, depth, width)
-    return _cms.cms_update(eff, cols, value, num_pe, depth, width,
-                           interpret=_interpret(), **blocks)
+               *, use_kernel: bool = True, backend: Optional[str] = None,
+               **blocks):
+    return dispatch.cms_update(eff, cols, value, num_pe, depth, width,
+                               backend=_backend(backend, use_kernel), **blocks)
 
 
 def onehot_dispatch(eff, slot, values, num_pe: int, capacity: int,
-                    *, use_kernel: bool = True, **blocks):
-    if not use_kernel:
-        return ref.onehot_dispatch(eff, slot, values, num_pe, capacity)
-    return _moe.onehot_dispatch(eff, slot, values, num_pe, capacity,
-                                interpret=_interpret(), **blocks)
+                    *, use_kernel: bool = True,
+                    backend: Optional[str] = None, **blocks):
+    return dispatch.onehot_dispatch(eff, slot, values, num_pe, capacity,
+                                    backend=_backend(backend, use_kernel),
+                                    **blocks)
 
 
 def onehot_combine(eff, slot, packed, gate=None, *, use_kernel: bool = True,
-                   **blocks):
-    if not use_kernel:
-        return ref.onehot_combine(eff, slot, packed, gate)
-    return _moe.onehot_combine(eff, slot, packed, gate,
-                               interpret=_interpret(), **blocks)
+                   backend: Optional[str] = None, **blocks):
+    return dispatch.onehot_combine(eff, slot, packed, gate,
+                                   backend=_backend(backend, use_kernel),
+                                   **blocks)
 
 
 def occurrence_rank(eff: jax.Array, num_pe: int) -> jax.Array:
@@ -67,9 +67,8 @@ def occurrence_rank(eff: jax.Array, num_pe: int) -> jax.Array:
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    use_kernel: bool = True, **blocks):
-    from repro.kernels import flash_attention as _fa
-    if not use_kernel:
-        return ref.flash_attention(q, k, v, causal=causal, window=window)
-    return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                               interpret=_interpret(), **blocks)
+                    use_kernel: bool = True, backend: Optional[str] = None,
+                    **blocks):
+    return dispatch.flash_attention(q, k, v, causal=causal, window=window,
+                                    backend=_backend(backend, use_kernel),
+                                    **blocks)

@@ -1,9 +1,10 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These are the semantic ground truth: tests sweep shapes/dtypes and assert the
-Pallas kernels (interpret=True on CPU) match these bit-exactly for integer
-data and allclose for floats.  They are also the code path used on backends
-without Pallas support.
+Pallas kernels (run in interpret mode on CPU) match these bit-exactly for
+integer data and allclose for floats.  They are also the ``jnp`` realization
+registered with the backend dispatcher (dispatch.py) -- the default on any
+backend without Pallas support.
 """
 from __future__ import annotations
 

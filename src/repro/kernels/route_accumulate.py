@@ -57,7 +57,7 @@ def _kernel(idx_ref, val_ref, out_ref, *, combine: str, block_bins: int):
                                              "interpret"))
 def route_accumulate(flat_idx: jax.Array, value: jax.Array, num_bins: int,
                      combine: str = "add", *, block_bins: int = 512,
-                     block_t: int = 1024, interpret: bool = True) -> jax.Array:
+                     block_t: int = 1024, interpret: bool = False) -> jax.Array:
     """Scatter-accumulate with padding to block multiples.  See module doc.
 
     flat_idx: [T] int32 (invalid/padding entries < 0 or >= num_bins).

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mapper as core_mapper
 from repro.core import scheduler as core_scheduler
+from repro.kernels import dispatch as K
 from repro.models import layers as L
 
 
@@ -153,6 +154,39 @@ def _dispatch_sort(xg, eff, gates, num_slots, capacity, cd,
     return packed, combine, keep
 
 
+def _dispatch_kernel(xg, eff, gates, num_slots, capacity, cd,
+                     anchored=True, backend=None):
+    """Kernel-dispatcher pack/unpack (moe_impl='kernel').
+
+    The per-group capacity slotting is exactly the kernels/moe_onehot
+    contraction, so route it through the backend dispatcher: jnp reference
+    on CPU, the Pallas one-hot MXU kernels on TPU (vmapped over groups).
+    Same capacity/drop semantics as the one-hot path; no sharding anchors
+    (single-host / kernel-benchmark path)."""
+    from repro.kernels import ops as kernel_ops
+    g, nk = eff.shape
+    n = xg.shape[1]
+    top_k = nk // n
+    slot_rank = jax.vmap(
+        lambda e: kernel_ops.occurrence_rank(e, num_slots))(eff)
+    keep = slot_rank < capacity
+    xin = jnp.repeat(xg.astype(cd), top_k, axis=1)              # [G, nk, D]
+    packed = jax.vmap(
+        lambda e, s, x: K.onehot_dispatch(e, s, x, num_slots, capacity,
+                                          backend=backend)
+    )(eff, slot_rank, xin)                                      # [G, S_, C, D]
+    if anchored:
+        packed = L.anchor(packed, "batch", "model", None, None)
+
+    def combine(out_slots):
+        y = jax.vmap(
+            lambda e, s, p, gt: K.onehot_combine(e, s, p, gt, backend=backend)
+        )(eff, slot_rank, out_slots, gates.astype(cd))
+        return y.reshape(g, n, top_k, -1).sum(axis=2)
+
+    return packed, combine, keep
+
+
 def place_slot_weights(params, assignment: jax.Array, num_experts: int,
                        *, pad_to: int = 16, dtype=None):
     """Ditto slot-weight PLACEMENT (paper: SecPE re-enqueue by the CPU).
@@ -204,6 +238,10 @@ def moe_apply(params, x, *, num_experts, top_k, capacity_factor: float = 1.25,
     (uniform_capacity) unless given.  num_secondary = X replica slots
     (0 = plain MoE, the paper's '16P' baseline).  aux carries the
     load-balance loss + Ditto diagnostics.
+
+    impl: 'onehot' (GShard einsum baseline), 'sort' (gather/scatter), or
+    'kernel' (capacity slotting through the kernels/dispatch backends --
+    Pallas moe_onehot on TPU, jnp reference elsewhere).
     """
     cd = compute_dtype or x.dtype
     b, s, d = x.shape
@@ -267,7 +305,8 @@ def moe_apply(params, x, *, num_experts, top_k, capacity_factor: float = 1.25,
     # slot sharding instead -- measured 13x decode regression
     # (EXPERIMENTS.md §Perf iter-3 note)
     anchored = t >= 256
-    dispatch = _dispatch_sort if impl == "sort" else _dispatch_onehot
+    dispatch = {"sort": _dispatch_sort,
+                "kernel": _dispatch_kernel}.get(impl, _dispatch_onehot)
     packed, combine, keep = dispatch(xg, eff, gates, num_slots, capacity,
                                      cd, anchored)
 

@@ -1,3 +1,4 @@
-from repro.serve.engine import DecodeEngine, greedy_generate, prefill_cache
+from repro.serve.engine import (DecodeEngine, StreamEngine, greedy_generate,
+                                prefill_cache)
 
-__all__ = ["DecodeEngine", "greedy_generate", "prefill_cache"]
+__all__ = ["DecodeEngine", "StreamEngine", "greedy_generate", "prefill_cache"]

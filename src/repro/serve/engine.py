@@ -1,6 +1,8 @@
-"""Serving: batched decode with KV/SSM/latent caches + slot scheduler.
+"""Serving: batched decode with KV/SSM/latent caches + slot scheduler,
+plus multi-tenant analytics serving over the vmapped Ditto executor
+(``StreamEngine``).
 
-Two layers:
+Two LM layers:
   * pure jitted primitives -- ``prefill_cache`` (scan the decode step over
     the prompt; family-agnostic because it reuses the same cache-update
     code paths decode uses) and ``decode_tokens`` (one greedy token for
@@ -157,3 +159,74 @@ class DecodeEngine:
     def run(self):
         while self.queue or any(r is not None for r in self.slot_req):
             self.step()
+
+
+# ------------------------------------------------- multi-stream analytics
+
+@dataclasses.dataclass
+class StreamRequest:
+    rid: int
+    chunks: np.ndarray            # [num_chunks, chunk_size, ...]
+
+
+class StreamEngine:
+    """Multi-tenant analytics serving: many independent tuple streams run
+    through ONE vmapped streaming executor (core.executor's multi-stream
+    mode), so a whole batch of skewed workloads shares a single lax.scan
+    while every tenant keeps its own profiler/scheduler/plan carry.
+
+    Requests are whole streams; ``flush`` groups pending requests by chunk
+    count, pads the streams axis to a fixed width (stable jit shapes) and
+    returns per-request (merged_buffers, ExecStats).  Padding replays the
+    first stream of the group and is discarded -- streams are independent
+    under vmap, so tenants never observe each other.
+    """
+
+    def __init__(self, spec, *, num_pri: int, num_sec: int, chunk_size: int,
+                 max_streams: int = 8, kernel_backend: Optional[str] = None,
+                 **executor_kw):
+        from repro.core import executor as core_executor
+        self.spec = spec
+        self.chunk_size = chunk_size
+        self.max_streams = max_streams
+        self._run_streams = core_executor.make_multistream_executor(
+            spec, num_pri, num_sec, chunk_size,
+            kernel_backend=kernel_backend, **executor_kw)
+        self._next_rid = 0
+        self.pending: List[StreamRequest] = []
+
+    def submit(self, data: np.ndarray) -> int:
+        """Enqueue a flat tuple stream [n, ...]; n must be a multiple of
+        chunk_size (ragged tails are the data pipeline's job)."""
+        n = len(data)
+        if n % self.chunk_size:
+            raise ValueError(f"stream length {n} not a multiple of "
+                             f"chunk {self.chunk_size}")
+        chunks = np.asarray(data).reshape(-1, self.chunk_size,
+                                          *data.shape[1:])
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(StreamRequest(rid, chunks))
+        return rid
+
+    def flush(self) -> Dict[int, tuple]:
+        """Run every pending request; returns {rid: (merged, stats)}."""
+        out: Dict[int, tuple] = {}
+        while self.pending:
+            n_chunks = self.pending[0].chunks.shape[0]
+            batch = [r for r in self.pending
+                     if r.chunks.shape[0] == n_chunks][:self.max_streams]
+            batch_ids = {r.rid for r in batch}
+            self.pending = [r for r in self.pending
+                            if r.rid not in batch_ids]
+            stack = np.stack([r.chunks for r in batch])
+            pad = self.max_streams - len(batch)
+            if pad > 0:
+                stack = np.concatenate(
+                    [stack, np.repeat(stack[:1], pad, axis=0)])
+            merged, stats = self._run_streams(jnp.asarray(stack))
+            for i, req in enumerate(batch):
+                out[req.rid] = (
+                    jax.tree.map(lambda a, i=i: np.asarray(a[i]), merged),
+                    jax.tree.map(lambda a, i=i: np.asarray(a[i]), stats))
+        return out

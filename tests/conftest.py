@@ -1,0 +1,60 @@
+"""Shared fixtures for the tier-1 suite.
+
+Seeded Zipf datasets (data/zipf.py), a small DittoSpec + executor scale,
+and an 8-device forced-CPU mesh environment for subprocess tests.  The
+in-process jax stays pinned to 1 CPU device (several tests depend on
+that); multi-device tests run the example/launcher in a subprocess with
+``cpu_mesh_env``.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+if str(SRC) not in sys.path:          # keep `python -m pytest` working even
+    sys.path.insert(0, str(SRC))      # without the pyproject pythonpath ini
+
+GOLDEN_SEED = 123                     # every golden regression pins this
+
+# small executor scale shared by app-level tests: M PriPEs, chunk tuples
+SMALL_M = 8
+SMALL_CHUNK = 256
+
+
+@pytest.fixture(scope="session")
+def zipf_dataset():
+    """Factory for seeded Zipf tuple streams: (n, domain, alpha) ->
+    [n, 2] int32, always seed=GOLDEN_SEED so goldens stay stable."""
+    from repro.data import zipf
+
+    def make(n: int = 2048, domain: int = 1 << 16, alpha: float = 1.5,
+             seed: int = GOLDEN_SEED) -> np.ndarray:
+        return zipf.zipf_tuples(n, domain, alpha, seed=seed)
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def small_spec():
+    """A small HISTO DittoSpec (64 bins over a 2^16 domain, M=SMALL_M)."""
+    from repro.apps import histo
+    return histo.make_spec(64, 1 << 16, SMALL_M)
+
+
+@pytest.fixture(scope="session")
+def cpu_mesh_env():
+    """Environment for subprocess tests that need a multi-device mesh:
+    XLA_FLAGS forces 8 CPU host devices (the pytest process itself stays
+    single-device; see module docstring)."""
+    return {
+        "PYTHONPATH": str(SRC),
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/root",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "JAX_PLATFORMS": "cpu",
+    }

@@ -22,6 +22,18 @@ from repro.train.state import init_train_state
 
 B, S = 2, 32
 
+# tier-1 smokes the SSM family here; dense-transformer forward/train runs
+# in test_train_ft (reduced llama), MoE in test_opt_variants, and every
+# family's decode in test_decode_equivalence.  The remaining reduced
+# configs are multi-second each and run in the slow tier
+# (`pytest -m slow tests/test_archs.py`)
+FAST_SMOKE_ARCHS = {"mamba2_780m"}
+SMOKE_PARAMS = [
+    arch if arch in FAST_SMOKE_ARCHS
+    else pytest.param(arch, marks=pytest.mark.slow)
+    for arch in ARCH_IDS
+]
+
 
 def _batch(cfg, key):
     st = S - cfg.num_patches if cfg.num_patches else S
@@ -34,7 +46,7 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", SMOKE_PARAMS)
 def test_forward_train_decode_smoke(arch):
     cfg = get_reduced(arch)
     model = zoo.build(cfg)

@@ -16,8 +16,10 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import zoo
 
+# jamba's reduced config is the one multi-10s case; slow tier only
 FAMS = ["llama3_2_3b", "gemma2_2b", "starcoder2_15b",
-        "deepseek_v2_lite_16b", "mamba2_780m", "jamba_1_5_large_398b",
+        "deepseek_v2_lite_16b", "mamba2_780m",
+        pytest.param("jamba_1_5_large_398b", marks=pytest.mark.slow),
         "moonshot_v1_16b_a3b", "yi_6b"]
 
 B, S = 2, 12
@@ -48,6 +50,7 @@ def test_decode_matches_forward(arch):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_teacher_forced():
     cfg = get_reduced("whisper_base")
     model = zoo.build(cfg)

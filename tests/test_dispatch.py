@@ -1,0 +1,260 @@
+"""Backend-dispatch layer: jnp-reference vs Pallas-interpret equivalence
+for every kernel (small shapes -- the multi-minute interpret sweeps live in
+test_kernels.py under -m slow), backend-selection rules, and the
+multi-stream executor vs looped single-stream equivalence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch as K
+from repro.kernels import ops
+
+
+def _assert_match(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.dtype == want.dtype
+    if np.issubdtype(got.dtype, np.integer):
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestBackendSelection:
+    def test_cpu_defaults_to_jnp(self):
+        assert jax.default_backend() == "cpu"
+        assert K.default_backend() == K.JNP
+
+    def test_context_override(self):
+        with K.use_backend(K.INTERPRET):
+            assert K.default_backend() == K.INTERPRET
+            with K.use_backend(K.JNP):
+                assert K.default_backend() == K.JNP
+            assert K.default_backend() == K.INTERPRET
+        assert K.default_backend() == K.JNP
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv(K._ENV_VAR, K.INTERPRET)
+        assert K.default_backend() == K.INTERPRET
+        # explicit context beats the env var
+        with K.use_backend(K.JNP):
+            assert K.default_backend() == K.JNP
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError):
+            K.resolve("mlir")
+        with pytest.raises(ValueError):
+            K.scatter_accumulate(jnp.zeros(4, jnp.int32), jnp.ones(4),
+                                 8, backend="cuda")
+
+    def test_all_kernels_have_all_backends(self):
+        for kernel in K.KERNELS:
+            assert K.registered(kernel) == K.BACKENDS, kernel
+
+    def test_use_kernel_false_is_jnp_alias(self):
+        idx = jnp.asarray([0, 1, 1, -1], jnp.int32)
+        val = jnp.asarray([1, 2, 3, 9], jnp.int32)
+        a = ops.scatter_accumulate(idx, val, 4, use_kernel=False)
+        b = K.scatter_accumulate(idx, val, 4, backend=K.JNP)
+        _assert_match(a, b)
+
+
+class TestKernelEquivalence:
+    """jnp-ref vs Pallas-interpret, including invalid-index dropping."""
+
+    @pytest.mark.parametrize("combine", ["add", "max"])
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+    def test_route_accumulate(self, combine, dtype):
+        rng = np.random.default_rng(0)
+        t, bins = 257, 200
+        # indices include -1 padding AND >= bins out-of-range entries
+        idx = jnp.asarray(rng.integers(-2, bins + 3, t), jnp.int32)
+        if dtype == jnp.int32:
+            val = jnp.asarray(rng.integers(0, 100, t), dtype)
+        else:
+            val = jnp.asarray(np.abs(rng.standard_normal(t)), dtype)
+        want = K.scatter_accumulate(idx, val, bins, combine, backend=K.JNP)
+        got = K.scatter_accumulate(idx, val, bins, combine,
+                                   backend=K.INTERPRET)
+        _assert_match(got, want)
+
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+    def test_cms_update(self, dtype):
+        rng = np.random.default_rng(1)
+        t, pe, d, w = 100, 4, 2, 128
+        eff = jnp.asarray(rng.integers(-1, pe, t), jnp.int32)
+        cols = jnp.asarray(rng.integers(0, w, (t, d)), jnp.int32)
+        val = (jnp.asarray(rng.integers(1, 5, t), dtype)
+               if dtype == jnp.int32 else jnp.asarray(rng.random(t), dtype))
+        want = K.cms_update(eff, cols, val, pe, d, w, backend=K.JNP)
+        got = K.cms_update(eff, cols, val, pe, d, w, backend=K.INTERPRET)
+        _assert_match(got, want)
+
+    def test_onehot_dispatch_and_combine(self):
+        rng = np.random.default_rng(2)
+        t, pe, cap, dim = 64, 4, 8, 32
+        eff = jnp.asarray(rng.integers(-1, pe, t), jnp.int32)  # incl. invalid
+        slot = jnp.asarray(rng.integers(0, cap + 2, t), jnp.int32)  # overflow
+        x = jnp.asarray(rng.standard_normal((t, dim)), jnp.float32)
+        want = K.onehot_dispatch(eff, slot, x, pe, cap, backend=K.JNP)
+        got = K.onehot_dispatch(eff, slot, x, pe, cap, backend=K.INTERPRET)
+        _assert_match(got, want)
+        gate = jnp.asarray(rng.random(t), jnp.float32)
+        wantc = K.onehot_combine(eff, slot, want, gate, backend=K.JNP)
+        gotc = K.onehot_combine(eff, slot, want, gate, backend=K.INTERPRET)
+        _assert_match(gotc, wantc)
+
+    @pytest.mark.parametrize("window", [0, 8])
+    def test_flash_attention(self, window):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(k1, (1, 24, 2, 8))
+        k = jax.random.normal(k2, (1, 24, 1, 8))
+        v = jax.random.normal(k3, (1, 24, 1, 8))
+        want = K.flash_attention(q, k, v, window=window, backend=K.JNP)
+        got = K.flash_attention(q, k, v, window=window, backend=K.INTERPRET,
+                                block_q=8, block_k=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("combine", ["add", "max"])
+    def test_pe_buffer_update(self, combine):
+        rng = np.random.default_rng(3)
+        num_pe, local, t = 6, 16, 300
+        buffers = jnp.asarray(rng.integers(0, 50, (num_pe, local)), jnp.int32)
+        # include -1 padding and out-of-range eff/idx: dropped on EVERY
+        # backend (a wrapped negative index would corrupt another PE's cell)
+        eff = jnp.asarray(rng.integers(-1, num_pe + 1, t), jnp.int32)
+        idx = jnp.asarray(rng.integers(-1, local + 2, t), jnp.int32)
+        val = jnp.asarray(rng.integers(0, 9, t), jnp.int32)
+        want = K.pe_buffer_update(buffers, eff, idx, val, combine,
+                                  backend=K.JNP)
+        got = K.pe_buffer_update(buffers, eff, idx, val, combine,
+                                 backend=K.INTERPRET)
+        _assert_match(got, want)
+        # the dropped tuples really were dropped: valid-only oracle
+        valid = np.asarray((eff >= 0) & (eff < num_pe)
+                           & (idx >= 0) & (idx < local))
+        oracle = np.asarray(buffers).copy()
+        for e, i, v in zip(np.asarray(eff)[valid], np.asarray(idx)[valid],
+                           np.asarray(val)[valid]):
+            if combine == "add":
+                oracle[e, i] += v
+            else:
+                oracle[e, i] = max(oracle[e, i], v)
+        np.testing.assert_array_equal(np.asarray(want), oracle)
+
+    def test_moe_kernel_impl_matches_onehot(self):
+        """moe_apply(impl='kernel') routes capacity slotting through the
+        dispatcher and must match the GShard one-hot baseline."""
+        from repro.models import moe
+        key = jax.random.PRNGKey(0)
+        p = moe.moe_params(key, 16, 32, 4)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+        for sec in (0, 2):
+            y0, a0 = moe.moe_apply(p, x, num_experts=4, top_k=2,
+                                   num_secondary=sec, group_size=16,
+                                   impl="onehot")
+            yk, ak = moe.moe_apply(p, x, num_experts=4, top_k=2,
+                                   num_secondary=sec, group_size=16,
+                                   impl="kernel")
+            np.testing.assert_allclose(np.asarray(y0), np.asarray(yk),
+                                       rtol=1e-5, atol=1e-5)
+            assert float(a0["drop_frac"]) == float(ak["drop_frac"])
+
+
+class TestMultiStreamExecutor:
+    def _streams(self, num_streams=3, chunks=4, chunk=256):
+        from repro.data import zipf
+        alphas = np.linspace(0.0, 2.5, num_streams)
+        data = np.stack([
+            zipf.zipf_tuples(chunks * chunk, 1 << 16, a, seed=11 + i)
+            for i, a in enumerate(alphas)])
+        return jnp.asarray(data.reshape(num_streams, chunks, chunk, 2))
+
+    def test_matches_looped_single_stream(self, small_spec):
+        """Multi-stream output must be BIT-IDENTICAL to running each
+        stream alone (same profiler/plan evolution per stream)."""
+        from repro.core import make_executor, make_multistream_executor
+        from tests.conftest import SMALL_CHUNK, SMALL_M
+        run = make_executor(small_spec, SMALL_M, 2, SMALL_CHUNK)
+        runs = make_multistream_executor(small_spec, SMALL_M, 2, SMALL_CHUNK)
+        ts = self._streams()
+        merged_m, stats_m = runs(ts)
+        for s in range(ts.shape[0]):
+            merged_1, stats_1 = run(ts[s])
+            np.testing.assert_array_equal(np.asarray(merged_m[s]),
+                                          np.asarray(merged_1))
+            for a, b in zip(jax.tree.leaves(stats_m),
+                            jax.tree.leaves(stats_1)):
+                np.testing.assert_array_equal(np.asarray(a)[s],
+                                              np.asarray(b))
+
+    def test_max_combine_streams(self):
+        """Same bit-identity for a max-combine app (HLL registers)."""
+        from repro.apps import hll
+        from repro.core import make_executor, make_multistream_executor
+        spec = hll.make_spec(8, 8)
+        run = make_executor(spec, 8, 1, 256)
+        runs = make_multistream_executor(spec, 8, 1, 256)
+        ts = self._streams()
+        merged_m, _ = runs(ts)
+        for s in range(ts.shape[0]):
+            merged_1, _ = run(ts[s])
+            np.testing.assert_array_equal(np.asarray(merged_m[s]),
+                                          np.asarray(merged_1))
+
+    def test_per_stream_static_plans(self, small_spec):
+        """The planned path: each stream runs under its own static plan,
+        identical to the single-stream planned run."""
+        from repro.core import (make_executor, make_multistream_executor,
+                                make_static_plan)
+        from tests.conftest import SMALL_CHUNK, SMALL_M
+        run = make_executor(small_spec, SMALL_M, 2, SMALL_CHUNK)
+        runs = make_multistream_executor(small_spec, SMALL_M, 2, SMALL_CHUNK)
+        ts = self._streams()
+        rng = np.random.default_rng(7)
+        plans = [make_static_plan(SMALL_M, 2, rng.integers(1, 100, SMALL_M))
+                 for _ in range(ts.shape[0])]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+        merged_m, _ = runs(ts, stacked)
+        for s in range(ts.shape[0]):
+            merged_1, _ = run(ts[s], plans[s])
+            np.testing.assert_array_equal(np.asarray(merged_m[s]),
+                                          np.asarray(merged_1))
+
+    def test_stream_engine_matches_direct_run(self, small_spec):
+        """serve.StreamEngine (slot-padded batches) == direct execution."""
+        from repro.core import make_executor
+        from repro.serve import StreamEngine
+        from tests.conftest import SMALL_CHUNK, SMALL_M
+        eng = StreamEngine(small_spec, num_pri=SMALL_M, num_sec=2,
+                           chunk_size=SMALL_CHUNK, max_streams=4)
+        ts = self._streams()
+        rids = [eng.submit(np.asarray(ts[s]).reshape(-1, 2))
+                for s in range(ts.shape[0])]
+        res = eng.flush()
+        assert not eng.pending
+        run = make_executor(small_spec, SMALL_M, 2, SMALL_CHUNK)
+        for s, rid in enumerate(rids):
+            merged_1, _ = run(ts[s])
+            np.testing.assert_array_equal(res[rid][0], np.asarray(merged_1))
+
+
+class TestExecutorBackendPin:
+    def test_executor_backend_equivalence(self, small_spec):
+        """The executor produces identical buffers whichever kernel backend
+        realizes the PE update (jnp scatter vs interpret one-hot matmul)."""
+        from repro.core import make_executor
+        from repro.data import zipf
+        from tests.conftest import SMALL_CHUNK, SMALL_M
+        data = zipf.zipf_tuples(2 * SMALL_CHUNK, 1 << 16, 2.0, seed=5)
+        ts = jnp.asarray(data.reshape(2, SMALL_CHUNK, 2))
+        out = {}
+        for backend in (K.JNP, K.INTERPRET):
+            run = make_executor(small_spec, SMALL_M, 2, SMALL_CHUNK,
+                                kernel_backend=backend)
+            merged, _ = run(ts)
+            out[backend] = np.asarray(merged)
+        np.testing.assert_array_equal(out[K.JNP], out[K.INTERPRET])

@@ -16,11 +16,10 @@ REPO = Path(__file__).resolve().parent.parent
 
 
 @pytest.mark.slow
-def test_distributed_ditto_example_exact_and_skew_robust():
+def test_distributed_ditto_example_exact_and_skew_robust(cpu_mesh_env):
     r = subprocess.run(
         [sys.executable, str(REPO / "examples" / "distributed_ditto.py")],
-        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env=cpu_mesh_env,
         capture_output=True, text=True, timeout=560, cwd=str(REPO))
     assert r.returncode == 0, r.stdout + r.stderr
     out = r.stdout

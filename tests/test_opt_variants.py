@@ -77,8 +77,11 @@ def test_padded_vocab_odd_masks_and_matches():
     np.testing.assert_allclose(float(loss), float(loss0), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_decode_equivalence_with_opt_bundle():
-    """sort-MoE + padded vocab together keep decode == forward."""
+    """sort-MoE + padded vocab together keep decode == forward.  The two
+    ingredients are each covered fast (test_sort_dispatch_matches_onehot,
+    test_padded_vocab_odd_masks_and_matches); the bundle is slow-tier."""
     cfg = dataclasses.replace(get_reduced("deepseek_v2_lite_16b"),
                               moe_impl="sort", vocab_pad_to=16)
     model = zoo.build(cfg)

@@ -1,11 +1,14 @@
-"""Optimizer + compression tests (including hypothesis properties)."""
+"""Optimizer + compression tests (including hypothesis properties).
+
+The hypothesis-based property tests live in their own module guarded by
+``pytest.importorskip`` so the deterministic tests here run even without
+the dev dependency installed (see requirements-dev.txt)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.optim.adamw import (adamw, adamw8bit, apply_updates,
                                clip_by_global_norm)
@@ -68,14 +71,12 @@ def test_schedules():
     assert float(s(5)) == 0.5
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
-                max_size=32))
-def test_compression_error_feedback_conserves_mass(vals):
-    """Error feedback property: after compressing the same gradient twice,
+def test_compression_error_feedback_conserves_mass():
+    """Error feedback property: after compressing the same gradient thrice,
     the sum of (dequantized streams + remaining error) equals the sum of
     the raw gradients -- nothing is lost, only delayed."""
-    g = {"w": jnp.asarray(np.array(vals, np.float32)).reshape(1, -1)}
+    vals = np.linspace(-100, 100, 24).astype(np.float32)
+    g = {"w": jnp.asarray(vals).reshape(1, -1)}
     state = init_compression(g)
     total_sent = jnp.zeros_like(g["w"])
     for _ in range(3):
@@ -86,8 +87,7 @@ def test_compression_error_feedback_conserves_mass(vals):
     np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 7), st.integers(2, 64))
+@pytest.mark.parametrize("seed,n", [(1, 2), (3, 17), (7, 64)])
 def test_8bit_roundtrip_error_bounded(seed, n):
     """int8 per-row quantization error <= scale/2 = max|x|/254."""
     from repro.optim.adamw import _dequantize, _quantize

@@ -1,0 +1,47 @@
+"""Hypothesis property tests for the optimizer/compression stack, split out
+of test_optim.py so the deterministic tests there run without the dev
+dependency (requirements-dev.txt)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.optim.compression import compress_decompress, init_compression
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=32))
+def test_compression_error_feedback_conserves_mass(vals):
+    """Error feedback property: after compressing the same gradient thrice,
+    the sum of (dequantized streams + remaining error) equals the sum of
+    the raw gradients -- nothing is lost, only delayed."""
+    g = {"w": jnp.asarray(np.array(vals, np.float32)).reshape(1, -1)}
+    state = init_compression(g)
+    total_sent = jnp.zeros_like(g["w"])
+    for _ in range(3):
+        sent, state = compress_decompress(g, state)
+        total_sent = total_sent + sent["w"]
+    lhs = np.asarray(total_sent + state.error["w"])
+    rhs = 3 * np.asarray(g["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 7), st.integers(2, 64))
+def test_8bit_roundtrip_error_bounded(seed, n):
+    """int8 per-row quantization error <= scale/2 = max|x|/254."""
+    from repro.optim.adamw import _dequantize, _quantize
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, n)) * 10
+    q, s = _quantize(x)
+    err = np.abs(np.asarray(_dequantize(q, s) - x))
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1) / 254 + 1e-6)
+    assert (err <= bound[:, None] + 1e-5).all()

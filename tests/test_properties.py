@@ -12,8 +12,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.apps import histo
 from repro.core import (analyze_skew, apply_schedule, init_plan,

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_reduced
 from repro.launch.train import synthetic_batches
@@ -40,6 +41,7 @@ def test_loss_decreases():
     assert last < first
 
 
+@pytest.mark.slow  # resume is covered fast by test_train_cli_runs_and_resumes
 def test_resume_continues_step_counter(tmp_path):
     s1 = _train(6, ckpt_dir=str(tmp_path))
     assert int(s1.step) == 6
