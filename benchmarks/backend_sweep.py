@@ -1,11 +1,14 @@
 """Kernel backend sweep: wall-clock of each dispatched kernel under the
 jnp-reference and Pallas-interpret realizations (and Pallas-native when a
-TPU/GPU is attached), plus the executor end-to-end under each backend pin.
+TPU/GPU is attached), plus the streaming executor end-to-end under each
+backend pin and under the autotuner's measured pick.
 
 This is the dispatch-layer counterpart of the paper's HLS-transformations
 argument: one portable semantic spec, several performance realizations,
 measured side by side.  On CPU the jnp realization should win by orders of
-magnitude over emulation -- that gap is exactly why tier-1 defaults to it.
+magnitude over emulation -- that gap is exactly why tier-1 defaults to it,
+and why the autotuner's measured pass (repro.tune) must agree with the
+per-backend default rather than contradict it.
 """
 from __future__ import annotations
 
@@ -15,8 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
+from repro.apps import histo
+from repro.data.zipf import zipf_tuples
 from repro.kernels import dispatch as K
+from repro.tune import SearchSpace, autotune
 
 BACKENDS_CPU = (K.JNP, K.INTERPRET)
 
@@ -65,10 +71,35 @@ def run(t: int = 4096, bins: int = 512, dim: int = 128, iters: int = 3):
             ref = ref or s
             row[f"{b} rel"] = round(s / ref, 2)
         rows.append(row)
-    print_table(f"Kernel backend sweep (default={K.default_backend()})", rows)
-    save_json("backend_sweep", {"rows": rows, "backends": backends})
-    return rows
+    title = f"Kernel backend sweep (default={K.default_backend()})"
+    print_table(title, rows)
+
+    # --- executor end-to-end: the autotuner's measured pass IS the sweep
+    # (one executor per backend pin, wall-clock on a small Zipf stream)
+    spec = histo.make_spec(bins, 1 << 20, 16)
+    data = zipf_tuples(max(4 * t, 4096), 1 << 20, 1.5, seed=21)
+    tuned = autotune(
+        spec, data,
+        space=SearchSpace(m_candidates=(16,), chunk_sizes=(t,),
+                          backends=tuple(backends)),
+        tolerance=0.1, top_k=1, measure=True, measure_chunks=4,
+        measure_iters=max(1, iters - 1))
+    e2e_rows = [dict(r) for r in tuned.measured_candidates]
+    # normalize to the dispatcher's auto-default realization when it is in
+    # the sweep (an env/context override can point it elsewhere)
+    base = next((r["seconds"] for r in e2e_rows
+                 if r["kernel_backend"] == K.resolve(None)),
+                e2e_rows[0]["seconds"])
+    for r in e2e_rows:
+        r["vs default backend"] = round(r["seconds"] / base, 2)
+    print_table("Executor end-to-end (tuner measured pass, "
+                f"tuned pick = {tuned.kernel_backend})", e2e_rows)
+    assert tuned.kernel_backend in backends
+    return bench_record(
+        "backend_sweep", title, rows,
+        extra={"backends": list(backends), "executor_e2e": e2e_rows,
+               "autotune": tuned.to_record()})
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

@@ -1,17 +1,130 @@
-"""Shared benchmark plumbing: result tables, JSON persistence, timers."""
+"""Shared benchmark plumbing: structured records, schema validation,
+report persistence, result tables, timers.
+
+Every bench module's ``run()`` returns a **record** (``bench_record``)
+instead of bare prints; ``benchmarks.run`` collects the records into the
+schema-versioned ``BENCH_results.json`` at the repo root and mirrors each
+record to ``experiments/bench/<bench>.json``.  The schema is documented
+with a sample record in docs/benchmarks.md; ``validate_report`` /
+``validate_record`` are the single source of truth.
+"""
 from __future__ import annotations
 
 import json
 import time
+from datetime import datetime, timezone
 from pathlib import Path
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
-RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+SCHEMA_VERSION = 1
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+RESULTS_DIR = REPO_ROOT / "experiments" / "bench"
+REPORT_PATH = REPO_ROOT / "BENCH_results.json"
+
+STATUSES = ("ok", "failed", "skip")
+_SCALAR = (str, int, float, bool, type(None))
 
 
-def save_json(name: str, payload: Any):
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    p = RESULTS_DIR / f"{name}.json"
+class SchemaError(ValueError):
+    """A record/report does not conform to the benchmark schema."""
+
+
+def bench_record(bench: str, title: str, rows: List[Dict[str, Any]], *,
+                 extra: Optional[Dict[str, Any]] = None,
+                 status: str = "ok") -> Dict[str, Any]:
+    """One bench's structured result.
+
+    ``rows`` is the bench's main table (list of flat dicts, scalar cells);
+    anything non-tabular (heatmaps, autotune summaries, skip reasons) goes
+    in ``extra``.  ``benchmarks.run`` adds ``seconds`` after the fact.
+    """
+    rec = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "title": title,
+        "status": status,
+        "rows": [dict(r) for r in rows],
+        "extra": dict(extra or {}),
+    }
+    validate_record(rec)
+    return rec
+
+
+def validate_record(rec: Any) -> Dict[str, Any]:
+    """Raise SchemaError unless ``rec`` is a valid bench record."""
+    if not isinstance(rec, dict):
+        raise SchemaError(f"record must be a dict, got {type(rec).__name__}")
+    for key, typ in (("schema_version", int), ("bench", str), ("title", str),
+                     ("status", str), ("rows", list), ("extra", dict)):
+        if key not in rec:
+            raise SchemaError(f"record missing key {key!r}")
+        if not isinstance(rec[key], typ):
+            raise SchemaError(f"record[{key!r}] must be {typ.__name__}, "
+                              f"got {type(rec[key]).__name__}")
+    if rec["schema_version"] != SCHEMA_VERSION:
+        raise SchemaError(f"record schema_version {rec['schema_version']} "
+                          f"!= {SCHEMA_VERSION}")
+    if rec["status"] not in STATUSES:
+        raise SchemaError(f"record status {rec['status']!r} not in {STATUSES}")
+    for i, row in enumerate(rec["rows"]):
+        if not isinstance(row, dict):
+            raise SchemaError(f"rows[{i}] must be a dict")
+        for k, v in row.items():
+            if not isinstance(k, str) or not isinstance(v, _SCALAR):
+                raise SchemaError(
+                    f"rows[{i}][{k!r}] must be a JSON scalar, got "
+                    f"{type(v).__name__} (put structures in extra)")
+    if "seconds" in rec and not isinstance(rec["seconds"], (int, float)):
+        raise SchemaError("record['seconds'] must be a number")
+    return rec
+
+
+def validate_report(payload: Any) -> Dict[str, Any]:
+    """Raise SchemaError unless ``payload`` is a valid BENCH_results.json."""
+    if not isinstance(payload, dict):
+        raise SchemaError("report must be a dict")
+    for key, typ in (("schema_version", int), ("created", str),
+                     ("jax_backend", str), ("fast", bool), ("benches", dict)):
+        if key not in payload:
+            raise SchemaError(f"report missing key {key!r}")
+        if not isinstance(payload[key], typ):
+            raise SchemaError(f"report[{key!r}] must be {typ.__name__}")
+    if payload["schema_version"] != SCHEMA_VERSION:
+        raise SchemaError(f"report schema_version {payload['schema_version']}"
+                          f" != {SCHEMA_VERSION}")
+    for name, rec in payload["benches"].items():
+        validate_record(rec)
+        if rec["bench"] != name:
+            raise SchemaError(f"benches[{name!r}] holds record for "
+                              f"{rec['bench']!r}")
+    return payload
+
+
+def save_record(rec: Dict[str, Any],
+                results_dir: Optional[Path] = None) -> Path:
+    """Mirror one validated record to experiments/bench/<bench>.json."""
+    validate_record(rec)
+    d = Path(results_dir) if results_dir is not None else RESULTS_DIR
+    d.mkdir(parents=True, exist_ok=True)
+    p = d / f"{rec['bench']}.json"
+    p.write_text(json.dumps(rec, indent=2, default=float))
+    return p
+
+
+def write_report(records: Dict[str, Dict[str, Any]],
+                 path: Optional[Path] = None, *, fast: bool = False) -> Path:
+    """Write the schema-versioned top-level report (BENCH_results.json)."""
+    import jax
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "created": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "jax_backend": jax.default_backend(),
+        "fast": bool(fast),
+        "benches": records,
+    }
+    validate_report(payload)
+    p = Path(path) if path is not None else REPORT_PATH
     p.write_text(json.dumps(payload, indent=2, default=float))
     return p
 

@@ -8,18 +8,25 @@ Reproduced claims:
   * adding PriPEs instead (32P) does NOT help (PE overloading unsolved);
   * the Eq. 2 analyzer (0.1% sample, T=0.01) picks the cheapest X whose
     throughput matches the skew level.
+
+Each row also carries the autotuned-vs-paper-default comparison: the
+repro.tune autotuner's pick, run through the same executor, must match or
+beat the fixed X=0 default's modeled throughput at every alpha.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.apps import hll
+from repro.core import analyzer
 from repro.core.framework import Ditto
 from repro.data.zipf import zipf_tuples
+from repro.tune import SearchSpace, autotune
 
 ALPHAS = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0)
 XS = (0, 1, 2, 4, 8, 15)
+SAMPLE_ABS = 25600
 
 
 def run(n_tuples: int = 1 << 18, p_bits: int = 12, domain: int = 1 << 22,
@@ -31,8 +38,9 @@ def run(n_tuples: int = 1 << 18, p_bits: int = 12, domain: int = 1 << 22,
     d32 = Ditto(hll.make_spec(p_bits, 32), chunk_size=chunk)
     d32.num_pri = 32  # (tune_pe_counts gives 16; force the strawman)
     impl32 = d32.generate([0])[0]
+    space = SearchSpace(m_candidates=(m,), chunk_sizes=(chunk,))
 
-    rows = []
+    rows, tuned_recs = [], {}
     for alpha in ALPHAS:
         tuples = zipf_tuples(n_tuples, domain, alpha, seed=11)
         stream = d.chunk(tuples)
@@ -57,18 +65,32 @@ def run(n_tuples: int = 1 << 18, p_bits: int = 12, domain: int = 1 << 22,
         # absorbs it and reproduces the intended picks.
         row["Ditto picks X"] = d.select(
             tuples[:, 0], tolerance=0.1,
-            sample_frac=min(1.0, 25600 / n_tuples))
+            sample_frac=min(1.0, SAMPLE_ABS / n_tuples))
+        # autotuned plan over the same sample budget, run for real
+        sample = analyzer.sample_dataset(
+            tuples, frac=min(1.0, SAMPLE_ABS / n_tuples))
+        tuned = autotune(d.spec, sample, space=space, tolerance=0.1)
+        _, stats_t = d.generate([tuned.num_sec])[0].run(stream)
+        cycles_t = float(np.asarray(stats_t.modeled_cycles).sum())
+        row["autotuned X"] = tuned.num_sec
+        row["thpt autotuned vs default"] = round(base_cycles / cycles_t, 2)
+        tuned_recs[str(alpha)] = tuned.to_record()
         rows.append(row)
-    print_table("Fig 7: HLL speedup over 16P baseline vs Zipf alpha "
-                "(modeled cycles)", rows)
-    save_json("fig7_secpe_sweep", rows)
+    title = ("Fig 7: HLL speedup over 16P baseline vs Zipf alpha "
+             "(modeled cycles)")
+    print_table(title, rows)
     extreme = rows[-1]
     assert extreme["16P+15S"] > 8.0, extreme      # paper: up to 12x
     assert extreme["32P"] < 2.5, extreme          # more PriPEs don't help
     assert rows[0]["Ditto picks X"] <= 1          # uniform needs no SecPEs
     assert extreme["Ditto picks X"] >= 8          # extreme skew needs many
-    return rows
+    # the tuner never loses to the fixed X=0 default (acceptance: >= 1
+    # at alpha=1.5)
+    for r in rows:
+        assert r["thpt autotuned vs default"] >= 0.99, r
+    assert rows[ALPHAS.index(1.5)]["thpt autotuned vs default"] >= 1.0
+    return bench_record("fig7", title, rows, extra={"autotune": tuned_recs})
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

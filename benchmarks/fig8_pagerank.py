@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.apps import pagerank as PR
 from repro.core.framework import Ditto
 from repro.data import graphs as G
@@ -53,12 +53,12 @@ def run(num_vertices: int = 1 << 12, chunk: int = 4096):
             "MTEPS ditto (modeled)": round(n_edges / cx, 2),
             "speedup": round(c0 / cx, 2),
         })
-    print_table("Fig 8 analogue: PageRank MTEPS vs graph skew", rows)
-    save_json("fig8_pagerank", rows)
+    title = "Fig 8 analogue: PageRank MTEPS vs graph skew"
+    print_table(title, rows)
     assert rows[0]["speedup"] <= rows[-1]["speedup"] + 1e-9
     assert rows[-1]["speedup"] > 1.5
-    return rows
+    return bench_record("fig8", title, rows)
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

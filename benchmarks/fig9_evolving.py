@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.apps import histo
 from repro.core.framework import Ditto
 from repro.data.zipf import evolving_zipf_tuples
@@ -51,15 +51,15 @@ def run(num_bins: int = 512, domain: int = 1 << 20, chunk: int = 4096,
             "thpt 16P+15S resched": round(c0 / c1, 2),
             "thpt 16P+15S no-resched": round(c0 / c2, 2),
         })
-    print_table("Fig 9 analogue: evolving skew (alpha=3, modeled)", rows)
-    save_json("fig9_evolving", rows)
+    title = "Fig 9 analogue: evolving skew (alpha=3, modeled)"
+    print_table(title, rows)
     for r in rows:
         assert r["thpt 16P+15S resched"] >= 1.0 or \
             r["thpt 16P+15S no-resched"] >= 1.0, r
     # re-scheduling fires more often at short intervals
     assert rows[0]["reschedules"] >= rows[-1]["reschedules"]
-    return rows
+    return bench_record("fig9", title, rows)
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

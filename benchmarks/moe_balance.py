@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.models import moe as MOE
 
 
@@ -39,13 +39,13 @@ def run(num_experts: int = 16, top_k: int = 2, d_model: int = 64,
             "max designated load": int(aux["max_designated_load"]),
             "max slot load": int(aux["max_slot_load"]),
         })
-    print_table("Ditto-MoE: drop rate vs secondary expert slots "
-                "(skewed router, capacity for uniform load)", rows)
-    save_json("moe_balance", rows)
+    title = ("Ditto-MoE: drop rate vs secondary expert slots "
+             "(skewed router, capacity for uniform load)")
+    print_table(title, rows)
     assert rows[-1]["drop rate"] < rows[0]["drop rate"]
     assert rows[-1]["max slot load"] <= rows[0]["max slot load"]
-    return rows
+    return bench_record("moe_balance", title, rows)
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

@@ -16,7 +16,7 @@ import json
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
 V5E_PEAK = 197e12
@@ -128,6 +128,8 @@ def to_markdown(rows: List[Dict]) -> str:
 
 
 def run():
+    title = "Roofline from dry-run artifacts (v5e three-term model)"
+    per_mesh, cand = {}, None
     for mesh in ("single", "multi"):
         cells = load_cells(mesh)
         if not cells:
@@ -135,6 +137,7 @@ def run():
                   "PYTHONPATH=src python -m repro.launch.dryrun)")
             continue
         rows = table_rows(cells)
+        per_mesh[mesh] = rows
         print_table(f"Roofline ({mesh}-pod mesh, {len(rows)} cells)", rows,
                     cols=["arch", "shape", "status", "compute_s", "memory_s",
                           "collective_s", "dominant", "MFU-proxy", "useful",
@@ -154,10 +157,17 @@ def run():
             (DRYRUN_DIR.parent / "roofline.md").write_text(
                 to_markdown(rows) + "\n\ncandidates: "
                 + json.dumps(cand) + "\n")
-            save_json("roofline_single", rows)
         assert n_err == 0, f"{n_err} dry-run errors on mesh={mesh}"
-    return True
+    if not per_mesh:
+        return bench_record(
+            "roofline", title, [], status="skip",
+            extra={"reason": "no dry-run artifacts under experiments/dryrun;"
+                             " run PYTHONPATH=src python -m repro.launch"
+                             ".dryrun first"})
+    return bench_record(
+        "roofline", title, per_mesh.get("single", []),
+        extra={"multi": per_mesh.get("multi", []), "candidates": cand})
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

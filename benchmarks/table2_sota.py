@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.apps import hhd, histo, hll
 from repro.core import baseline as BL
 from repro.core.framework import Ditto
@@ -79,10 +79,10 @@ def run(n_tuples: int = 1 << 17, chunk: int = 4096):
             "Thro. skew X=0": round(cb / c0, 2),
             f"Thro. skew Ditto": round(cb / cx, 2),
         })
-    print_table("Table II analogue: routing vs replication "
-                "(uniform + alpha=2 skew; throughput relative to the "
-                "replicated baseline)", rows)
-    save_json("table2_sota", rows)
+    title = ("Table II analogue: routing vs replication "
+             "(uniform + alpha=2 skew; throughput relative to the "
+             "replicated baseline)")
+    print_table(title, rows)
     # expected per-app saving mirrors paper Table II's structure: state
     # that partitions (HISTO bins, HLL registers) saves ~M x; linear
     # sketches (HHD/CMS) cannot partition their width -> 1x (paper: 1x).
@@ -92,8 +92,8 @@ def run(n_tuples: int = 1 << 17, chunk: int = 4096):
         assert r["Thro. uniform"] >= 0.9, r   # parity on uniform
         assert r["Thro. skew Ditto"] >= 2 * r["Thro. skew X=0"], r
         assert r["Thro. skew Ditto"] >= 0.7, r
-    return rows
+    return bench_record("table2", title, rows)
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

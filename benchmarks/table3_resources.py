@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_table, save_json
+from benchmarks.common import bench_record, print_table, save_record
 from repro.apps import hll
 from repro.core import baseline as BL
 from repro.core.analyzer import buffer_capacity_fraction
@@ -36,12 +36,12 @@ def run(p_bits: int = 12):
             "profiler bytes": profiler_bytes,
             "distinct-capacity frac": round(buffer_capacity_fraction(m, x), 3),
         })
-    print_table("Table III analogue: memory per HLL variant", rows)
-    save_json("table3_resources", rows)
+    title = "Table III analogue: memory per HLL variant"
+    print_table(title, rows)
     fracs = [r["distinct-capacity frac"] for r in rows]
     assert fracs[0] == 1.0 and abs(fracs[-1] - 16 / 31) < 1e-3
-    return rows
+    return bench_record("table3", title, rows, extra={"p_bits": p_bits})
 
 
 if __name__ == "__main__":
-    run()
+    save_record(run())

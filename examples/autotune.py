@@ -1,0 +1,82 @@
+"""Autotuner walkthrough: search (M, X, chunk, backend), then serve
+multiple tenants under their own tuned plans (DESIGN.md §6).
+
+The paper picks only X offline (Eq. 2); ``repro.tune.autotune`` also
+searches the PriPE count around the Eq. 1 balance, cross-checks the Eq. 2
+pick against the X extremes with the port-limited cycle model, and breaks
+the remaining ties (chunk size, kernel backend) by measured wall-clock.
+The result is a TunedPlan the executors accept directly.
+
+    PYTHONPATH=src python examples/autotune.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import histo
+from repro.core import analyzer, executor
+from repro.core.profiler import workload_hist
+from repro.data.zipf import zipf_tuples
+from repro.serve.engine import StreamEngine
+from repro.tune import SearchSpace, autotune, static_plan_from_hist
+
+NUM_BINS, DOMAIN = 512, 1 << 20
+N = 1 << 16
+
+
+def factory(m):
+    return histo.make_spec(NUM_BINS, DOMAIN, m)
+
+
+# ---- offline tuning per skew level (M searched around Eq. 1's M*=16) ----
+print("== autotune over (M, X, chunk, backend), model pass ==")
+for alpha in (0.0, 1.5, 3.0):
+    data = zipf_tuples(N, DOMAIN, alpha, seed=1)
+    sample = analyzer.sample_dataset(data, frac=0.1)
+    tuned = autotune(factory, sample, tolerance=0.1)
+    print(f"alpha={alpha}: -> {tuned.num_pri}P+{tuned.num_sec}S, "
+          f"chunk={tuned.chunk_size}, backend={tuned.kernel_backend}, "
+          f"modeled speedup vs paper default "
+          f"{tuned.modeled_speedup_vs_default:.2f}x")
+
+# ---- measured tiebreak: chunk size + backend by wall-clock --------------
+data = zipf_tuples(N, DOMAIN, 1.5, seed=1)
+tuned = autotune(
+    factory(16), data,
+    space=SearchSpace(m_candidates=(16,), chunk_sizes=(1024, 4096)),
+    tolerance=0.1, measure=True)
+print(f"\nmeasured tiebreak picked chunk={tuned.chunk_size} "
+      f"({tuned.measured_s * 1e3:.2f} ms/pass); candidates:")
+for c in tuned.measured_candidates:
+    print(f"  {c}")
+
+# ---- the TunedPlan drops into the executor as-is ------------------------
+run = executor.make_executor(tuned.spec, tuned)
+stream = data.reshape(-1, tuned.chunk_size, 2)
+merged, stats = run(stream, tuned.route_plan)
+ref = histo.oracle(data[:, 0], NUM_BINS, DOMAIN, tuned.num_pri)
+np.testing.assert_array_equal(np.asarray(merged), ref)
+print(f"\nexecutor under TunedPlan: oracle-exact, modeled cycles "
+      f"{float(np.asarray(stats.modeled_cycles).sum()):.0f}")
+
+# ---- multi-tenant serving: per-tenant tuned plans -----------------------
+# the engine architecture (M, X, chunk) is ONE vmapped executor, tuned
+# once; what is per-tenant is the ROUTE PLAN -- each tenant's sampled
+# workload is scheduled onto the shared architecture, so tenants with
+# different hot keys balance differently inside the same scan
+spec16 = factory(16)
+engine = StreamEngine(spec16, tuned=tuned, max_streams=4)
+rids = {}
+for tenant, (alpha, seed) in enumerate([(0.5, 7), (2.0, 8), (2.0, 9)]):
+    tdata = zipf_tuples(N // 4, DOMAIN, alpha, seed=seed)
+    tsample = analyzer.sample_dataset(tdata, frac=0.2)
+    dst, _, _ = spec16.pre(jnp.asarray(tsample), engine.num_pri)
+    tplan = static_plan_from_hist(workload_hist(dst, engine.num_pri),
+                                  engine.num_pri, engine.num_sec)
+    rids[tenant] = engine.submit(tdata, plan=tplan)
+out = engine.flush()
+print("\nStreamEngine with per-tenant tuned plans:")
+for tenant, rid in rids.items():
+    merged, stats = out[rid]
+    print(f"  tenant {tenant}: histogram total "
+          f"{int(np.asarray(merged).sum())}, modeled cycles "
+          f"{float(np.asarray(stats.modeled_cycles).sum()):.0f}")

@@ -11,7 +11,7 @@ from repro.core.analyzer import (analyze_skew, buffer_capacity_fraction,
                                  secpes_for_workload, select_implementation)
 from repro.core.distributed import make_distributed_executor, run_stream
 from repro.core.executor import (make_executor, make_multistream_executor,
-                                 make_static_plan)
+                                 make_static_plan, stack_plans)
 from repro.core.framework import Ditto, GeneratedImpl, tune_pe_counts
 from repro.core.mapper import apply_schedule, init_plan, occurrence_rank, redirect
 from repro.core.merger import merge_buffers
@@ -22,7 +22,7 @@ from repro.core.types import DittoSpec, ExecStats, RoutePlan
 __all__ = [
     "DittoSpec", "RoutePlan", "ExecStats", "Ditto", "GeneratedImpl",
     "make_executor", "make_multistream_executor", "make_static_plan",
-    "make_distributed_executor",
+    "stack_plans", "make_distributed_executor",
     "run_stream", "schedule_secpes",
     "post_plan_max_load", "analyze_skew", "secpes_for_workload",
     "select_implementation", "buffer_capacity_fraction", "tune_pe_counts",

@@ -66,13 +66,13 @@ def init_state(spec: DittoSpec, num_pri: int, num_sec: int) -> ExecState:
 
 def make_executor(
     spec: DittoSpec,
-    num_pri: int,
-    num_sec: int,
-    chunk_size: int,
+    num_pri: Any,
+    num_sec: Optional[int] = None,
+    chunk_size: Optional[int] = None,
     *,
     profile_chunks: int = 1,
     threshold: float = 0.0,
-    mem_width_tuples: int = 8,
+    mem_width_tuples: Optional[int] = None,
     static_plan: bool = False,
     kernel_backend: Optional[str] = None,
 ) -> Callable[..., tuple[Any, ExecStats]]:
@@ -81,11 +81,18 @@ def make_executor(
     Args:
       spec: application specification (Listing-2 analogue).
       num_pri/num_sec: M PriPEs and X SecPEs (the generated variant).
+        ``num_pri`` alternatively accepts a ``repro.tune.TunedPlan`` (any
+        object with ``executor_kwargs()``), which supplies num_pri/num_sec/
+        chunk_size/mem_width_tuples/kernel_backend in one bundle; any of
+        those passed explicitly (e.g. ``chunk_size=8192``) override the
+        plan's value.  Pass ``tuned.route_plan`` to the returned fn to
+        start in RUN mode under the tuned static plan.
       chunk_size: tuples per chunk (= profiling window granularity).
       profile_chunks: chunks of profiling before a plan is generated.
       threshold: throughput-drop fraction that triggers re-scheduling
         (0.0 disables re-scheduling, the paper's escape hatch).
-      mem_width_tuples: tuples the memory interface feeds per cycle (Eq. 1 W).
+      mem_width_tuples: tuples the memory interface feeds per cycle
+        (Eq. 1 W); default 8.
       static_plan: skip runtime profiling; caller passes a pre-made plan
         (used by tests and by the offline path once a plan is known).
       kernel_backend: pin the PE-update kernel realization ('jnp' |
@@ -96,6 +103,22 @@ def make_executor(
     Returns fn(tuples, [plan]) -> (merged_buffers, ExecStats-per-chunk).
       ``tuples`` is [num_chunks, chunk_size, ...]; the leading axis is scanned.
     """
+    if hasattr(num_pri, "executor_kwargs"):
+        tuned = num_pri.executor_kwargs()
+        num_pri = tuned["num_pri"]
+        if num_sec is None:
+            num_sec = tuned["num_sec"]
+        if chunk_size is None:
+            chunk_size = tuned["chunk_size"]
+        if mem_width_tuples is None:
+            mem_width_tuples = tuned["mem_width_tuples"]
+        if kernel_backend is None:
+            kernel_backend = tuned["kernel_backend"]
+    if num_sec is None or chunk_size is None:
+        raise TypeError("make_executor needs (num_pri, num_sec, chunk_size) "
+                        "or a TunedPlan in place of num_pri")
+    if mem_width_tuples is None:
+        mem_width_tuples = 8
     if spec.merge is not None and threshold > 0.0:
         raise ValueError(
             f"{spec.name}: non-decomposable applications keep per-PE output "
@@ -211,13 +234,15 @@ def make_executor(
 
 def make_multistream_executor(
     spec: DittoSpec,
-    num_pri: int,
-    num_sec: int,
-    chunk_size: int,
+    num_pri: Any,
+    num_sec: Optional[int] = None,
+    chunk_size: Optional[int] = None,
     **kw,
 ) -> Callable[..., tuple[Any, ExecStats]]:
     """Vmapped multi-stream executor: S independent chunk streams in one
-    scan.
+    scan.  ``num_pri`` accepts a TunedPlan exactly like ``make_executor``
+    (per-tenant route plans go in as the stacked ``plans`` argument; see
+    ``stack_plans``).
 
     The single-stream executor is vmapped over a leading streams axis, so
     every stream carries its OWN profiler/scheduler state (plan, mode,
@@ -251,3 +276,16 @@ def make_static_plan(num_pri: int, num_sec: int, workload) -> RoutePlan:
     analyzer's sample doubles as the profiling window)."""
     assignment = scheduler.schedule_secpes(jnp.asarray(workload), num_sec)
     return mapper.apply_schedule(mapper.init_plan(num_pri, num_sec), assignment)
+
+
+def stack_plans(plans) -> RoutePlan:
+    """Stack per-stream RoutePlans into the leading-[num_streams] pytree the
+    multi-stream executor takes (per-tenant plans in serve.StreamEngine).
+    All plans must share (num_pri, num_sec)."""
+    plans = list(plans)
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    shapes = {(p.num_pri, p.num_sec) for p in plans}
+    if len(shapes) != 1:
+        raise ValueError(f"plans disagree on (num_pri, num_sec): {shapes}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plans)

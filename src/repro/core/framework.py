@@ -60,6 +60,7 @@ class Ditto:
                  chunk_size: int = 4096, profile_chunks: int = 1,
                  threshold: float = 0.0, kernel_backend: Optional[str] = None):
         self.spec = spec
+        self.mem_width_bytes = mem_width_bytes
         n_pre, n_pri, w = tune_pe_counts(mem_width_bytes, spec.tuple_bytes,
                                          spec.ii_pre, spec.ii_pe)
         self.num_pre = n_pre
@@ -101,6 +102,28 @@ class Ditto:
               online: bool = False) -> GeneratedImpl:
         x = self.select(keys, tolerance=tolerance, online=online)
         return self.generate([x])[0]
+
+    def tune(self, keys: np.ndarray, *, tolerance: float = 0.1,
+             sample_frac: float = 0.001, measure: bool = False,
+             chunk_sizes: Optional[Sequence[int]] = None,
+             backends: Optional[Sequence[Optional[str]]] = None, **kw):
+        """Perfmodel-guided autotune at this framework's M (DESIGN.md §6).
+
+        ``select`` is the paper's Eq. 2 X pick alone; ``tune`` additionally
+        cross-checks it against the X extremes with the port-limited cycle
+        model and (optionally) searches chunk size / kernel backend by
+        measured wall-clock.  Returns a repro.tune.TunedPlan that
+        ``make_executor`` / ``StreamEngine`` accept directly.
+        """
+        from repro.tune import SearchSpace, autotune
+        sample = analyzer.sample_dataset(np.asarray(keys), frac=sample_frac)
+        space = SearchSpace(
+            m_candidates=(self.num_pri,),
+            chunk_sizes=tuple(chunk_sizes or (self.chunk_size,)),
+            backends=tuple(backends or (self.kernel_backend,)))
+        return autotune(self.spec, sample,
+                        mem_width_bytes=self.mem_width_bytes, space=space,
+                        tolerance=tolerance, measure=measure, **kw)
 
     def chunk(self, data: np.ndarray) -> jnp.ndarray:
         """Reshape a flat tuple stream into [num_chunks, chunk_size, ...] for

@@ -167,6 +167,7 @@ class DecodeEngine:
 class StreamRequest:
     rid: int
     chunks: np.ndarray            # [num_chunks, chunk_size, ...]
+    plan: Optional[Any] = None    # per-tenant RoutePlan (static RUN mode)
 
 
 class StreamEngine:
@@ -180,13 +181,34 @@ class StreamEngine:
     returns per-request (merged_buffers, ExecStats).  Padding replays the
     first stream of the group and is discarded -- streams are independent
     under vmap, so tenants never observe each other.
+
+    Configuration comes either from explicit (num_pri, num_sec, chunk_size)
+    or from a ``repro.tune.TunedPlan`` (``tuned=``).  Tenants may attach
+    their own tuned static plan per request (``submit(data, plan=...)``,
+    a RoutePlan or a TunedPlan tuned at the engine's configuration); those
+    streams start in RUN mode under their plan, while plan-less streams
+    profile online.  The two kinds batch separately.
     """
 
-    def __init__(self, spec, *, num_pri: int, num_sec: int, chunk_size: int,
+    def __init__(self, spec, *, num_pri: Optional[int] = None,
+                 num_sec: Optional[int] = None,
+                 chunk_size: Optional[int] = None, tuned=None,
                  max_streams: int = 8, kernel_backend: Optional[str] = None,
                  **executor_kw):
         from repro.core import executor as core_executor
+        if tuned is not None:
+            kw = tuned.executor_kwargs()
+            num_pri = kw["num_pri"] if num_pri is None else num_pri
+            num_sec = kw["num_sec"] if num_sec is None else num_sec
+            chunk_size = kw["chunk_size"] if chunk_size is None else chunk_size
+            kernel_backend = kernel_backend or kw["kernel_backend"]
+            executor_kw.setdefault("mem_width_tuples",
+                                   kw["mem_width_tuples"])
+        if None in (num_pri, num_sec, chunk_size):
+            raise TypeError("StreamEngine needs num_pri/num_sec/chunk_size "
+                            "or tuned=TunedPlan")
         self.spec = spec
+        self.num_pri, self.num_sec = num_pri, num_sec
         self.chunk_size = chunk_size
         self.max_streams = max_streams
         self._run_streams = core_executor.make_multistream_executor(
@@ -195,27 +217,44 @@ class StreamEngine:
         self._next_rid = 0
         self.pending: List[StreamRequest] = []
 
-    def submit(self, data: np.ndarray) -> int:
+    def submit(self, data: np.ndarray, plan=None) -> int:
         """Enqueue a flat tuple stream [n, ...]; n must be a multiple of
-        chunk_size (ragged tails are the data pipeline's job)."""
+        chunk_size (ragged tails are the data pipeline's job).  ``plan``
+        optionally pins this tenant to a static RoutePlan (or the
+        ``route_plan`` of a TunedPlan tuned at this engine's (M, X))."""
         n = len(data)
         if n % self.chunk_size:
             raise ValueError(f"stream length {n} not a multiple of "
                              f"chunk {self.chunk_size}")
+        if plan is not None and hasattr(plan, "route_plan"):
+            if (plan.num_pri, plan.num_sec) != (self.num_pri, self.num_sec):
+                raise ValueError(
+                    f"TunedPlan is for ({plan.num_pri}P, {plan.num_sec}S); "
+                    f"engine runs ({self.num_pri}P, {self.num_sec}S)")
+            plan = plan.route_plan
+        if plan is not None and \
+                (plan.num_pri, plan.num_sec) != (self.num_pri, self.num_sec):
+            raise ValueError(
+                f"plan is for ({plan.num_pri}P, {plan.num_sec}S); "
+                f"engine runs ({self.num_pri}P, {self.num_sec}S)")
         chunks = np.asarray(data).reshape(-1, self.chunk_size,
                                           *data.shape[1:])
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append(StreamRequest(rid, chunks))
+        self.pending.append(StreamRequest(rid, chunks, plan))
         return rid
 
     def flush(self) -> Dict[int, tuple]:
         """Run every pending request; returns {rid: (merged, stats)}."""
+        from repro.core.executor import stack_plans
         out: Dict[int, tuple] = {}
         while self.pending:
-            n_chunks = self.pending[0].chunks.shape[0]
+            head = self.pending[0]
+            n_chunks = head.chunks.shape[0]
+            planned = head.plan is not None
             batch = [r for r in self.pending
-                     if r.chunks.shape[0] == n_chunks][:self.max_streams]
+                     if r.chunks.shape[0] == n_chunks
+                     and (r.plan is not None) == planned][:self.max_streams]
             batch_ids = {r.rid for r in batch}
             self.pending = [r for r in self.pending
                             if r.rid not in batch_ids]
@@ -224,7 +263,12 @@ class StreamEngine:
             if pad > 0:
                 stack = np.concatenate(
                     [stack, np.repeat(stack[:1], pad, axis=0)])
-            merged, stats = self._run_streams(jnp.asarray(stack))
+            if planned:
+                plans = stack_plans([r.plan for r in batch]
+                                    + [batch[0].plan] * pad)
+                merged, stats = self._run_streams(jnp.asarray(stack), plans)
+            else:
+                merged, stats = self._run_streams(jnp.asarray(stack))
             for i, req in enumerate(batch):
                 out[req.rid] = (
                     jax.tree.map(lambda a, i=i: np.asarray(a[i]), merged),

@@ -1,0 +1,19 @@
+"""Perfmodel-guided autotuner over (M, X, chunk size, kernel backend).
+
+Public API:
+  autotune, autotune_from_workload, TunedPlan   -- repro.tune.tuner
+  SearchSpace, Candidate, default_space         -- repro.tune.space
+
+See DESIGN.md §6 for how the two-pass search (cycle model first, measured
+wall-clock tiebreak) extends the paper's Eq. 2 implementation selection.
+"""
+from repro.tune.space import Candidate, SearchSpace, default_space
+from repro.tune.tuner import (TunedPlan, autotune, autotune_from_workload,
+                              predict_cycles_per_tuple,
+                              static_plan_from_hist)
+
+__all__ = [
+    "Candidate", "SearchSpace", "default_space",
+    "TunedPlan", "autotune", "autotune_from_workload",
+    "predict_cycles_per_tuple", "static_plan_from_hist",
+]

@@ -1,0 +1,62 @@
+"""Search space of the perfmodel-guided autotuner (DESIGN.md §6).
+
+The paper fixes everything except X: M comes from the Eq. 1 balance, the
+chunk size is the profiling-window granularity, and the kernel realization
+is whatever the target dictates.  The tuner re-opens those axes:
+
+  * ``m_candidates``  -- PriPE counts around the Eq. 1 balanced point M*
+                         (halving under-provisions the ii-bound, doubling
+                         buys nothing once the port bound dominates);
+  * ``chunk_sizes``   -- profiling-window sizes.  The port-limited cycle
+                         model is chunk-invariant, so chunk size is decided
+                         by *measured* wall-clock (jit/dispatch overheads);
+  * ``backends``      -- kernel realizations for the PE update
+                         (kernels/dispatch names; None = auto).
+
+X is not enumerated here: per (M, workload) the Eq. 2 analyzer generates
+the candidate SecPE count, and the tuner cross-checks it against the two
+extremes X = 0 and X = M-1 (see tuner.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One fully-specified configuration point."""
+
+    num_pri: int
+    num_sec: int
+    chunk_size: int
+    kernel_backend: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Axes the tuner explores; see module docstring for semantics."""
+
+    m_candidates: tuple
+    chunk_sizes: tuple = (4096,)
+    backends: tuple = (None,)
+
+    def __post_init__(self):
+        if not self.m_candidates:
+            raise ValueError("m_candidates must be non-empty")
+        if any(m < 1 for m in self.m_candidates):
+            raise ValueError(f"PriPE counts must be >= 1: {self.m_candidates}")
+        if not self.chunk_sizes:
+            raise ValueError("chunk_sizes must be non-empty")
+
+
+def default_space(m_star: int, *, search_m: bool = True,
+                  chunk_sizes: Sequence[int] = (4096,),
+                  backends: Sequence[Optional[str]] = (None,)) -> SearchSpace:
+    """The default neighborhood of the Eq. 1 balanced point ``m_star``."""
+    if search_m:
+        ms = tuple(sorted({max(2, m_star // 2), m_star, 2 * m_star}))
+    else:
+        ms = (m_star,)
+    return SearchSpace(m_candidates=ms, chunk_sizes=tuple(chunk_sizes),
+                       backends=tuple(backends))

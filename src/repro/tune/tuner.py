@@ -1,0 +1,296 @@
+"""Perfmodel-guided autotuner (DESIGN.md §6).
+
+The paper's workflow picks only X (SecPE count, Eq. 2) offline and fixes
+M, the chunk size and the kernel realization by hand.  ``autotune`` searches
+all four axes in two passes:
+
+  1. **model pass** (cheap): for every (M, X) candidate, schedule the
+     sampled workload (core.scheduler) and score the port-limited cycles
+     per tuple with ``core.perfmodel.chunk_cycles``.  Candidates within
+     ``tolerance`` of the best predicted throughput tie; ties resolve to
+     the fewest SecPEs (distinct buffer capacity M/(M+X), paper §V-C),
+     then the fewest PriPEs.
+  2. **measured pass** (optional): the top-k surviving (M, X) points are
+     crossed with the chunk-size and kernel-backend axes -- which the
+     cycle model cannot rank, being chunk-invariant and
+     realization-agnostic -- and each is built into a real executor and
+     timed on the sample; the fastest wall-clock wins.
+
+The X candidates per M are {0, Eq. 2 pick, M-1}: the analyzer IS the
+paper's X selector, the tuner only cross-checks it against the extremes
+(no skew handling / fully oblivious).
+
+Inputs are either a raw dataset sample (the paper's offline 0.1% sample)
+or a live profiler carry -- the per-PriPE workload histogram accumulated
+by the streaming executor's PROFILE mode (``ExecStats.workload`` or the
+scan carry's ``profile_hist``).
+
+The result is a ``TunedPlan``: ``core.make_executor``,
+``core.make_multistream_executor`` and ``serve.StreamEngine`` accept it
+directly in place of the (num_pri, num_sec, chunk_size) triple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyzer, perfmodel, scheduler
+from repro.core import executor as core_executor
+from repro.core.profiler import workload_hist
+from repro.core.types import DittoSpec, RoutePlan
+from repro.tune.space import Candidate, SearchSpace, default_space
+
+SpecOrFactory = Union[DittoSpec, Callable[[int], DittoSpec]]
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """The tuner's output: a full executor configuration + static plan.
+
+    ``route_plan`` is the SecPE schedule generated from the sampled
+    workload (the offline path's pre-made plan); pass it to the executor
+    to start in RUN mode, or omit it to let the runtime profiler re-derive
+    a plan online.
+
+    ``cycles_per_tuple`` / ``default_cycles_per_tuple`` are the
+    port-limited model predictions for the tuned configuration and for the
+    paper-default configuration (Eq. 1 M, X = 0) on the same workload --
+    the autotuned-vs-default comparison every benchmark reports.
+    """
+
+    num_pri: int
+    num_sec: int
+    chunk_size: int
+    mem_width_tuples: int
+    kernel_backend: Optional[str]
+    route_plan: Optional[RoutePlan]
+    cycles_per_tuple: float
+    default_cycles_per_tuple: float
+    measured_s: Optional[float] = None
+    measured_candidates: Optional[tuple] = None
+    source: str = "model"            # 'model' | 'measured'
+    spec: Optional[DittoSpec] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def modeled_throughput(self) -> float:
+        """Predicted tuples/cycle of the tuned configuration."""
+        return 1.0 / self.cycles_per_tuple
+
+    @property
+    def default_throughput(self) -> float:
+        """Predicted tuples/cycle of the paper-default (Eq. 1 M, X=0)."""
+        return 1.0 / self.default_cycles_per_tuple
+
+    @property
+    def modeled_speedup_vs_default(self) -> float:
+        return self.default_cycles_per_tuple / self.cycles_per_tuple
+
+    def executor_kwargs(self) -> dict:
+        """The (num_pri, num_sec, chunk_size, ...) bundle the executors
+        unpack when handed a TunedPlan (core.executor.make_executor)."""
+        return dict(num_pri=self.num_pri, num_sec=self.num_sec,
+                    chunk_size=self.chunk_size,
+                    mem_width_tuples=self.mem_width_tuples,
+                    kernel_backend=self.kernel_backend)
+
+    def to_record(self) -> dict:
+        """JSON-able summary for the benchmark reports (docs/benchmarks.md)."""
+        return {
+            "num_pri": self.num_pri,
+            "num_sec": self.num_sec,
+            "chunk_size": self.chunk_size,
+            "mem_width_tuples": self.mem_width_tuples,
+            "kernel_backend": self.kernel_backend,
+            "cycles_per_tuple": round(self.cycles_per_tuple, 6),
+            "default_cycles_per_tuple": round(
+                self.default_cycles_per_tuple, 6),
+            "modeled_speedup_vs_default": round(
+                self.modeled_speedup_vs_default, 4),
+            "measured_s": self.measured_s,
+            "measured_candidates": (list(self.measured_candidates)
+                                    if self.measured_candidates else None),
+            "source": self.source,
+        }
+
+
+def predict_cycles_per_tuple(hist, num_sec: int, mem_width_tuples: int,
+                             ii_pe: int) -> float:
+    """Model pass score: port-limited cycles per tuple after scheduling
+    ``num_sec`` SecPEs onto the workload histogram (lower is better;
+    1/W is the port-bound optimum)."""
+    hist = jnp.asarray(hist)
+    assignment = scheduler.schedule_secpes(hist, num_sec)
+    max_load = scheduler.post_plan_max_load(hist.astype(jnp.float32),
+                                            assignment)
+    total = float(jnp.maximum(hist.sum(), 1))
+    cycles = float(perfmodel.chunk_cycles(total, max_load,
+                                          mem_width_tuples, ii_pe))
+    return cycles / total
+
+
+def static_plan_from_hist(hist, num_pri: int, num_sec: int) -> RoutePlan:
+    """Offline plan: sampled workload -> greedy schedule -> mapping table
+    (hist-first argument order over core.executor.make_static_plan)."""
+    return core_executor.make_static_plan(num_pri, num_sec, hist)
+
+
+def _as_tuple_rows(sample) -> np.ndarray:
+    sample = np.asarray(sample)
+    if sample.ndim == 1:              # bare keys -> single-column tuples
+        sample = sample[:, None]
+    return sample
+
+
+def _hist_for(spec: DittoSpec, sample: np.ndarray, num_pri: int) -> jax.Array:
+    dst, _, _ = spec.pre(jnp.asarray(sample), num_pri)
+    return workload_hist(dst, num_pri)
+
+
+def _measure_wallclock(spec: DittoSpec, cand: Candidate, plan: RoutePlan,
+                       sample: np.ndarray, mem_width_tuples: int,
+                       measure_chunks: int, iters: int) -> float:
+    """Wall-clock of a real executor on the sample (steady-state RUN mode
+    under the candidate's static plan), seconds per pass."""
+    need = cand.chunk_size * measure_chunks
+    reps = -(-need // len(sample))
+    data = np.tile(sample, (reps, 1))[:need]
+    stream = jnp.asarray(
+        data.reshape(measure_chunks, cand.chunk_size, *data.shape[1:]))
+    run = core_executor.make_executor(
+        spec, cand.num_pri, cand.num_sec, cand.chunk_size,
+        mem_width_tuples=mem_width_tuples, static_plan=True,
+        kernel_backend=cand.kernel_backend)
+    jax.block_until_ready(run(stream, plan))          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run(stream, plan)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def autotune(
+    spec_or_factory: SpecOrFactory,
+    sample=None,
+    *,
+    workload=None,
+    mem_width_bytes: int = 64,
+    space: Optional[SearchSpace] = None,
+    tolerance: float = 0.1,
+    top_k: int = 2,
+    measure: bool = False,
+    measure_chunks: int = 4,
+    measure_iters: int = 2,
+) -> TunedPlan:
+    """Search (M, X, chunk size, kernel backend) for one workload.
+
+    Args:
+      spec_or_factory: a DittoSpec (M search disabled -- app state is sized
+        for one M), or a factory ``m -> DittoSpec`` to search PriPE counts.
+      sample: raw tuple sample ([n] keys or [n, cols] tuples), the paper's
+        offline 0.1% sample.  Required unless ``workload`` is given.
+      workload: live profiler carry -- an [M] per-PriPE workload histogram
+        (``ExecStats.workload`` summed, or the executor's profile_hist).
+        Fixes M to len(workload) and disables the measured pass.
+      mem_width_bytes: memory-interface width (Eq. 1 numerator).
+      space: SearchSpace override; default = Eq. 1 neighborhood of M*.
+      tolerance: Eq. 2 tolerance AND the model-pass tie band -- candidates
+        within ``(1+tolerance)`` of the best predicted cycles tie and
+        resolve to the cheapest (fewest SecPEs, then fewest PriPEs).
+      top_k: (M, X) points carried into the measured pass.
+      measure: run the measured wall-clock pass (needs ``sample``).
+      measure_chunks/measure_iters: measured-pass stream size and timing
+        repetitions.
+
+    Returns a TunedPlan (see class docstring).
+    """
+    if sample is None and workload is None:
+        raise ValueError("autotune needs a dataset sample or a workload hist")
+    if isinstance(spec_or_factory, DittoSpec):
+        fixed = spec_or_factory
+        factory = lambda m: fixed                          # noqa: E731
+        search_m = False
+        probe = fixed
+    else:
+        factory = spec_or_factory
+        search_m = True
+        probe = factory(1)
+    w = max(1, mem_width_bytes // probe.tuple_bytes)
+    m_star = w * probe.ii_pe
+
+    if workload is not None:
+        workload = np.asarray(workload)
+        space = space or SearchSpace(m_candidates=(len(workload),))
+        if space.m_candidates != (len(workload),):
+            raise ValueError(
+                "a workload carry fixes M to its own length "
+                f"{len(workload)}; got m_candidates={space.m_candidates}")
+        measure = False
+    else:
+        sample = _as_tuple_rows(sample)
+        space = space or default_space(m_star, search_m=search_m)
+
+    # ---- pass 1: port-limited model over (M, X) ---------------------------
+    scored = []   # (cpt, num_sec, num_pri, spec_m, hist)
+    for m in space.m_candidates:
+        spec_m = factory(m)
+        hist = (jnp.asarray(workload) if workload is not None
+                else _hist_for(spec_m, sample, m))
+        x_eq2 = int(analyzer.secpes_for_workload(hist, tolerance))
+        for x in sorted({0, x_eq2, m - 1}):
+            cpt = predict_cycles_per_tuple(hist, x, w, spec_m.ii_pe)
+            scored.append((cpt, x, m, spec_m, hist))
+    best_cpt = min(s[0] for s in scored)
+    band = [s for s in scored if s[0] <= best_cpt * (1.0 + tolerance)]
+    band.sort(key=lambda s: (s[1], s[2], s[0]))   # fewest X, then fewest M
+
+    # paper-default reference: Eq. 1 M, X = 0, on the same workload
+    m_def = (len(workload) if workload is not None else m_star)
+    spec_def = factory(m_def)
+    hist_def = (jnp.asarray(workload) if workload is not None
+                else _hist_for(spec_def, sample, m_def))
+    default_cpt = predict_cycles_per_tuple(hist_def, 0, w, spec_def.ii_pe)
+
+    def finish(cpt, x, m, spec_m, hist, chunk, backend, measured_s=None,
+               measured_candidates=None, source="model"):
+        return TunedPlan(
+            num_pri=m, num_sec=x, chunk_size=chunk, mem_width_tuples=w,
+            kernel_backend=backend,
+            route_plan=static_plan_from_hist(hist, m, x),
+            cycles_per_tuple=cpt, default_cycles_per_tuple=default_cpt,
+            measured_s=measured_s, measured_candidates=measured_candidates,
+            source=source, spec=spec_m)
+
+    if not measure:
+        cpt, x, m, spec_m, hist = band[0]
+        return finish(cpt, x, m, spec_m, hist,
+                      space.chunk_sizes[0], space.backends[0])
+
+    # ---- pass 2: wall-clock of top-k x chunk x backend --------------------
+    results = []
+    for cpt, x, m, spec_m, hist in band[:top_k]:
+        plan = static_plan_from_hist(hist, m, x)
+        for chunk in space.chunk_sizes:
+            for backend in space.backends:
+                cand = Candidate(m, x, chunk, backend)
+                s = _measure_wallclock(spec_m, cand, plan, sample, w,
+                                       measure_chunks, measure_iters)
+                results.append((s, cpt, x, m, spec_m, hist, chunk, backend))
+    results.sort(key=lambda r: r[0])
+    s, cpt, x, m, spec_m, hist, chunk, backend = results[0]
+    measured = tuple(
+        {"num_pri": r[3], "num_sec": r[2], "chunk_size": r[6],
+         "kernel_backend": r[7], "seconds": round(r[0], 6)}
+        for r in results)
+    return finish(cpt, x, m, spec_m, hist, chunk, backend, measured_s=s,
+                  measured_candidates=measured, source="measured")
+
+
+def autotune_from_workload(spec: DittoSpec, workload, **kw) -> TunedPlan:
+    """Tune from a live profiler carry (an [M] workload histogram)."""
+    return autotune(spec, workload=workload, **kw)

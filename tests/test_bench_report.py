@@ -1,0 +1,124 @@
+"""Benchmark reporting layer: record/report schema round-trips, validator
+rejections, and the harness writing a schema-valid BENCH_results.json
+(docs/benchmarks.md)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:         # benchmarks/ is a repo-root package
+    sys.path.insert(0, str(REPO))
+
+from benchmarks import common  # noqa: E402
+
+
+def _record(**over):
+    rec = common.bench_record(
+        "fake", "a fake bench", [{"alpha": 1.5, "speedup": 2.0}],
+        extra={"note": "x"})
+    rec.update(over)
+    return rec
+
+
+def test_record_roundtrip(tmp_path):
+    rec = _record()
+    p = common.save_record(rec, results_dir=tmp_path)
+    assert p == tmp_path / "fake.json"
+    loaded = json.loads(p.read_text())
+    assert common.validate_record(loaded) == rec
+
+
+def test_report_roundtrip(tmp_path):
+    rec = _record()
+    out = tmp_path / "BENCH_results.json"
+    common.write_report({"fake": rec}, out, fast=True)
+    payload = common.validate_report(json.loads(out.read_text()))
+    assert payload["schema_version"] == common.SCHEMA_VERSION
+    assert payload["fast"] is True
+    assert payload["benches"]["fake"]["rows"] == rec["rows"]
+
+
+@pytest.mark.parametrize("breaker", [
+    {"schema_version": 999},
+    {"status": "wat"},
+    {"rows": "not-a-list"},
+    {"rows": [["not", "a", "dict"]]},
+    {"rows": [{"cell": [1, 2]}]},            # structures belong in extra
+    {"extra": None},
+    {"seconds": "3.1"},
+])
+def test_validate_record_rejects(breaker):
+    with pytest.raises(common.SchemaError):
+        common.validate_record(_record(**breaker))
+
+
+def test_validate_record_rejects_missing_key():
+    rec = _record()
+    del rec["title"]
+    with pytest.raises(common.SchemaError):
+        common.validate_record(rec)
+
+
+def test_validate_report_rejects_mismatched_name(tmp_path):
+    payload = {
+        "schema_version": common.SCHEMA_VERSION, "created": "t",
+        "jax_backend": "cpu", "fast": False,
+        "benches": {"other": _record()},     # record says bench='fake'
+    }
+    with pytest.raises(common.SchemaError):
+        common.validate_report(payload)
+
+
+def test_bench_record_rejects_bad_rows_at_build_time():
+    with pytest.raises(common.SchemaError):
+        common.bench_record("x", "t", [{"cell": {"nested": 1}}])
+
+
+def test_harness_writes_schema_valid_report(tmp_path, monkeypatch):
+    """`benchmarks.run --only table3 --fast` end-to-end: aggregate report
+    validates, covers the requested bench, and mirrors the per-bench file."""
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path / "bench")
+    out = tmp_path / "BENCH_results.json"
+    rc = bench_run.main(["--only", "table3", "--fast", "--out", str(out)])
+    assert rc == 0
+    payload = common.validate_report(json.loads(out.read_text()))
+    rec = payload["benches"]["table3"]
+    assert rec["status"] == "ok" and rec["rows"]
+    assert rec["seconds"] >= 0
+    mirrored = json.loads((tmp_path / "bench" / "table3.json").read_text())
+    assert common.validate_record(mirrored)["rows"] == rec["rows"]
+
+
+def test_harness_records_failures(tmp_path, monkeypatch):
+    """A crashing bench lands in the report as status='failed' with the
+    traceback in extra, and the harness exits non-zero."""
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path / "bench")
+
+    def boom():
+        raise RuntimeError("kaboom")
+
+    monkeypatch.setitem(bench_run.BENCHES, "table3", boom)
+    out = tmp_path / "BENCH_results.json"
+    rc = bench_run.main(["--only", "table3", "--out", str(out)])
+    assert rc == 1
+    rec = common.validate_report(
+        json.loads(out.read_text()))["benches"]["table3"]
+    assert rec["status"] == "failed"
+    assert "kaboom" in rec["extra"]["error"]
+
+
+def test_committed_report_is_schema_valid():
+    """The BENCH_results.json checked into the repo root must validate --
+    it is the perf trajectory the driver reads across PRs."""
+    from benchmarks import run as bench_run
+    p = REPO / "BENCH_results.json"
+    assert p.exists(), "run PYTHONPATH=src python -m benchmarks.run --fast"
+    payload = common.validate_report(json.loads(p.read_text()))
+    missing = set(bench_run.BENCHES) - set(payload["benches"])
+    assert not missing, f"report missing benches: {missing}"

@@ -1,0 +1,63 @@
+"""Docs-layer integrity: every `DESIGN.md §N` reference in the tree
+resolves to a committed section, and the benchmark schema docs stay in
+sync with the validator."""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.M)
+REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+CODE_DIRS = ("src", "benchmarks", "examples", "tests")
+
+
+def _design_sections() -> set:
+    return {int(n) for n in SECTION_RE.findall(
+        (REPO / "DESIGN.md").read_text())}
+
+
+def test_design_md_exists_with_sections():
+    assert (REPO / "DESIGN.md").exists()
+    sections = _design_sections()
+    assert sections, "DESIGN.md has no '## §N' sections"
+    # numbering is contiguous from 1 so stale higher refs can't alias
+    assert sections == set(range(1, max(sections) + 1)), sections
+
+
+def test_every_design_reference_resolves():
+    sections = _design_sections()
+    dangling = {}
+    for d in CODE_DIRS:
+        for p in sorted((REPO / d).rglob("*.py")):
+            for n in REF_RE.findall(p.read_text()):
+                if int(n) not in sections:
+                    dangling.setdefault(f"§{n}", []).append(
+                        str(p.relative_to(REPO)))
+    assert not dangling, f"references to missing DESIGN.md sections: {dangling}"
+    # the tree does reference the file (the test is not vacuous)
+    refs = sum(len(REF_RE.findall(p.read_text()))
+               for d in CODE_DIRS for p in (REPO / d).rglob("*.py"))
+    assert refs >= 8, f"expected >=8 DESIGN.md references, found {refs}"
+
+
+def test_readme_covers_commands():
+    text = (REPO / "README.md").read_text()
+    assert "python -m pytest -x -q" in text          # tier-1
+    assert "python -m benchmarks.run --fast" in text  # bench smoke
+    assert "DESIGN.md" in text and "docs/benchmarks.md" in text
+
+
+def test_benchmarks_doc_matches_schema_version():
+    from benchmarks import common
+    text = (REPO / "docs" / "benchmarks.md").read_text()
+    assert f'"schema_version": {common.SCHEMA_VERSION}' in text, (
+        "docs/benchmarks.md sample record out of sync with SCHEMA_VERSION")
+    # every bench the harness knows is documented
+    from benchmarks import run as bench_run
+    for name in bench_run.BENCHES:
+        assert f"`{name}`" in text, f"docs/benchmarks.md missing {name}"

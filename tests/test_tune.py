@@ -1,0 +1,204 @@
+"""Autotuner contract (DESIGN.md §6): Eq. 1 recovery on uniform data,
+Eq. 2 agreement under skew, the live-carry path, and TunedPlan's direct
+acceptance by the executors and the stream engine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import histo
+from repro.core import analyzer, executor
+from repro.core.profiler import workload_hist
+from repro.data.zipf import zipf_tuples
+from repro.serve.engine import StreamEngine
+from repro.tune import (SearchSpace, TunedPlan, autotune,
+                        autotune_from_workload, default_space,
+                        static_plan_from_hist)
+
+BINS, DOMAIN = 64, 1 << 16
+GOLDEN_SEED = 123
+
+
+def factory(m):
+    return histo.make_spec(BINS, DOMAIN, m)
+
+
+@pytest.fixture(scope="module")
+def uniform_sample():
+    return zipf_tuples(8192, DOMAIN, 0.0, seed=GOLDEN_SEED)
+
+
+@pytest.fixture(scope="module")
+def zipf_sample():
+    return zipf_tuples(8192, DOMAIN, 1.5, seed=GOLDEN_SEED)
+
+
+def test_uniform_recovers_eq1_balance(uniform_sample):
+    """Uniform workload -> the Eq. 1 balanced config: M = W*II_pe, X = 0
+    (mem_width_bytes=64, tuple_bytes=8 -> W=8; ii_pe=2 -> M*=16)."""
+    plan = autotune(factory, uniform_sample, mem_width_bytes=64)
+    assert plan.num_pri == 8 * factory(1).ii_pe == 16
+    assert plan.num_sec == 0
+    assert plan.modeled_speedup_vs_default == pytest.approx(1.0)
+    # port-bound optimum is 1/W = 0.125 cycles/tuple; uniform sampling
+    # noise keeps it within the tolerance band of that optimum
+    assert plan.cycles_per_tuple == pytest.approx(0.125, rel=0.11)
+
+
+def test_zipf_matches_analyzer_secpes(zipf_sample):
+    """Zipf alpha=1.5 -> the tuner allocates exactly the Eq. 2 SecPEs
+    (analyzer.secpes_for_workload on the same sampled histogram)."""
+    spec = factory(16)
+    plan = autotune(spec, zipf_sample, tolerance=0.1)
+    dst, _, _ = spec.pre(jnp.asarray(zipf_sample), 16)
+    hist = workload_hist(dst, 16)
+    expected = int(analyzer.secpes_for_workload(hist, 0.1))
+    assert 0 < expected < 16
+    assert plan.num_sec == expected
+    assert plan.modeled_speedup_vs_default > 1.5
+
+
+def test_workload_carry_path(zipf_sample):
+    """A live profiler carry (the [M] workload hist) tunes without raw
+    tuples and matches the sample-driven pick at the same M."""
+    spec = factory(16)
+    dst, _, _ = spec.pre(jnp.asarray(zipf_sample), 16)
+    hist = np.asarray(workload_hist(dst, 16))
+    plan = autotune_from_workload(spec, hist, tolerance=0.1)
+    ref = autotune(spec, zipf_sample, tolerance=0.1)
+    assert (plan.num_pri, plan.num_sec) == (ref.num_pri, ref.num_sec)
+    # carry fixes M: a mismatched space is rejected
+    with pytest.raises(ValueError):
+        autotune_from_workload(spec, hist,
+                               space=SearchSpace(m_candidates=(8,)))
+
+
+def test_autotune_requires_input():
+    with pytest.raises(ValueError):
+        autotune(factory(16))
+
+
+def test_measured_tiebreak(zipf_sample):
+    plan = autotune(factory(16), zipf_sample, tolerance=0.1, measure=True,
+                    space=SearchSpace((16,), chunk_sizes=(256, 512)),
+                    measure_chunks=2, measure_iters=1)
+    assert plan.source == "measured"
+    assert plan.measured_s is not None and plan.measured_s > 0
+    assert plan.chunk_size in (256, 512)
+    assert len(plan.measured_candidates) == 4  # 2 (M,X) survivors x 2 chunks
+
+
+def test_executor_accepts_tuned_plan(zipf_sample):
+    spec = factory(16)
+    plan = autotune(spec, zipf_sample, tolerance=0.1,
+                    space=SearchSpace((16,), chunk_sizes=(512,)))
+    run = executor.make_executor(spec, plan)
+    stream = jnp.asarray(zipf_sample.reshape(-1, plan.chunk_size, 2))
+    merged, stats = run(stream, plan.route_plan)
+    ref = histo.oracle(zipf_sample[:, 0], BINS, DOMAIN, 16)
+    np.testing.assert_array_equal(np.asarray(merged), ref)
+    # tuned plan's modeled cycles beat the X=0 default on the same stream
+    run0 = executor.make_executor(spec, 16, 0, plan.chunk_size)
+    _, stats0 = run0(stream)
+    assert (np.asarray(stats.modeled_cycles).sum()
+            <= np.asarray(stats0.modeled_cycles).sum())
+    # explicit kwargs override the TunedPlan's values per field
+    run_big = executor.make_executor(spec, plan, chunk_size=1024)
+    merged_big, _ = run_big(
+        jnp.asarray(zipf_sample.reshape(-1, 1024, 2)), plan.route_plan)
+    np.testing.assert_array_equal(np.asarray(merged_big), ref)
+    # explicit kwargs still reject an incomplete signature
+    with pytest.raises(TypeError):
+        executor.make_executor(spec, 16)
+
+
+def test_multistream_accepts_tuned_plan(zipf_sample):
+    spec = factory(16)
+    plan = autotune(spec, zipf_sample, tolerance=0.1,
+                    space=SearchSpace((16,), chunk_sizes=(512,)))
+    run_s = executor.make_multistream_executor(spec, plan)
+    streams = jnp.stack([
+        jnp.asarray(zipf_sample.reshape(-1, 512, 2)),
+        jnp.asarray(zipf_sample[::-1].copy().reshape(-1, 512, 2))])
+    plans = executor.stack_plans([plan.route_plan, plan.route_plan])
+    merged, stats = run_s(streams, plans)
+    ref = histo.oracle(zipf_sample[:, 0], BINS, DOMAIN, 16)
+    np.testing.assert_array_equal(np.asarray(merged[0]), ref)
+    np.testing.assert_array_equal(np.asarray(merged[1]), ref)
+
+
+def test_stack_plans_validates():
+    with pytest.raises(ValueError):
+        executor.stack_plans([])
+    p16 = static_plan_from_hist(np.ones(16), 16, 4)
+    p8 = static_plan_from_hist(np.ones(8), 8, 4)
+    with pytest.raises(ValueError):
+        executor.stack_plans([p16, p8])
+
+
+def test_stream_engine_per_tenant_plans(zipf_sample):
+    """Tenants under their own static plans match running each alone."""
+    spec = factory(16)
+    tuned = autotune(spec, zipf_sample, tolerance=0.1,
+                     space=SearchSpace((16,), chunk_sizes=(512,)))
+    engine = StreamEngine(spec, tuned=tuned, max_streams=4)
+    datasets = {alpha: zipf_tuples(2048, DOMAIN, alpha, seed=GOLDEN_SEED + i)
+                for i, alpha in enumerate((0.5, 2.0))}
+    rids = {}
+    for alpha, data in datasets.items():
+        dst, _, _ = spec.pre(jnp.asarray(data), 16)
+        tplan = static_plan_from_hist(workload_hist(dst, 16),
+                                      engine.num_pri, engine.num_sec)
+        rids[alpha] = engine.submit(data, plan=tplan)
+    out = engine.flush()
+    assert not engine.pending
+    for alpha, data in datasets.items():
+        merged, _ = out[rids[alpha]]
+        np.testing.assert_array_equal(
+            merged, histo.oracle(data[:, 0], BINS, DOMAIN, 16))
+    # plan-less submissions still work (online profiling path)
+    rid = engine.submit(zipf_sample)
+    merged, _ = engine.flush()[rid]
+    np.testing.assert_array_equal(
+        merged, histo.oracle(zipf_sample[:, 0], BINS, DOMAIN, 16))
+
+
+def test_stream_engine_rejects_mismatched_plan(zipf_sample):
+    spec = factory(16)
+    engine = StreamEngine(spec, num_pri=16, num_sec=4, chunk_size=512)
+    wrong = static_plan_from_hist(np.ones(16), 16, 2)   # X mismatch
+    with pytest.raises(ValueError):
+        engine.submit(zipf_sample, plan=wrong)
+
+
+def test_default_space_shape():
+    sp = default_space(16)
+    assert sp.m_candidates == (8, 16, 32)
+    assert default_space(16, search_m=False).m_candidates == (16,)
+    with pytest.raises(ValueError):
+        SearchSpace(m_candidates=())
+
+
+def test_ditto_tune_wrapper(zipf_sample):
+    """Ditto.tune fixes M to the framework's Eq. 1 pick and returns a plan
+    its own executors accept."""
+    from repro.core.framework import Ditto
+    d = Ditto(factory(16), chunk_size=512)
+    plan = d.tune(zipf_sample[:, 0], sample_frac=0.5)
+    assert plan.num_pri == d.num_pri
+    assert plan.chunk_size == d.chunk_size
+    run = executor.make_executor(d.spec, plan)
+    merged, _ = run(d.chunk(zipf_sample), plan.route_plan)
+    np.testing.assert_array_equal(
+        np.asarray(merged), histo.oracle(zipf_sample[:, 0], BINS, DOMAIN, 16))
+
+
+def test_tuned_plan_record_is_jsonable(zipf_sample):
+    import json
+    plan = autotune(factory(16), zipf_sample, tolerance=0.1)
+    rec = json.loads(json.dumps(plan.to_record()))
+    assert rec["num_pri"] == 16 and rec["source"] == "model"
+    kw = plan.executor_kwargs()
+    assert set(kw) == {"num_pri", "num_sec", "chunk_size",
+                       "mem_width_tuples", "kernel_backend"}
