@@ -98,7 +98,12 @@ def run(t: int = 4096, bins: int = 512, dim: int = 128, iters: int = 3):
     return bench_record(
         "backend_sweep", title, rows,
         extra={"backends": list(backends), "executor_e2e": e2e_rows,
-               "autotune": tuned.to_record()})
+               "autotune": tuned.to_record(),
+               "headline": {
+                   "tuned_backend": tuned.kernel_backend,
+                   "e2e_best_seconds":
+                       round(min(r["seconds"] for r in e2e_rows), 4),
+               }})
 
 
 if __name__ == "__main__":

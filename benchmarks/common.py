@@ -98,7 +98,40 @@ def validate_report(payload: Any) -> Dict[str, Any]:
         if rec["bench"] != name:
             raise SchemaError(f"benches[{name!r}] holds record for "
                               f"{rec['bench']!r}")
+    if "summary" in payload:
+        summary = payload["summary"]
+        if not isinstance(summary, dict):
+            raise SchemaError("report['summary'] must be a dict")
+        for name, entry in summary.items():
+            if name not in payload["benches"]:
+                raise SchemaError(f"summary[{name!r}] has no bench record")
+            if not isinstance(entry, dict):
+                raise SchemaError(f"summary[{name!r}] must be a dict")
+            for k, v in entry.items():
+                if not isinstance(k, str) or not isinstance(v, _SCALAR):
+                    raise SchemaError(
+                        f"summary[{name!r}][{k!r}] must be a JSON scalar")
     return payload
+
+
+def make_summary(records: Dict[str, Dict[str, Any]]) -> Dict[str, Any]:
+    """Compact per-bench headline block for the aggregate report.
+
+    One flat scalar dict per bench -- status, seconds, and whatever the
+    bench promoted into ``extra['headline']`` (its key metrics, e.g.
+    tuples/sec) -- so cross-PR trajectory tooling diffs throughput by
+    reading ``report['summary']`` alone, never the full records.
+    """
+    summary: Dict[str, Any] = {}
+    for name, rec in records.items():
+        entry: Dict[str, Any] = {"status": rec["status"],
+                                 "seconds": rec.get("seconds")}
+        head = rec.get("extra", {}).get("headline")
+        if isinstance(head, dict):
+            entry.update({k: v for k, v in head.items()
+                          if isinstance(k, str) and isinstance(v, _SCALAR)})
+        summary[name] = entry
+    return summary
 
 
 def save_record(rec: Dict[str, Any],
@@ -114,7 +147,8 @@ def save_record(rec: Dict[str, Any],
 
 def write_report(records: Dict[str, Dict[str, Any]],
                  path: Optional[Path] = None, *, fast: bool = False) -> Path:
-    """Write the schema-versioned top-level report (BENCH_results.json)."""
+    """Write the schema-versioned top-level report (BENCH_results.json),
+    including the compact per-bench ``summary`` headline section."""
     import jax
     payload = {
         "schema_version": SCHEMA_VERSION,
@@ -122,6 +156,7 @@ def write_report(records: Dict[str, Dict[str, Any]],
         "jax_backend": jax.default_backend(),
         "fast": bool(fast),
         "benches": records,
+        "summary": make_summary(records),
     }
     validate_report(payload)
     p = Path(path) if path is not None else REPORT_PATH

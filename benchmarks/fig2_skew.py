@@ -79,7 +79,13 @@ def run(n_tuples: int = 1 << 18, num_bins: int = 512,
     return bench_record(
         "fig2", title, rows,
         extra={"heatmap": {str(a): heat[a] for a in ALPHAS},
-               "autotune": tuned_recs})
+               "autotune": tuned_recs,
+               "headline": {
+                   "thpt_vs_uniform_alpha3":
+                       rows[-1]["throughput vs uniform"],
+                   "tuned_vs_default_alpha1.5":
+                       rows[ALPHAS.index(1.5)]["thpt autotuned vs default"],
+               }})
 
 
 if __name__ == "__main__":

@@ -89,7 +89,13 @@ def run(n_tuples: int = 1 << 18, p_bits: int = 12, domain: int = 1 << 22,
     for r in rows:
         assert r["thpt autotuned vs default"] >= 0.99, r
     assert rows[ALPHAS.index(1.5)]["thpt autotuned vs default"] >= 1.0
-    return bench_record("fig7", title, rows, extra={"autotune": tuned_recs})
+    return bench_record(
+        "fig7", title, rows,
+        extra={"autotune": tuned_recs,
+               "headline": {
+                   "speedup_16p15s_alpha3": extreme["16P+15S"],
+                   "ditto_x_alpha3": extreme["Ditto picks X"],
+               }})
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ import traceback
 
 from benchmarks import (backend_sweep, common, fig2_skew, fig7_secpe_sweep,
                         fig8_pagerank, fig9_evolving, moe_balance, roofline,
-                        table2_sota, table3_resources)
+                        serving_session, table2_sota, table3_resources)
 
 BENCHES = {
     "fig2": fig2_skew.run,
@@ -32,6 +32,7 @@ BENCHES = {
     "moe_balance": moe_balance.run,
     "backend_sweep": backend_sweep.run,
     "roofline": roofline.run,
+    "serving_session": serving_session.run,
 }
 
 FAST_KW = {
@@ -46,6 +47,7 @@ FAST_KW = {
     "fig9": dict(total_chunks=128),
     "moe_balance": dict(tokens=512, d_model=32, d_ff=64, group=256),
     "backend_sweep": dict(t=1024, iters=1),
+    "serving_session": dict(n_tuples=1 << 13, rounds=3, chunk=1024),
 }
 
 
@@ -84,6 +86,13 @@ def main(argv=None):
         records[name] = rec
 
     report = common.write_report(records, args.out, fast=args.fast)
+    summary_rows = [{"bench": n, **e}
+                    for n, e in common.make_summary(records).items()]
+    cols = ["bench", "status", "seconds"] + sorted(
+        {k for r in summary_rows for k in r} - {"bench", "status", "seconds"})
+    common.print_table(
+        "summary (report['summary'] -- headline metrics per bench)",
+        summary_rows, cols=cols)
     print(f"\nwrote {report} "
           f"({len(records)} bench records, schema v{common.SCHEMA_VERSION})")
     print(f"{len(names) - len(failed)}/{len(names)} benchmarks passed"

@@ -1,6 +1,11 @@
 """All five paper applications under a Zipf sweep, with the skew analyzer
 picking the implementation per (app, dataset) -- paper Fig. 6 workflow.
 
+The stream length is deliberately NOT a multiple of the chunk size: the
+data pipeline pads the ragged tail into a masked final chunk
+(``chunk_stream(pad_tail=True)``) and the executor's validity-mask path
+makes the padding an exact no-op -- no hand-rolled tail handling.
+
 The X=0 baselines for every skew level run CONCURRENTLY through the
 multi-stream executor (one vmapped lax.scan per app, one stream per
 alpha); the analyzer-selected implementation then runs per dataset.
@@ -14,9 +19,10 @@ import numpy as np
 
 from repro.apps import dp, hhd, histo, hll, pagerank
 from repro.core import Ditto
+from repro.data.pipeline import chunk_stream
 from repro.data.zipf import zipf_tuples
 
-N = 1 << 16
+N = (1 << 16) + 777          # ragged on purpose: tail rides the mask path
 ALPHAS = (0.0, 2.0)
 APPS = {
     "HISTO": histo.make_spec(512, 1 << 20, 16),
@@ -34,14 +40,17 @@ for name, spec in APPS.items():
         data = zipf_tuples(N, 1 << 20, alpha, seed=2)
         if name == "PR":
             data[:, 0] = data[:, 0] % (1 << 12)    # vertex ids
-        datasets.append(data)
+        datasets.append(chunk_stream(data, d.chunk_size, pad_tail=True))
     # all alphas' X=0 baselines in one vmapped scan (streams = skew levels)
     baseline = d.generate([0])[0]
-    streams = jnp.stack([d.chunk(data) for data in datasets])
-    _, s0 = baseline.run_streams(streams)
-    for i, (alpha, data) in enumerate(zip(ALPHAS, datasets)):
-        x = d.select(data[:, 0], tolerance=0.05)
-        _, sx = d.generate([x])[0].run(d.chunk(data))
+    streams = jnp.stack([jnp.asarray(ts.body) for ts in datasets])
+    masks = jnp.stack([jnp.asarray(ts.mask) for ts in datasets])
+    _, s0 = baseline.run_streams(streams, mask=masks)
+    for i, (alpha, ts) in enumerate(zip(ALPHAS, datasets)):
+        keys = ts.body.reshape(-1, *ts.body.shape[2:])[:, 0][ts.mask.ravel()]
+        x = d.select(keys, tolerance=0.05)
+        _, sx = d.generate([x])[0].run(jnp.asarray(ts.body),
+                                       mask=jnp.asarray(ts.mask))
         sp = (np.asarray(s0.modeled_cycles[i]).sum()
               / np.asarray(sx.modeled_cycles).sum())
         print(f"{name:6s} {alpha:5.1f} {x:3d} {sp:8.2f}x")

@@ -10,8 +10,10 @@ Public API:
 from repro.core.analyzer import (analyze_skew, buffer_capacity_fraction,
                                  secpes_for_workload, select_implementation)
 from repro.core.distributed import make_distributed_executor, run_stream
-from repro.core.executor import (make_executor, make_multistream_executor,
-                                 make_static_plan, stack_plans)
+from repro.core.executor import (ExecState, ResumableExecutor, make_executor,
+                                 make_multistream_executor,
+                                 make_resumable_executor, make_static_plan,
+                                 stack_plans, with_plan)
 from repro.core.framework import Ditto, GeneratedImpl, tune_pe_counts
 from repro.core.mapper import apply_schedule, init_plan, occurrence_rank, redirect
 from repro.core.merger import merge_buffers
@@ -21,7 +23,8 @@ from repro.core.types import DittoSpec, ExecStats, RoutePlan
 
 __all__ = [
     "DittoSpec", "RoutePlan", "ExecStats", "Ditto", "GeneratedImpl",
-    "make_executor", "make_multistream_executor", "make_static_plan",
+    "make_executor", "make_multistream_executor", "make_resumable_executor",
+    "ExecState", "ResumableExecutor", "with_plan", "make_static_plan",
     "stack_plans", "make_distributed_executor",
     "run_stream", "schedule_secpes",
     "post_plan_max_load", "analyze_skew", "secpes_for_workload",

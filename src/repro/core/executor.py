@@ -11,6 +11,23 @@ the scan carry, so plan generation and SecPE re-scheduling happen *between
 chunks without interrupting PriPEs*, mirroring §IV-B: on a re-schedule the
 SecPE shadow buffers are merged into their PriPEs and reset before the next
 plan re-assigns them.
+
+Two execution shapes share the same chunk step (``_build_chunk_step``):
+
+  * ``make_executor`` -- the one-shot closure (init -> scan -> merge), the
+    shape every benchmark and test uses;
+  * ``make_resumable_executor`` -- ``ExecState`` as a first-class
+    input/output that survives across calls, for serving layers that
+    suspend a stream mid-flight and resume it later
+    (``serve.SessionEngine``, DESIGN.md §8).  ``merge_state`` is a
+    non-destructive snapshot: SecPE shadow buffers stay intact so the
+    stream continues after a mid-stream query.
+
+Both accept an optional per-tuple **validity mask** alongside each chunk
+(the ragged-tail path of ``data.pipeline.chunk_stream``): masked-out
+tuples are routed to sentinel PEs that every kernel backend drops, so
+they touch no buffer, no profiler histogram and no round-robin counter --
+a padded chunk is bit-identical to a shorter one.
 """
 from __future__ import annotations
 
@@ -64,6 +81,172 @@ def init_state(spec: DittoSpec, num_pri: int, num_sec: int) -> ExecState:
     )
 
 
+def with_plan(state: ExecState, plan: RoutePlan) -> ExecState:
+    """Seed a state with a pre-made plan and start it in RUN mode."""
+    return dataclasses.replace(state, plan=plan, mode=jnp.int32(RUN_MODE))
+
+
+def _resolve_config(num_pri, num_sec, chunk_size, mem_width_tuples,
+                    kernel_backend, who: str):
+    """Normalize (num_pri | TunedPlan, ...) into explicit executor knobs."""
+    if hasattr(num_pri, "executor_kwargs"):
+        tuned = num_pri.executor_kwargs()
+        num_pri = tuned["num_pri"]
+        if num_sec is None:
+            num_sec = tuned["num_sec"]
+        if chunk_size is None:
+            chunk_size = tuned["chunk_size"]
+        if mem_width_tuples is None:
+            mem_width_tuples = tuned["mem_width_tuples"]
+        if kernel_backend is None:
+            kernel_backend = tuned["kernel_backend"]
+    if num_sec is None or chunk_size is None:
+        raise TypeError(f"{who} needs (num_pri, num_sec, chunk_size) "
+                        "or a TunedPlan in place of num_pri")
+    if mem_width_tuples is None:
+        mem_width_tuples = 8
+    return num_pri, num_sec, chunk_size, mem_width_tuples, kernel_backend
+
+
+def _build_chunk_step(spec: DittoSpec, num_pri: int, num_sec: int,
+                      chunk_size: int, *, profile_chunks: int,
+                      threshold: float, mem_width_tuples: int,
+                      static_plan: bool, pe_update) -> Callable:
+    """The lax.scan body shared by every executor shape.
+
+    The scanned xs is ``(chunk, mask)`` where ``mask`` is either ``None``
+    (dense chunk, the common case -- None has no pytree leaves, so the same
+    scan handles it) or a bool[chunk_size] validity mask.  Masked-out
+    tuples are routed to out-of-bounds-high sentinel ids (dst -> M,
+    eff -> M+X) that the histogram / round-robin / kernel scatters all
+    drop, so they are bit-exact no-ops on every backend.
+    """
+    num_pe = num_pri + num_sec
+
+    def chunk_step(state: ExecState, xs):
+        chunk, mask = xs
+        # `live` gates every carry update that counts chunks: a FULLY
+        # masked chunk (batch-width padding) must leave the profiling
+        # window, monitor EMA and mode machine exactly as it found them.
+        live = None if mask is None else mask.any()
+        dst, idx, value = spec.pre(chunk, num_pri)
+        if mask is not None:
+            # dst sentinel M: out-of-range for the workload hist scatter
+            # (dropped) and for the occurrence-rank one-hot (no match, so
+            # rr_base never advances on padding).
+            dst = jnp.where(mask, dst, jnp.int32(num_pri))
+        workload = profiler.workload_hist(dst, num_pri)
+
+        # --- data routing: designated PE -> effective PE (mapper, Fig. 4c)
+        rank, rr_base = mapper.occurrence_rank(dst, num_pri, state.rr_base)
+        eff = mapper.redirect(state.plan, dst, rank)
+        if mask is not None:
+            # eff sentinel num_pe (out-of-bounds HIGH, never -1: jnp .at[]
+            # normalizes negative indices onto the last PE): dropped by
+            # every realization -- jnp scatters drop OOB updates, the
+            # kernel layer's valid checks reject eff >= num_pe, and the
+            # one-hot row matches (DP cursor-append, Pallas cms) match
+            # nothing.
+            eff = jnp.where(mask, eff, jnp.int32(num_pe))
+
+        # --- PriPE/SecPE buffer updates
+        buffers = pe_update(state.buffers, eff, idx, value)
+
+        # --- port-limited cycle model for the monitor + stats
+        eff_load = jnp.zeros((num_pe,), jnp.int32).at[eff].add(1)
+        max_load = eff_load.max()
+        cycles = perfmodel.chunk_cycles(chunk_size, max_load,
+                                        mem_width_tuples, spec.ii_pe)
+
+        if static_plan:
+            stats = ExecStats(max_load=max_load, modeled_cycles=cycles,
+                              mode=jnp.int32(RUN_MODE),
+                              rescheduled=jnp.bool_(False), workload=workload)
+            return dataclasses.replace(state, buffers=buffers, rr_base=rr_base), stats
+
+        # --- runtime profiler: PROFILE mode accumulates the workload hist
+        in_profile = state.mode == PROFILE_MODE
+        profile_hist = jnp.where(in_profile, state.profile_hist + workload,
+                                 state.profile_hist)
+        chunks_in_mode = state.chunks_in_mode + \
+            (1 if live is None else live.astype(jnp.int32))
+
+        # PROFILE -> RUN: generate + apply the SecPE scheduling plan (Fig. 5)
+        plan_ready = jnp.logical_and(in_profile, chunks_in_mode >= profile_chunks)
+        if live is not None:
+            plan_ready = jnp.logical_and(plan_ready, live)
+        assignment = scheduler.schedule_secpes(profile_hist, num_sec)
+        new_plan = mapper.apply_schedule(state.plan, assignment)
+        post_load = scheduler.post_plan_max_load(
+            profile_hist.astype(jnp.float32) / jnp.maximum(chunks_in_mode, 1),
+            assignment)
+        ref_cycles = perfmodel.chunk_cycles(chunk_size, post_load,
+                                            mem_width_tuples, spec.ii_pe)
+
+        def pick(new, old):
+            return jax.tree.map(lambda a, b: jnp.where(plan_ready, a, b), new, old)
+
+        plan = pick(new_plan, state.plan)
+        monitor = pick(
+            profiler.MonitorState(ref_cycles=ref_cycles, ema_cycles=jnp.float32(0.0)),
+            state.monitor)
+        mode = jnp.where(plan_ready, RUN_MODE, state.mode).astype(jnp.int32)
+        chunks_in_mode = jnp.where(plan_ready, 0, chunks_in_mode)
+
+        # RUN mode: throughput monitoring -> re-schedule trigger (§IV-B)
+        in_run = mode == RUN_MODE
+        monitor_on = jnp.logical_and(in_run, ~plan_ready)
+        if live is not None:
+            monitor_on = jnp.logical_and(monitor_on, live)
+        monitor = jax.tree.map(
+            lambda upd, old: jnp.where(monitor_on, upd, old),
+            profiler.monitor_update(monitor, cycles), monitor)
+        fire = jnp.logical_and(
+            jnp.logical_and(in_run, ~plan_ready),
+            profiler.should_reschedule(monitor, jnp.float32(threshold)))
+        if live is not None:
+            fire = jnp.logical_and(fire, live)
+
+        def do_reschedule(bufs):
+            merged = merger.merge_buffers(bufs, plan.assignment, num_pri, spec.combine)
+            bufs = bufs.at[:num_pri].set(merged)
+            return merger.reset_sec_buffers(bufs, num_pri, spec.combine)
+
+        if spec.merge is None:
+            buffers = jax.lax.cond(fire, do_reschedule, lambda b: b, buffers)
+        # else: non-decomposable apps keep per-PE regions; threshold=0.0
+        # (enforced above) makes `fire` statically False, and tracing
+        # merge_buffers on their custom buffer pytree would be invalid.
+        plan = jax.tree.map(
+            lambda fresh, cur: jnp.where(fire, fresh, cur),
+            mapper.init_plan(num_pri, num_sec), plan)
+        mode = jnp.where(fire, PROFILE_MODE, mode).astype(jnp.int32)
+        profile_hist = jnp.where(fire, 0, profile_hist)
+        chunks_in_mode = jnp.where(fire, 0, chunks_in_mode)
+        monitor = jax.tree.map(
+            lambda fresh, cur: jnp.where(fire, fresh, cur),
+            profiler.MonitorState.fresh(), monitor)
+
+        stats = ExecStats(max_load=max_load, modeled_cycles=cycles, mode=state.mode,
+                          rescheduled=fire, workload=workload)
+        new_state = ExecState(buffers=buffers, plan=plan, rr_base=rr_base,
+                              mode=mode, profile_hist=profile_hist,
+                              chunks_in_mode=chunks_in_mode, monitor=monitor,
+                              reschedules=state.reschedules + fire.astype(jnp.int32))
+        return new_state, stats
+
+    return chunk_step
+
+
+def _merge_state(spec: DittoSpec, num_pri: int, state: ExecState):
+    """Merged-buffer snapshot of a state (non-destructive: SecPE shadow
+    buffers are left intact, so the stream can keep running afterwards)."""
+    if spec.merge is not None:
+        return spec.merge(state.buffers, state.plan)
+    return merger.merge_buffers(state.buffers, state.plan.assignment,
+                                num_pri, spec.combine)
+
+
 def make_executor(
     spec: DittoSpec,
     num_pri: Any,
@@ -100,25 +283,88 @@ def make_executor(
         Only applies to the default pe_update (custom spec.pe_update
         callables pick their own backend).
 
-    Returns fn(tuples, [plan]) -> (merged_buffers, ExecStats-per-chunk).
-      ``tuples`` is [num_chunks, chunk_size, ...]; the leading axis is scanned.
+    Returns fn(tuples, [plan], [mask]) -> (merged_buffers, ExecStats).
+      ``tuples`` is [num_chunks, chunk_size, ...]; the leading axis is
+      scanned.  ``mask`` is an optional bool[num_chunks, chunk_size]
+      validity mask (the padded-tail path of data.pipeline.chunk_stream);
+      masked-out tuples are exact no-ops.
     """
-    if hasattr(num_pri, "executor_kwargs"):
-        tuned = num_pri.executor_kwargs()
-        num_pri = tuned["num_pri"]
-        if num_sec is None:
-            num_sec = tuned["num_sec"]
-        if chunk_size is None:
-            chunk_size = tuned["chunk_size"]
-        if mem_width_tuples is None:
-            mem_width_tuples = tuned["mem_width_tuples"]
-        if kernel_backend is None:
-            kernel_backend = tuned["kernel_backend"]
-    if num_sec is None or chunk_size is None:
-        raise TypeError("make_executor needs (num_pri, num_sec, chunk_size) "
-                        "or a TunedPlan in place of num_pri")
-    if mem_width_tuples is None:
-        mem_width_tuples = 8
+    res = make_resumable_executor(
+        spec, num_pri, num_sec, chunk_size, profile_chunks=profile_chunks,
+        threshold=threshold, mem_width_tuples=mem_width_tuples,
+        static_plan=static_plan, kernel_backend=kernel_backend,
+        _who="make_executor")
+
+    @jax.jit
+    def run(tuples, plan: Optional[RoutePlan] = None,
+            mask: Optional[Array] = None):
+        state = res.init_state()
+        if plan is not None:
+            state = with_plan(state, plan)
+        state, stats = res.scan_chunks(state, tuples, mask)
+        return _merge_state(spec, res.num_pri, state), stats
+
+    return run
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumableExecutor:
+    """A streaming executor whose scan carry is caller-owned.
+
+    The serving layer's suspend/resume primitive (DESIGN.md §8): hold an
+    ``ExecState`` per tenant stream, feed chunk batches as they arrive
+    (``run_chunks``), snapshot merged buffers mid-stream without
+    disturbing the SecPE shadow buffers (``merge_state``), and keep
+    going.  ``step`` is the raw un-jitted scan body ``(state, (chunk,
+    mask)) -> (state, stats)`` for callers that compose their own scans
+    or vmaps (e.g. the slot-stacked SessionEngine).
+    """
+
+    spec: DittoSpec
+    num_pri: int
+    num_sec: int
+    chunk_size: int
+    step: Callable = dataclasses.field(repr=False)
+    run_chunks: Callable = dataclasses.field(repr=False)
+    merge_state: Callable = dataclasses.field(repr=False)
+
+    def init_state(self) -> ExecState:
+        return init_state(self.spec, self.num_pri, self.num_sec)
+
+    def scan_chunks(self, state: ExecState, chunks, mask=None):
+        """Un-jitted run_chunks (for embedding under an outer jit/vmap)."""
+        return jax.lax.scan(self.step, state, (chunks, mask))
+
+
+def make_resumable_executor(
+    spec: DittoSpec,
+    num_pri: Any,
+    num_sec: Optional[int] = None,
+    chunk_size: Optional[int] = None,
+    *,
+    profile_chunks: int = 1,
+    threshold: float = 0.0,
+    mem_width_tuples: Optional[int] = None,
+    static_plan: bool = False,
+    kernel_backend: Optional[str] = None,
+    _who: str = "make_resumable_executor",
+) -> ResumableExecutor:
+    """The suspend/resume shape of ``make_executor`` (same knobs).
+
+    Usage:
+        res = make_resumable_executor(spec, 16, 4, 4096)
+        state = res.init_state()                    # or with_plan(state, p)
+        state, stats = res.run_chunks(state, chunks_a)       # flush 1
+        snapshot = res.merge_state(state)                    # query
+        state, stats = res.run_chunks(state, chunks_b, mask) # flush 2 (ragged)
+
+    ``run_chunks``/``merge_state`` are jitted; ``merge_state`` never
+    mutates: the same state keeps accumulating after a query.
+    """
+    (num_pri, num_sec, chunk_size, mem_width_tuples,
+     kernel_backend) = _resolve_config(num_pri, num_sec, chunk_size,
+                                       mem_width_tuples, kernel_backend,
+                                       _who)
     if spec.merge is not None and threshold > 0.0:
         raise ValueError(
             f"{spec.name}: non-decomposable applications keep per-PE output "
@@ -126,110 +372,22 @@ def make_executor(
     pe_update = spec.pe_update or partial(default_pe_update,
                                           combine=spec.combine,
                                           backend=kernel_backend)
-    num_pe = num_pri + num_sec
-
-    def chunk_step(state: ExecState, chunk):
-        dst, idx, value = spec.pre(chunk, num_pri)
-        workload = profiler.workload_hist(dst, num_pri)
-
-        # --- data routing: designated PE -> effective PE (mapper, Fig. 4c)
-        rank, rr_base = mapper.occurrence_rank(dst, num_pri, state.rr_base)
-        eff = mapper.redirect(state.plan, dst, rank)
-
-        # --- PriPE/SecPE buffer updates
-        buffers = pe_update(state.buffers, eff, idx, value)
-
-        # --- port-limited cycle model for the monitor + stats
-        eff_load = jnp.zeros((num_pe,), jnp.int32).at[eff].add(1)
-        max_load = eff_load.max()
-        cycles = perfmodel.chunk_cycles(chunk_size, max_load,
-                                        mem_width_tuples, spec.ii_pe)
-
-        if static_plan:
-            stats = ExecStats(max_load=max_load, modeled_cycles=cycles,
-                              mode=jnp.int32(RUN_MODE),
-                              rescheduled=jnp.bool_(False), workload=workload)
-            return dataclasses.replace(state, buffers=buffers, rr_base=rr_base), stats
-
-        # --- runtime profiler: PROFILE mode accumulates the workload hist
-        in_profile = state.mode == PROFILE_MODE
-        profile_hist = jnp.where(in_profile, state.profile_hist + workload,
-                                 state.profile_hist)
-        chunks_in_mode = state.chunks_in_mode + 1
-
-        # PROFILE -> RUN: generate + apply the SecPE scheduling plan (Fig. 5)
-        plan_ready = jnp.logical_and(in_profile, chunks_in_mode >= profile_chunks)
-        assignment = scheduler.schedule_secpes(profile_hist, num_sec)
-        new_plan = mapper.apply_schedule(state.plan, assignment)
-        post_load = scheduler.post_plan_max_load(
-            profile_hist.astype(jnp.float32) / jnp.maximum(chunks_in_mode, 1),
-            assignment)
-        ref_cycles = perfmodel.chunk_cycles(chunk_size, post_load,
-                                            mem_width_tuples, spec.ii_pe)
-
-        def pick(new, old):
-            return jax.tree.map(lambda a, b: jnp.where(plan_ready, a, b), new, old)
-
-        plan = pick(new_plan, state.plan)
-        monitor = pick(
-            profiler.MonitorState(ref_cycles=ref_cycles, ema_cycles=jnp.float32(0.0)),
-            state.monitor)
-        mode = jnp.where(plan_ready, RUN_MODE, state.mode).astype(jnp.int32)
-        chunks_in_mode = jnp.where(plan_ready, 0, chunks_in_mode)
-
-        # RUN mode: throughput monitoring -> re-schedule trigger (§IV-B)
-        in_run = mode == RUN_MODE
-        monitor_on = jnp.logical_and(in_run, ~plan_ready)
-        monitor = jax.tree.map(
-            lambda upd, old: jnp.where(monitor_on, upd, old),
-            profiler.monitor_update(monitor, cycles), monitor)
-        fire = jnp.logical_and(
-            jnp.logical_and(in_run, ~plan_ready),
-            profiler.should_reschedule(monitor, jnp.float32(threshold)))
-
-        def do_reschedule(bufs):
-            merged = merger.merge_buffers(bufs, plan.assignment, num_pri, spec.combine)
-            bufs = bufs.at[:num_pri].set(merged)
-            return merger.reset_sec_buffers(bufs, num_pri, spec.combine)
-
-        if spec.merge is None:
-            buffers = jax.lax.cond(fire, do_reschedule, lambda b: b, buffers)
-        # else: non-decomposable apps keep per-PE regions; threshold=0.0
-        # (enforced above) makes `fire` statically False, and tracing
-        # merge_buffers on their custom buffer pytree would be invalid.
-        plan = jax.tree.map(
-            lambda fresh, cur: jnp.where(fire, fresh, cur),
-            mapper.init_plan(num_pri, num_sec), plan)
-        mode = jnp.where(fire, PROFILE_MODE, mode).astype(jnp.int32)
-        profile_hist = jnp.where(fire, 0, profile_hist)
-        chunks_in_mode = jnp.where(fire, 0, chunks_in_mode)
-        monitor = jax.tree.map(
-            lambda fresh, cur: jnp.where(fire, fresh, cur),
-            profiler.MonitorState.fresh(), monitor)
-
-        stats = ExecStats(max_load=max_load, modeled_cycles=cycles, mode=state.mode,
-                          rescheduled=fire, workload=workload)
-        new_state = ExecState(buffers=buffers, plan=plan, rr_base=rr_base,
-                              mode=mode, profile_hist=profile_hist,
-                              chunks_in_mode=chunks_in_mode, monitor=monitor,
-                              reschedules=state.reschedules + fire.astype(jnp.int32))
-        return new_state, stats
+    step = _build_chunk_step(
+        spec, num_pri, num_sec, chunk_size, profile_chunks=profile_chunks,
+        threshold=threshold, mem_width_tuples=mem_width_tuples,
+        static_plan=static_plan, pe_update=pe_update)
 
     @jax.jit
-    def run(tuples, plan: Optional[RoutePlan] = None):
-        state = init_state(spec, num_pri, num_sec)
-        if plan is not None:
-            state = dataclasses.replace(state, plan=plan,
-                                        mode=jnp.int32(RUN_MODE))
-        state, stats = jax.lax.scan(chunk_step, state, tuples)
-        if spec.merge is not None:
-            merged = spec.merge(state.buffers, state.plan)
-        else:
-            merged = merger.merge_buffers(state.buffers, state.plan.assignment,
-                                          num_pri, spec.combine)
-        return merged, stats
+    def run_chunks(state, chunks, mask=None):
+        return jax.lax.scan(step, state, (chunks, mask))
 
-    return run
+    @jax.jit
+    def merge_state(state):
+        return _merge_state(spec, num_pri, state)
+
+    return ResumableExecutor(spec=spec, num_pri=num_pri, num_sec=num_sec,
+                             chunk_size=chunk_size, step=step,
+                             run_chunks=run_chunks, merge_state=merge_state)
 
 
 def make_multistream_executor(
@@ -250,23 +408,30 @@ def make_multistream_executor(
     fuses into one batched ``lax.scan`` -- the serving shape for many
     concurrent skewed workloads (one tenant per stream).
 
-    Returns fn(tuples, [plans]) -> (merged_buffers, ExecStats), where
+    Returns fn(tuples, [plans], [mask]) -> (merged_buffers, ExecStats):
       tuples: [num_streams, num_chunks, chunk_size, ...]
       plans:  optional RoutePlan pytree with leading [num_streams] axis
               (e.g. from stacking make_static_plan outputs); when given,
               every stream starts in RUN mode under its own plan.
+      mask:   optional bool[num_streams, num_chunks, chunk_size] validity
+              mask -- ragged streams and padded batch lanes ride through
+              as exact no-ops (serve.StreamEngine's pad-lane isolation).
     Outputs gain the same leading [num_streams] axis and are bit-identical
     to running each stream alone (integer apps; float apps up to the usual
     reduction-order caveats, which vmap does not change).
     """
     run = make_executor(spec, num_pri, num_sec, chunk_size, **kw)
     free = jax.jit(jax.vmap(lambda t: run(t)))
-    planned = jax.jit(jax.vmap(run))
+    planned = jax.jit(jax.vmap(lambda t, p: run(t, p)))
+    free_masked = jax.jit(jax.vmap(lambda t, m: run(t, mask=m)))
+    planned_masked = jax.jit(jax.vmap(lambda t, p, m: run(t, p, mask=m)))
 
-    def run_streams(tuples, plans: Optional[RoutePlan] = None):
+    def run_streams(tuples, plans: Optional[RoutePlan] = None, mask=None):
         if plans is None:
-            return free(tuples)
-        return planned(tuples, plans)
+            return free(tuples) if mask is None else free_masked(tuples, mask)
+        if mask is None:
+            return planned(tuples, plans)
+        return planned_masked(tuples, plans, mask)
 
     return run_streams
 

@@ -127,13 +127,20 @@ class Ditto:
 
     def chunk(self, data: np.ndarray) -> jnp.ndarray:
         """Reshape a flat tuple stream into [num_chunks, chunk_size, ...] for
-        the streaming executor.  Ragged tails are the data pipeline's job
-        (data/pipeline.py splits an exact multiple off and hands the tail to
-        a one-chunk executor); here exactness is required so that counting
-        semantics stay bit-exact."""
+        the streaming executor.  Exactness is required so that counting
+        semantics stay bit-exact; ragged streams go through
+        ``chunk_masked`` (the pipeline's padded-tail path)."""
         n = len(data)
         c = self.chunk_size
         if n % c:
             raise ValueError(f"stream length {n} not a multiple of chunk {c}; "
-                             "use repro.data.pipeline.chunk_stream for ragged input")
+                             "use Ditto.chunk_masked for ragged input")
         return jnp.asarray(data.reshape(-1, c, *data.shape[1:]))
+
+    def chunk_masked(self, data: np.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Any-length stream -> (chunks, mask) via the data pipeline's
+        padded-tail path; pass both to ``run(chunks, mask=mask)`` (or the
+        multi-stream/serving variants) and the padding is an exact no-op."""
+        from repro.data.pipeline import chunk_stream
+        ts = chunk_stream(np.asarray(data), self.chunk_size, pad_tail=True)
+        return jnp.asarray(ts.body), jnp.asarray(ts.mask)

@@ -2,9 +2,11 @@
 batches for LM training.
 
 The executor scans fixed-size chunks (= the paper's profiling window / the
-channel beat).  ``chunk_stream`` splits an arbitrary-length stream into an
-exact-multiple body plus a padded tail with a validity mask, so counting
-semantics stay bit-exact without host-side ragged handling.
+channel beat).  ``chunk_stream`` splits an arbitrary-length stream into
+chunks; with ``pad_tail=True`` the ragged tail becomes a masked final
+chunk (``mask`` rides alongside ``body``) that the executor's validity-
+mask path treats as an exact no-op, so counting semantics stay bit-exact
+without any host-side tail handling at the call sites.
 
 ``token_batches`` is the LM-side pipeline used by examples/train_lm.py: an
 infinite deterministic synthetic-token stream with per-host sharding -- the
@@ -21,24 +23,46 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class TupleStream:
-    """Chunked stream: body [num_chunks, chunk, ...] plus optional tail."""
+    """Chunked stream: body [num_chunks, chunk, ...] plus either a raw
+    ragged tail (``pad_tail=False``) or a validity mask covering a padded
+    final chunk (``pad_tail=True``, the executor-ready form)."""
 
-    body: np.ndarray           # [num_chunks, chunk_size, ...]
+    body: np.ndarray            # [num_chunks, chunk_size, ...]
     tail: Optional[np.ndarray]  # [tail_len, ...] or None
     chunk_size: int
+    mask: Optional[np.ndarray] = None  # bool[num_chunks, chunk_size] or None
 
     @property
     def num_tuples(self) -> int:
+        if self.mask is not None:
+            return int(self.mask.sum())
         n = self.body.shape[0] * self.body.shape[1]
         return n + (len(self.tail) if self.tail is not None else 0)
 
 
-def chunk_stream(data: np.ndarray, chunk_size: int) -> TupleStream:
+def chunk_stream(data: np.ndarray, chunk_size: int, *,
+                 pad_tail: bool = False, pad_key: int = 0) -> TupleStream:
+    """Split a flat [n, ...] stream into executor chunks.
+
+    pad_tail=False: exact-multiple ``body`` plus the raw ``tail`` (legacy
+    shape; callers hand-roll the tail).  pad_tail=True: the tail is padded
+    into a masked final chunk and ``mask`` (bool[num_chunks, chunk_size])
+    marks the real tuples -- feed ``(body, mask)`` straight to
+    ``make_executor(...)(body, mask=mask)`` / ``StreamEngine.submit`` and
+    padding is an exact no-op (core.executor's validity-mask path)."""
+    data = np.asarray(data)
     n = len(data)
     body_len = (n // chunk_size) * chunk_size
     body = data[:body_len].reshape(-1, chunk_size, *data.shape[1:])
     tail = data[body_len:] if body_len < n else None
-    return TupleStream(body=body, tail=tail, chunk_size=chunk_size)
+    if not pad_tail:
+        return TupleStream(body=body, tail=tail, chunk_size=chunk_size)
+    mask = np.ones((body.shape[0], chunk_size), bool)
+    if tail is not None:
+        padded, tail_mask = pad_tail_chunk(tail, chunk_size, pad_key)
+        body = np.concatenate([body, padded[None]], axis=0)
+        mask = np.concatenate([mask, tail_mask[None]], axis=0)
+    return TupleStream(body=body, tail=None, chunk_size=chunk_size, mask=mask)
 
 
 def pad_tail_chunk(tail: np.ndarray, chunk_size: int,

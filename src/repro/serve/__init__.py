@@ -1,4 +1,6 @@
 from repro.serve.engine import (DecodeEngine, StreamEngine, greedy_generate,
                                 prefill_cache)
+from repro.serve.session import SessionEngine, SessionStats
 
-__all__ = ["DecodeEngine", "StreamEngine", "greedy_generate", "prefill_cache"]
+__all__ = ["DecodeEngine", "StreamEngine", "SessionEngine", "SessionStats",
+           "greedy_generate", "prefill_cache"]

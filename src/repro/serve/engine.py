@@ -168,6 +168,7 @@ class StreamRequest:
     rid: int
     chunks: np.ndarray            # [num_chunks, chunk_size, ...]
     plan: Optional[Any] = None    # per-tenant RoutePlan (static RUN mode)
+    mask: Optional[np.ndarray] = None  # bool[num_chunks, chunk] (ragged tail)
 
 
 class StreamEngine:
@@ -176,11 +177,16 @@ class StreamEngine:
     mode), so a whole batch of skewed workloads shares a single lax.scan
     while every tenant keeps its own profiler/scheduler/plan carry.
 
-    Requests are whole streams; ``flush`` groups pending requests by chunk
-    count, pads the streams axis to a fixed width (stable jit shapes) and
-    returns per-request (merged_buffers, ExecStats).  Padding replays the
-    first stream of the group and is discarded -- streams are independent
-    under vmap, so tenants never observe each other.
+    Requests are whole streams of ANY length (ragged tails ride the data
+    pipeline's padded-tail mask).  ``flush`` picks the LARGEST group of
+    compatible pending requests (same chunk count, same planned/online
+    kind) each round -- not just the head's group, so one long stream at
+    the front no longer blocks a batch of short ones behind it -- pads the
+    streams axis to a fixed width (stable jit shapes) and returns
+    per-request (merged_buffers, ExecStats).  Pad lanes carry all-masked
+    zero chunks (exact no-ops in the executor's validity-mask path)
+    instead of replaying a tenant's stream, so padding does no tenant
+    work and tenants never observe each other.
 
     Configuration comes either from explicit (num_pri, num_sec, chunk_size)
     or from a ``repro.tune.TunedPlan`` (``tuned=``).  Tenants may attach
@@ -218,14 +224,11 @@ class StreamEngine:
         self.pending: List[StreamRequest] = []
 
     def submit(self, data: np.ndarray, plan=None) -> int:
-        """Enqueue a flat tuple stream [n, ...]; n must be a multiple of
-        chunk_size (ragged tails are the data pipeline's job).  ``plan``
+        """Enqueue a flat tuple stream [n, ...] of any length; a ragged
+        tail becomes a masked final chunk (exact no-op padding).  ``plan``
         optionally pins this tenant to a static RoutePlan (or the
         ``route_plan`` of a TunedPlan tuned at this engine's (M, X))."""
-        n = len(data)
-        if n % self.chunk_size:
-            raise ValueError(f"stream length {n} not a multiple of "
-                             f"chunk {self.chunk_size}")
+        from repro.data.pipeline import chunk_stream
         if plan is not None and hasattr(plan, "route_plan"):
             if (plan.num_pri, plan.num_sec) != (self.num_pri, self.num_sec):
                 raise ValueError(
@@ -237,38 +240,60 @@ class StreamEngine:
             raise ValueError(
                 f"plan is for ({plan.num_pri}P, {plan.num_sec}S); "
                 f"engine runs ({self.num_pri}P, {self.num_sec}S)")
-        chunks = np.asarray(data).reshape(-1, self.chunk_size,
-                                          *data.shape[1:])
+        data = np.asarray(data)
+        ragged = len(data) % self.chunk_size != 0
+        ts = chunk_stream(data, self.chunk_size, pad_tail=True)
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append(StreamRequest(rid, chunks, plan))
+        self.pending.append(StreamRequest(
+            rid, ts.body, plan, mask=ts.mask if ragged else None))
         return rid
+
+    def _next_batch(self) -> List[StreamRequest]:
+        """Largest compatible group of pending requests (same chunk count,
+        same planned/online kind), capped at max_streams; ties break
+        toward the oldest pending request so no group starves."""
+        groups: Dict[tuple, List[StreamRequest]] = {}
+        order: Dict[tuple, int] = {}
+        for pos, r in enumerate(self.pending):
+            key = (r.chunks.shape[0], r.plan is not None)
+            groups.setdefault(key, []).append(r)
+            order.setdefault(key, pos)
+        best = max(groups, key=lambda k: (min(len(groups[k]),
+                                              self.max_streams), -order[k]))
+        batch = groups[best][:self.max_streams]
+        batch_ids = {r.rid for r in batch}
+        self.pending = [r for r in self.pending if r.rid not in batch_ids]
+        return batch
 
     def flush(self) -> Dict[int, tuple]:
         """Run every pending request; returns {rid: (merged, stats)}."""
         from repro.core.executor import stack_plans
         out: Dict[int, tuple] = {}
         while self.pending:
-            head = self.pending[0]
-            n_chunks = head.chunks.shape[0]
-            planned = head.plan is not None
-            batch = [r for r in self.pending
-                     if r.chunks.shape[0] == n_chunks
-                     and (r.plan is not None) == planned][:self.max_streams]
-            batch_ids = {r.rid for r in batch}
-            self.pending = [r for r in self.pending
-                            if r.rid not in batch_ids]
+            batch = self._next_batch()
+            planned = batch[0].plan is not None
             stack = np.stack([r.chunks for r in batch])
             pad = self.max_streams - len(batch)
+            masked = pad > 0 or any(r.mask is not None for r in batch)
             if pad > 0:
+                # pad lanes: all-masked zero chunks, never tenant data
                 stack = np.concatenate(
-                    [stack, np.repeat(stack[:1], pad, axis=0)])
+                    [stack, np.zeros((pad, *stack.shape[1:]), stack.dtype)])
+            args = [jnp.asarray(stack)]
+            plans = None
             if planned:
                 plans = stack_plans([r.plan for r in batch]
                                     + [batch[0].plan] * pad)
-                merged, stats = self._run_streams(jnp.asarray(stack), plans)
+            if masked:
+                mask = np.stack(
+                    [r.mask if r.mask is not None
+                     else np.ones(r.chunks.shape[:2], bool) for r in batch]
+                    + [np.zeros(batch[0].chunks.shape[:2], bool)] * pad)
+                merged, stats = self._run_streams(
+                    jnp.asarray(stack), plans, mask=jnp.asarray(mask))
             else:
-                merged, stats = self._run_streams(jnp.asarray(stack))
+                merged, stats = self._run_streams(jnp.asarray(stack), plans)
             for i, req in enumerate(batch):
                 out[req.rid] = (
                     jax.tree.map(lambda a, i=i: np.asarray(a[i]), merged),

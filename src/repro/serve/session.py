@@ -1,0 +1,482 @@
+"""Continuous-batching session serving over the resumable Ditto executor
+(DESIGN.md §8).
+
+``StreamEngine`` serves whole, one-shot streams.  ``SessionEngine`` is the
+datacenter shape on top of the same architecture: tenants ``open()`` a
+session, ``append()`` arbitrary-length (ragged) tuple batches as they
+arrive, ``query()`` a merged-buffer snapshot mid-stream, and ``close()``.
+It is the analytics analogue of ``DecodeEngine``'s continuous batching --
+sessions are the new requests, executor lanes are the new decode slots --
+and one level up it replays the paper's skew-oblivious move: **sessions
+are the new tuples, stream slots are the new PEs**.
+
+Slot model
+  The engine owns ``primary_slots + secondary_slots`` lanes of ONE
+  vmapped resumable executor (a stacked ``ExecState`` with a leading
+  lanes axis, advanced by a single batched ``lax.scan`` per flush).
+  Every admitted session owns one primary lane for its whole life --
+  the analogue of a PriPE owning a state partition.  Secondary lanes
+  are the SecPEs of the serving layer: each flush, the paper's greedy
+  scheduler (``scheduler.schedule_secpes``) runs over per-session
+  chunk **backlog** and grants hot sessions extra lanes; a session's
+  chunks then stripe round-robin across its lane group.  When a
+  secondary lane is re-granted to a different session, its buffers are
+  merged into the old owner's primary lane and reset -- exactly the
+  SecPE shadow-buffer merge of §IV-B, lifted one level.
+
+Suspend/resume + ragged input
+  Appends buffer host-side until a flush; full chunks go straight into
+  the lanes, and a query/close forces the ragged tail through as a
+  masked final chunk (``data.pipeline.chunk_stream``'s padded-tail
+  path), which the executor treats as an exact no-op.  ``query`` is a
+  non-destructive merge: primary + granted secondary lanes combine
+  like SecPE shadow buffers (add/max), leaving every buffer intact so
+  the stream keeps running.  Merged results are therefore bit-exact
+  against the one-shot executor on the same tuples for the integer
+  paper apps, regardless of append chunking, tails, or slot grants.
+
+Telemetry
+  Per-flush counters (tuples, chunks, lane width, secondary grants,
+  slot re-schedules, backlog, occupancy, modeled cycles) accumulate
+  into a schema-v1 benchmark record (``telemetry_record``), the same
+  shape ``benchmarks.common`` validates and ``benchmarks.run`` reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor as core_executor
+from repro.core import scheduler
+from repro.data.pipeline import pad_tail_chunk
+
+TELEMETRY_SCHEMA_VERSION = 1   # mirrors benchmarks.common.SCHEMA_VERSION
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Host-side per-session aggregation of the executor's ExecStats."""
+
+    tuples_appended: int = 0
+    tuples_flushed: int = 0
+    chunks_flushed: int = 0
+    queries: int = 0
+    modeled_cycles: float = 0.0
+    max_load: int = 0
+    exec_reschedules: int = 0
+    sec_lane_flushes: int = 0     # chunks this session ran on secondary lanes
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Session:
+    sid: int
+    tenant: str
+    slot: Optional[int]                 # primary lane id, None while queued
+    backlog: List[np.ndarray]
+    backlog_tuples: int = 0
+    stats: SessionStats = dataclasses.field(default_factory=SessionStats)
+    closed: bool = False
+
+
+class SessionEngine:
+    """Slot-managed multi-tenant sessions over one vmapped executor.
+
+    Args:
+      spec: the DittoSpec every session runs (one engine = one app).
+      num_pri/num_sec/chunk_size: executor shape per lane, or ``tuned=``
+        a repro.tune.TunedPlan supplying them.  Explicit num_sec /
+        chunk_size / kernel_backend override the plan's values (the
+        ``make_executor`` contract); an explicit num_pri that CONFLICTS
+        with the plan raises instead -- the plan's X and route plan are
+        tuned at its M, so overriding M would silently invalidate them.
+      primary_slots: max concurrently admitted sessions; further ``open``
+        calls queue and admit as slots free (continuous batching).
+      secondary_slots: extra lanes the backlog scheduler grants to hot
+        sessions (0 disables tenant-level skew scheduling).  Requires a
+        decomposable spec (``spec.merge is None``): cross-lane merging is
+        the add/max shadow-buffer combine.
+      min_grant_chunks: a session must have at least this many backlog
+        chunks before it can be granted a secondary lane (a helper lane
+        for <2 chunks cannot shorten the scan).
+      **executor_kw: forwarded to ``core.make_resumable_executor``
+        (profile_chunks, threshold, mem_width_tuples, kernel_backend).
+    """
+
+    def __init__(self, spec, *, num_pri: Optional[int] = None,
+                 num_sec: Optional[int] = None,
+                 chunk_size: Optional[int] = None, tuned=None,
+                 primary_slots: int = 4, secondary_slots: int = 2,
+                 min_grant_chunks: int = 2,
+                 kernel_backend: Optional[str] = None, **executor_kw):
+        if tuned is not None:
+            if num_pri is not None and num_pri != tuned.num_pri:
+                raise ValueError(f"num_pri={num_pri} conflicts with the "
+                                 f"tuned plan's num_pri={tuned.num_pri}")
+            num_pri = tuned          # TunedPlan resolution lives in core
+        if num_pri is None:
+            raise TypeError("SessionEngine needs num_pri/num_sec/chunk_size "
+                            "or tuned=TunedPlan")
+        if primary_slots < 1:
+            raise ValueError("SessionEngine needs at least one primary slot")
+        if secondary_slots > 0 and spec.merge is not None:
+            raise ValueError(
+                f"{spec.name}: non-decomposable buffers cannot be combined "
+                "across lanes; use secondary_slots=0")
+        self.spec = spec
+        self.primary_slots = primary_slots
+        self.secondary_slots = secondary_slots
+        self.min_grant_chunks = min_grant_chunks
+        self.num_lanes = primary_slots + secondary_slots
+
+        self._res = core_executor.make_resumable_executor(
+            spec, num_pri, num_sec, chunk_size,
+            kernel_backend=kernel_backend, **executor_kw)
+        self.num_pri, self.num_sec = self._res.num_pri, self._res.num_sec
+        self.chunk_size = self._res.chunk_size
+        fresh = self._res.init_state()
+        self._fresh = fresh
+        self._states = jax.tree.map(
+            lambda x: jnp.stack([x] * self.num_lanes), fresh)
+        self._run_lanes = jax.jit(jax.vmap(self._res.scan_chunks))
+        self._merge_lane = jax.jit(
+            lambda states, i: self._res.merge_state(
+                jax.tree.map(lambda x: x[i], states)))
+        self._reset_lane = jax.jit(
+            lambda states, i: jax.tree.map(
+                lambda x, f: x.at[i].set(f), states, self._fresh))
+        if spec.merge is None:
+            self._fold_lane = jax.jit(self._fold_lane_impl)
+
+        self.sessions: Dict[int, _Session] = {}
+        self._queue: List[int] = []                      # sids awaiting a slot
+        self._slot_sid: List[Optional[int]] = [None] * primary_slots
+        self._sec_assign = np.full(secondary_slots, -1, np.int64)
+        self._next_sid = 0
+        self._feat_shape: Optional[tuple] = None
+        self._dtype = None
+        self._flush_no = 0
+        self._slot_reschedules = 0
+        self._telemetry: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------- lifecycle
+
+    def open(self, tenant: str = "default") -> int:
+        """Open a session; admitted to a primary slot immediately when one
+        is free, else queued until ``flush`` frees one (slots recycle as
+        sessions close -- the continuous-batching admission path)."""
+        sid = self._next_sid
+        self._next_sid += 1
+        self.sessions[sid] = _Session(sid, tenant, slot=None, backlog=[])
+        self._queue.append(sid)
+        self._admit()
+        return sid
+
+    def append(self, sid: int, data: np.ndarray) -> None:
+        """Append a tuple batch of ANY length (ragged welcome) to an open
+        session.  Buffers host-side; full chunks run at the next flush."""
+        s = self._session(sid)
+        data = np.asarray(data)
+        if data.ndim == 1:
+            data = data[:, None]
+        if self._feat_shape is None:
+            self._feat_shape, self._dtype = data.shape[1:], data.dtype
+        elif data.shape[1:] != self._feat_shape:
+            raise ValueError(f"append shape {data.shape[1:]} != engine tuple "
+                             f"shape {self._feat_shape}")
+        if len(data):
+            s.backlog.append(data)
+            s.backlog_tuples += len(data)
+            s.stats.tuples_appended += len(data)
+
+    def query(self, sid: int):
+        """Merged-buffer snapshot of everything appended so far.
+
+        Forces this session's backlog (including the ragged tail, as a
+        masked chunk) through the lanes, then combines its primary lane
+        with any granted secondary lanes -- non-destructively, like the
+        merger reading PriPE+SecPE buffers without resetting them, so the
+        session keeps streaming afterwards."""
+        s = self._session(sid)
+        if s.slot is None:
+            raise RuntimeError(
+                f"session {sid} is queued (all {self.primary_slots} primary "
+                "slots busy); nothing has run yet -- close another session "
+                "to admit it before querying")
+        self.flush(force=(sid,))
+        s.stats.queries += 1
+        return self._snapshot(s)
+
+    def close(self, sid: int):
+        """Final flush + snapshot; frees the session's lanes for queued
+        tenants.  Returns (merged_buffers, stats_dict).  Closing a
+        still-queued session is only allowed while it is empty (closing
+        buffered data unseen would silently discard it)."""
+        s = self._session(sid)
+        if s.slot is None and s.backlog_tuples:
+            raise RuntimeError(
+                f"session {sid} is queued with {s.backlog_tuples} buffered "
+                "tuples; close another session to admit it first (refusing "
+                "to discard data)")
+        self.flush(force=(sid,))
+        merged = self._snapshot(s)
+        if s.slot is not None:
+            for j in range(self.secondary_slots):
+                if self._sec_assign[j] == s.slot:
+                    self._states = self._reset_lane(
+                        self._states, self.primary_slots + j)
+                    self._sec_assign[j] = -1
+            self._states = self._reset_lane(self._states, s.slot)
+            self._slot_sid[s.slot] = None
+            s.slot = None
+        else:
+            self._queue.remove(sid)
+        s.closed = True
+        self._admit()
+        return merged, s.stats.as_dict()
+
+    # ----------------------------------------------------------------- flush
+
+    def flush(self, force: Iterable[int] = ()) -> None:
+        """Advance every admitted session's stream by its backlogged
+        chunks in ONE batched scan.
+
+        1. admit queued sessions into free primary slots;
+        2. run the paper's greedy scheduler over per-slot chunk backlog
+           to (re-)grant secondary lanes; a re-granted lane's buffers
+           merge into its old session first (shadow-buffer semantics);
+        3. stripe each session's full chunks across its lane group (the
+           ``force`` sessions also flush their ragged tail as a masked
+           chunk); idle lanes carry all-masked padding;
+        4. one vmapped ``run_chunks`` advances all lane states together.
+        """
+        force = set(force)
+        self._admit()
+        self._reschedule_secondary()
+
+        lane_chunks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
+        lane_masks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
+        lane_sid: List[Optional[int]] = [None] * self.num_lanes
+        flushed_tuples = 0
+        for slot, sid in enumerate(self._slot_sid):
+            if sid is None:
+                continue
+            s = self.sessions[sid]
+            lanes = [slot] + [self.primary_slots + j
+                              for j in range(self.secondary_slots)
+                              if self._sec_assign[j] == slot]
+            for ln in lanes:
+                lane_sid[ln] = sid
+            chunks, masks = self._take_chunks(s, flush_tail=sid in force)
+            for k, (c, m) in enumerate(zip(chunks, masks)):
+                lane = lanes[k % len(lanes)]
+                lane_chunks[lane].append(c)
+                lane_masks[lane].append(m)
+                if lane != slot:
+                    s.stats.sec_lane_flushes += 1
+            n_real = int(sum(m.sum() for m in masks))
+            flushed_tuples += n_real
+            s.stats.tuples_flushed += n_real
+            s.stats.chunks_flushed += len(chunks)
+
+        width = max((len(c) for c in lane_chunks), default=0)
+        if width:
+            width = 1 << (width - 1).bit_length()     # stable jit shapes
+            self._run_flush(lane_chunks, lane_masks, lane_sid, width)
+        self._record_flush(flushed_tuples, lane_chunks, width)
+        self._flush_no += 1
+
+    def _run_flush(self, lane_chunks, lane_masks, lane_sid, width):
+        c = self.chunk_size
+        feat = self._feat_shape or (1,)
+        dtype = self._dtype or np.int32
+        chunks = np.zeros((self.num_lanes, width, c, *feat), dtype)
+        mask = np.zeros((self.num_lanes, width, c), bool)
+        for ln in range(self.num_lanes):
+            for k, (ch, m) in enumerate(zip(lane_chunks[ln], lane_masks[ln])):
+                chunks[ln, k] = ch
+                mask[ln, k] = m
+        self._states, stats = self._run_lanes(
+            self._states, jnp.asarray(chunks), jnp.asarray(mask))
+        cycles = np.asarray(stats.modeled_cycles)       # [L, width]
+        loads = np.asarray(stats.max_load)
+        resched = np.asarray(stats.rescheduled)
+        for ln in range(self.num_lanes):
+            sid, k = lane_sid[ln], len(lane_chunks[ln])
+            if sid is None or k == 0:
+                continue
+            st = self.sessions[sid].stats
+            st.modeled_cycles += float(cycles[ln, :k].sum())
+            st.max_load = max(st.max_load, int(loads[ln, :k].max()))
+            st.exec_reschedules += int(resched[ln, :k].sum())
+
+    def _take_chunks(self, s: _Session, flush_tail: bool):
+        """Pop full chunks (plus, when forced, the masked ragged tail)
+        off a session's backlog; the sub-chunk remainder stays buffered."""
+        c = self.chunk_size
+        if not s.backlog_tuples:
+            return [], []
+        data = np.concatenate(s.backlog, axis=0)
+        nfull = len(data) // c
+        chunks = [data[k * c:(k + 1) * c] for k in range(nfull)]
+        masks = [np.ones(c, bool)] * nfull
+        taken = nfull * c
+        if flush_tail and taken < len(data):
+            padded, m = pad_tail_chunk(data[taken:], c)
+            chunks.append(padded)
+            masks.append(m)
+            taken = len(data)
+        s.backlog = [data[taken:]] if taken < len(data) else []
+        s.backlog_tuples = len(data) - taken
+        return chunks, masks
+
+    # ------------------------------------------------------- slot scheduling
+
+    def _admit(self) -> None:
+        for slot in range(self.primary_slots):
+            if self._slot_sid[slot] is None and self._queue:
+                sid = self._queue.pop(0)
+                self._slot_sid[slot] = sid
+                self.sessions[sid].slot = slot
+
+    def _backlog_chunks(self) -> np.ndarray:
+        """Per-primary-slot pending chunk counts -- the workload histogram
+        of the serving layer (sessions are the tuples, slots the PEs)."""
+        out = np.zeros(self.primary_slots, np.float32)
+        for slot, sid in enumerate(self._slot_sid):
+            if sid is not None:
+                out[slot] = self.sessions[sid].backlog_tuples // self.chunk_size
+        return out
+
+    def plan_secondary(self, backlog_chunks: np.ndarray) -> np.ndarray:
+        """Greedy max-backlog splitting: ``scheduler.schedule_secpes`` over
+        the per-slot chunk backlog, with grants to sessions below
+        ``min_grant_chunks`` suppressed (idle -1).  Exposed for tests: the
+        tenant-level plan must inherit the paper's Fig. 5 properties."""
+        if self.secondary_slots == 0:
+            return np.zeros(0, np.int64)
+        a = np.asarray(scheduler.schedule_secpes(
+            jnp.asarray(backlog_chunks, jnp.float32),
+            self.secondary_slots)).astype(np.int64)
+        hot = backlog_chunks[np.clip(a, 0, None)] >= self.min_grant_chunks
+        return np.where(hot, a, -1)
+
+    def _reschedule_secondary(self) -> None:
+        new = self.plan_secondary(self._backlog_chunks())
+        for j in range(self.secondary_slots):
+            old = int(self._sec_assign[j])
+            if old == int(new[j]):
+                continue
+            if old >= 0:
+                # the lifted §IV-B merge: shadow lane folds into its old
+                # session's primary lane before re-assignment
+                self._states = self._fold_lane(
+                    self._states, self.primary_slots + j, old)
+                self._slot_reschedules += 1
+            self._sec_assign[j] = new[j]
+
+    def _fold_lane_impl(self, states, src, dst):
+        contrib = self._res.merge_state(
+            jax.tree.map(lambda x: x[src], states))
+        bufs = states.buffers
+        if self.spec.combine == "add":
+            bufs = bufs.at[dst, :self.num_pri].add(contrib)
+        else:
+            bufs = bufs.at[dst, :self.num_pri].max(contrib)
+        states = dataclasses.replace(states, buffers=bufs)
+        return jax.tree.map(lambda x, f: x.at[src].set(f), states,
+                            self._fresh)
+
+    # ------------------------------------------------------------- snapshots
+
+    def _snapshot(self, s: _Session):
+        if s.slot is None:
+            # only reachable closing an EMPTY queued session (query/close
+            # with data refuse above): nothing ran, buffers are pristine
+            return jax.tree.map(np.asarray,
+                                self._res.merge_state(self._fresh))
+        merged = jax.tree.map(np.asarray,
+                              self._merge_lane(self._states, s.slot))
+        for j in range(self.secondary_slots):
+            if self._sec_assign[j] == s.slot:
+                contrib = jax.tree.map(np.asarray, self._merge_lane(
+                    self._states, self.primary_slots + j))
+                combine = np.add if self.spec.combine == "add" else np.maximum
+                merged = jax.tree.map(combine, merged, contrib)
+        return merged
+
+    # ------------------------------------------------------------- telemetry
+
+    def _record_flush(self, tuples: int, lane_chunks, width: int) -> None:
+        active = sum(sid is not None for sid in self._slot_sid)
+        backlog = sum(s.backlog_tuples for s in self.sessions.values()
+                      if not s.closed)
+        self._telemetry.append({
+            "flush": self._flush_no,
+            "active_sessions": active,
+            "queued_sessions": len(self._queue),
+            "tuples": int(tuples),
+            "chunks": int(sum(len(c) for c in lane_chunks)),
+            "lane_width": int(width),
+            "sec_granted": int((self._sec_assign >= 0).sum()),
+            "slot_reschedules": int(self._slot_reschedules),
+            "backlog_tuples": int(backlog),
+            "slot_occupancy": round(active / self.primary_slots, 4),
+        })
+
+    def telemetry_record(self, validate: bool = True) -> Dict[str, Any]:
+        """Per-flush telemetry as a schema-v1 benchmark record (the shape
+        ``benchmarks.common.validate_record`` accepts): rows = one dict
+        per flush, extra = engine config + lifetime totals."""
+        totals = {
+            "sessions_opened": self._next_sid,
+            "flushes": self._flush_no,
+            "slot_reschedules": self._slot_reschedules,
+            "tuples_flushed": int(sum(s.stats.tuples_flushed
+                                      for s in self.sessions.values())),
+        }
+        rec = {
+            "schema_version": TELEMETRY_SCHEMA_VERSION,
+            "bench": "session_engine",
+            "title": (f"SessionEngine telemetry ({self.spec.name}, "
+                      f"{self.primary_slots}P+{self.secondary_slots}S slots)"),
+            "status": "ok",
+            "rows": list(self._telemetry),
+            "extra": {
+                "config": {
+                    "app": self.spec.name,
+                    "num_pri": self.num_pri, "num_sec": self.num_sec,
+                    "chunk_size": self.chunk_size,
+                    "primary_slots": self.primary_slots,
+                    "secondary_slots": self.secondary_slots,
+                },
+                "totals": totals,
+            },
+        }
+        if validate:
+            try:
+                from benchmarks.common import validate_record
+            except ImportError:          # src-only install: shape documented
+                pass                     # above; benchmarks validate in CI
+            else:
+                validate_record(rec)
+        return rec
+
+    # --------------------------------------------------------------- helpers
+
+    def session_stats(self, sid: int) -> Dict[str, Any]:
+        return self._session(sid, allow_closed=True).stats.as_dict()
+
+    def _session(self, sid: int, allow_closed: bool = False) -> _Session:
+        if sid not in self.sessions:
+            raise KeyError(f"unknown session {sid}")
+        s = self.sessions[sid]
+        if s.closed and not allow_closed:
+            raise ValueError(f"session {sid} is closed")
+        return s

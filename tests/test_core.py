@@ -224,6 +224,76 @@ class TestExecutor:
         assert modes[0] == PROFILE_MODE and modes[1] == PROFILE_MODE
         assert (modes[2:] == RUN_MODE).all()
 
+    @pytest.mark.parametrize("skewed", [False, True])
+    def test_masked_ragged_stream_equivalence(self, skewed):
+        """A ragged stream through the validity-mask path == the oracle:
+        padded tuples touch no buffer, histogram or round-robin state."""
+        from repro.data.pipeline import chunk_stream
+        spec = _histo_spec(self.B)
+        data = self._data(skewed, n=2048 + 117)
+        ts = chunk_stream(data, self.C, pad_tail=True)
+        run = make_executor(spec, self.M, 3, self.C, profile_chunks=2)
+        merged, stats = run(jnp.asarray(ts.body), mask=jnp.asarray(ts.mask))
+        np.testing.assert_array_equal(
+            np.asarray(merged), _oracle_hist(data[:, 0], self.M, self.B))
+        # the masked tail chunk's workload counts only the real tuples
+        assert int(np.asarray(stats.workload)[-1].sum()) == 2048 + 117 - 2048
+
+    def test_masked_ragged_custom_pe_update(self):
+        """The mask sentinel must be dropped by CUSTOM pe_updates too (the
+        DP cursor-append writes via jnp .at, which normalizes negative
+        indices -- hence the OOB-high sentinel): tight capacity, ragged
+        stream, no spurious writes anywhere."""
+        from repro.apps import dp
+        from repro.data.pipeline import chunk_stream
+        spec = dp.make_spec(2, 4, capacity_per_pe=8)
+        rng = np.random.default_rng(2)
+        data = rng.integers(0, 100, size=(2 * 8 + 5, 2)).astype(np.int32)
+        ts = chunk_stream(data, 8, pad_tail=True)
+        run = make_executor(spec, 4, 0, 8)
+        bufs, _ = run(jnp.asarray(ts.body), mask=jnp.asarray(ts.mask))
+        parts = dp.partitions_from_buffers(bufs, 4)
+        for p, (a, b) in enumerate(zip(parts, dp.oracle(data, 2))):
+            assert a.shape == b.shape and dp.multiset_equal(a, b), p
+        cur = np.asarray(bufs.cursor)
+        assert int(cur.sum()) == len(data)
+        tag = np.asarray(bufs.dst_part)
+        for pe in range(4):              # nothing written past any cursor
+            assert (tag[pe, cur[pe]:] == -1).all()
+
+    def test_resumable_matches_one_shot(self):
+        """Suspend/resume across run_chunks calls == one lax.scan, and
+        merge_state snapshots are non-destructive (DESIGN.md §8)."""
+        from repro.core import make_resumable_executor
+        spec = _histo_spec(self.B)
+        data = self._data(True)
+        chunks = jnp.asarray(data.reshape(-1, self.C, 2))
+        one_shot, _ = make_executor(spec, self.M, 3, self.C,
+                                    profile_chunks=2)(chunks)
+        res = make_resumable_executor(spec, self.M, 3, self.C,
+                                      profile_chunks=2)
+        state = res.init_state()
+        for lo, hi in ((0, 3), (3, 4), (4, 8)):
+            state, _ = res.run_chunks(state, chunks[lo:hi])
+            res.merge_state(state)           # mid-stream query, no effect
+        np.testing.assert_array_equal(np.asarray(res.merge_state(state)),
+                                      np.asarray(one_shot))
+
+    def test_resumable_with_plan_runs_static(self):
+        from repro.core import make_resumable_executor, with_plan
+        spec = _histo_spec(self.B)
+        data = self._data(True)
+        w = workload_hist(jnp.asarray(data[:, 0] % self.M, jnp.int32), self.M)
+        plan = make_static_plan(self.M, 7, w)
+        res = make_resumable_executor(spec, self.M, 7, self.C)
+        state = with_plan(res.init_state(), plan)
+        state, stats = res.run_chunks(state,
+                                      jnp.asarray(data.reshape(-1, self.C, 2)))
+        assert (np.asarray(stats.mode) == RUN_MODE).all()
+        np.testing.assert_array_equal(
+            np.asarray(res.merge_state(state)),
+            _oracle_hist(data[:, 0], self.M, self.B))
+
     def test_reschedule_on_evolving_skew(self):
         """Shift the hot key range mid-stream; the monitor must fire and the
         result must still be exact (merge-before-reassign correctness)."""

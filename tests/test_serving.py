@@ -1,0 +1,344 @@
+"""Serving-layer suite (DESIGN.md §8): StreamEngine batch formation /
+padding isolation, SessionEngine bit-exactness vs the one-shot executor
+(uniform + Zipf 1.5, ragged appends), and the tenant-level skew
+scheduler's slot-allocation properties."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:         # benchmarks/ is a repo-root package
+    sys.path.insert(0, str(REPO))
+
+from repro.apps import histo
+from repro.core import make_executor
+from repro.data.pipeline import chunk_stream
+from repro.serve import SessionEngine, StreamEngine
+
+from tests.conftest import SMALL_CHUNK, SMALL_M
+
+BINS, DOMAIN = 64, 1 << 16
+
+
+def _oracle(keys: np.ndarray) -> np.ndarray:
+    return histo.oracle(np.asarray(keys), BINS, DOMAIN, SMALL_M)
+
+
+def _solo(spec, data: np.ndarray) -> np.ndarray:
+    """One-shot executor on the identical tuple stream (masked tail)."""
+    ts = chunk_stream(np.asarray(data), SMALL_CHUNK, pad_tail=True)
+    run = make_executor(spec, SMALL_M, 2, SMALL_CHUNK)
+    merged, _ = run(jnp.asarray(ts.body), mask=jnp.asarray(ts.mask))
+    return np.asarray(merged)
+
+
+# ----------------------------------------------------------- StreamEngine
+class TestStreamEngine:
+    def _engine(self, small_spec, **kw):
+        kw.setdefault("max_streams", 4)
+        return StreamEngine(small_spec, num_pri=SMALL_M, num_sec=2,
+                            chunk_size=SMALL_CHUNK, **kw)
+
+    def test_mixed_chunk_counts_no_hol_blocking(self, small_spec,
+                                                zipf_dataset):
+        """A long stream at the head must not force short streams behind
+        it into their own tiny batches: the largest compatible group is
+        picked first, and every result stays exact."""
+        eng = self._engine(small_spec)
+        long = zipf_dataset(4 * SMALL_CHUNK, DOMAIN, 1.5, seed=1)
+        shorts = [zipf_dataset(SMALL_CHUNK, DOMAIN, a, seed=2 + i)
+                  for i, a in enumerate((0.0, 1.0, 2.0))]
+        rid_long = eng.submit(long)
+        rid_short = [eng.submit(s) for s in shorts]
+        # largest group (the three 1-chunk streams) batches before the head
+        batch = eng._next_batch()
+        assert {r.rid for r in batch} == set(rid_short)
+        assert [r.rid for r in eng.pending] == [rid_long]
+        eng.pending = batch + eng.pending          # restore, then run all
+        out = eng.flush()
+        assert not eng.pending
+        np.testing.assert_array_equal(out[rid_long][0], _oracle(long[:, 0]))
+        for rid, s in zip(rid_short, shorts):
+            np.testing.assert_array_equal(out[rid][0], _oracle(s[:, 0]))
+
+    def test_pad_lane_isolation(self, small_spec, zipf_dataset):
+        """A partially filled batch pads with masked zero lanes; the lone
+        tenant's result must equal running alone (nothing replayed, no
+        cross-lane effects)."""
+        data = zipf_dataset(2 * SMALL_CHUNK, DOMAIN, 2.0)
+        eng = self._engine(small_spec)
+        rid = eng.submit(data)
+        merged, stats = eng.flush()[rid]
+        np.testing.assert_array_equal(merged, _oracle(data[:, 0]))
+        np.testing.assert_array_equal(merged, _solo(small_spec, data))
+        # per-request stats are the tenant's own (2 chunks scanned)
+        assert stats.modeled_cycles.shape == (2,)
+
+    def test_ragged_submit(self, small_spec, zipf_dataset):
+        """Stream lengths no longer need to be chunk multiples: the tail
+        rides the pipeline's masked-chunk path end-to-end."""
+        data = zipf_dataset(SMALL_CHUNK + 123, DOMAIN, 1.5)
+        eng = self._engine(small_spec)
+        rid = eng.submit(data)
+        merged, _ = eng.flush()[rid]
+        np.testing.assert_array_equal(merged, _oracle(data[:, 0]))
+
+    def test_flush_order_independence(self, small_spec, zipf_dataset):
+        """Submission order never changes any tenant's result."""
+        datasets = [zipf_dataset(SMALL_CHUNK * (1 + i % 2), DOMAIN,
+                                 0.5 * i, seed=10 + i) for i in range(5)]
+        for order in (range(5), reversed(range(5))):
+            eng = self._engine(small_spec)
+            rids = {i: eng.submit(datasets[i]) for i in order}
+            out = eng.flush()
+            for i, rid in rids.items():
+                np.testing.assert_array_equal(
+                    out[rid][0], _oracle(datasets[i][:, 0]))
+
+
+# ---------------------------------------------------------- SessionEngine
+def _session_engine(spec, **kw):
+    kw.setdefault("primary_slots", 2)
+    kw.setdefault("secondary_slots", 2)
+    return SessionEngine(spec, num_pri=SMALL_M, num_sec=2,
+                         chunk_size=SMALL_CHUNK, **kw)
+
+
+class TestSessionEngine:
+    @pytest.mark.parametrize("alpha", [0.0, 1.5])
+    @pytest.mark.parametrize("ragged", [False, True])
+    def test_bit_exact_vs_one_shot(self, small_spec, zipf_dataset, alpha,
+                                   ragged):
+        """Acceptance: SessionEngine == one-shot executor on the same
+        tuples, for any append chunking, with and without ragged tails."""
+        n = 6 * SMALL_CHUNK + (137 if ragged else 0)
+        data = zipf_dataset(n, DOMAIN, alpha)
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        rng = np.random.default_rng(0)
+        i = 0
+        while i < n:                     # arbitrary-length appends
+            step = int(rng.integers(1, SMALL_CHUNK + 200))
+            eng.append(sid, data[i:i + step])
+            i += step
+            if rng.random() < 0.5:
+                eng.flush()
+        merged, _ = eng.close(sid)
+        np.testing.assert_array_equal(merged, _solo(small_spec, data))
+        np.testing.assert_array_equal(merged, _oracle(data[:, 0]))
+
+    def test_ragged_append_equivalence(self, small_spec, zipf_dataset):
+        """Any partition of the same stream into appends yields identical
+        merged buffers (mid-stream queries included)."""
+        data = zipf_dataset(3 * SMALL_CHUNK + 41, DOMAIN, 1.5)
+        results = []
+        for cuts in ([len(data)], [100, 1, 333, len(data) - 434],
+                     [SMALL_CHUNK] * 3 + [41]):
+            eng = _session_engine(small_spec)
+            sid = eng.open()
+            i = 0
+            for c in cuts:
+                eng.append(sid, data[i:i + c])
+                i += c
+            assert i == len(data)
+            snap = eng.query(sid)        # mid-stream snapshot is complete
+            np.testing.assert_array_equal(snap, _oracle(data[:, 0]))
+            merged, _ = eng.close(sid)
+            results.append(merged)
+        for r in results[1:]:
+            np.testing.assert_array_equal(r, results[0])
+
+    def test_query_is_non_destructive(self, small_spec, zipf_dataset):
+        """The stream continues after a query; the final result covers
+        everything ever appended exactly once."""
+        a = zipf_dataset(2 * SMALL_CHUNK + 7, DOMAIN, 1.5, seed=1)
+        b = zipf_dataset(SMALL_CHUNK + 99, DOMAIN, 0.0, seed=2)
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        eng.append(sid, a)
+        np.testing.assert_array_equal(eng.query(sid), _oracle(a[:, 0]))
+        np.testing.assert_array_equal(eng.query(sid), _oracle(a[:, 0]))
+        eng.append(sid, b)
+        merged, _ = eng.close(sid)
+        np.testing.assert_array_equal(
+            merged, _oracle(np.concatenate([a[:, 0], b[:, 0]])))
+
+    def test_tenant_isolation_and_slot_recycling(self, small_spec,
+                                                 zipf_dataset):
+        """More sessions than primary slots: queued sessions admit as
+        slots free, and every tenant's result is its own."""
+        datasets = {t: zipf_dataset(SMALL_CHUNK * 2 + 13 * t, DOMAIN,
+                                    0.7 * t, seed=t) for t in range(4)}
+        eng = _session_engine(small_spec, primary_slots=2)
+        sids = {t: eng.open(tenant=f"t{t}") for t in range(4)}
+        assert sum(eng.sessions[s].slot is not None
+                   for s in sids.values()) == 2
+        for t in range(4):
+            eng.append(sids[t], datasets[t])
+        for t in range(4):               # closing frees slots -> admits
+            merged, _ = eng.close(sids[t])
+            np.testing.assert_array_equal(merged,
+                                          _oracle(datasets[t][:, 0]))
+
+    def test_queued_session_never_answers_empty(self, small_spec,
+                                                zipf_dataset):
+        """A session waiting for a slot must error on query (nothing has
+        run) and refuse to close while holding data -- never silently
+        return empty buffers or drop tuples."""
+        eng = _session_engine(small_spec, primary_slots=1)
+        a, b = eng.open(), eng.open()
+        data = zipf_dataset(500, DOMAIN, 1.5)
+        eng.append(b, data)
+        with pytest.raises(RuntimeError, match="queued"):
+            eng.query(b)
+        with pytest.raises(RuntimeError, match="refusing to discard"):
+            eng.close(b)
+        eng.close(a)                     # frees the slot -> b admitted
+        merged, _ = eng.close(b)
+        np.testing.assert_array_equal(merged, _oracle(data[:, 0]))
+        # an EMPTY queued session may close gracefully
+        eng2 = _session_engine(small_spec, primary_slots=1)
+        eng2.open()
+        sid = eng2.open()
+        merged, stats = eng2.close(sid)
+        assert merged.sum() == 0 and stats["tuples_appended"] == 0
+
+    def test_padding_chunks_leave_carry_untouched(self, small_spec,
+                                                  zipf_dataset):
+        """Batch-width padding (fully masked chunks) must not advance the
+        profiling window, fire the mode machine, or inflate load stats --
+        a padded chunk is bit-identical to an absent one."""
+        from repro.core import make_resumable_executor
+        res = make_resumable_executor(small_spec, SMALL_M, 2, SMALL_CHUNK,
+                                      profile_chunks=2)
+        state = res.init_state()
+        dead = jnp.zeros((3, SMALL_CHUNK, 2), jnp.int32)
+        state, stats = res.run_chunks(
+            state, dead, jnp.zeros((3, SMALL_CHUNK), bool))
+        assert int(state.chunks_in_mode) == 0       # still pre-profile
+        assert int(state.mode) == 0                 # PROFILE
+        assert np.asarray(stats.max_load).max() == 0  # sentinel dropped
+        # a real ragged tail reports only its live tuples as load
+        data = zipf_dataset(SMALL_CHUNK + 57, DOMAIN, 0.0)
+        ts = chunk_stream(data, SMALL_CHUNK, pad_tail=True)
+        state, stats = res.run_chunks(state, jnp.asarray(ts.body),
+                                      jnp.asarray(ts.mask))
+        assert int(np.asarray(stats.max_load)[-1]) <= 57
+        np.testing.assert_array_equal(res.merge_state(state),
+                                      _oracle(data[:, 0]))
+
+    def test_closed_session_rejects_use(self, small_spec, zipf_dataset):
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        eng.append(sid, zipf_dataset(64, DOMAIN, 0.0))
+        eng.close(sid)
+        with pytest.raises(ValueError):
+            eng.append(sid, zipf_dataset(64, DOMAIN, 0.0))
+        with pytest.raises(KeyError):
+            eng.query(sid + 999)
+
+    def test_tuned_plan_config(self, small_spec, zipf_dataset):
+        """tuned=TunedPlan resolves the engine shape through the core's
+        single resolution path (and conflicting num_pri is rejected)."""
+        from repro.tune import SearchSpace, autotune
+        sample = zipf_dataset(4096, DOMAIN, 1.5)
+        tuned = autotune(small_spec, sample,
+                         space=SearchSpace(m_candidates=(SMALL_M,),
+                                           chunk_sizes=(SMALL_CHUNK,)),
+                         tolerance=0.1)
+        eng = SessionEngine(small_spec, tuned=tuned, primary_slots=2,
+                            secondary_slots=1)
+        assert (eng.num_pri, eng.num_sec, eng.chunk_size) == \
+            (SMALL_M, tuned.num_sec, SMALL_CHUNK)
+        sid = eng.open()
+        eng.append(sid, sample)
+        merged, _ = eng.close(sid)
+        np.testing.assert_array_equal(merged, _oracle(sample[:, 0]))
+        with pytest.raises(ValueError, match="conflicts"):
+            SessionEngine(small_spec, tuned=tuned, num_pri=SMALL_M + 1)
+
+    def test_telemetry_record_schema(self, small_spec, zipf_dataset):
+        """Per-flush telemetry validates against the benchmark schema and
+        counts what actually ran."""
+        from benchmarks.common import validate_record
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        eng.append(sid, zipf_dataset(3 * SMALL_CHUNK, DOMAIN, 1.5))
+        eng.flush()
+        eng.close(sid)
+        rec = validate_record(eng.telemetry_record())
+        assert rec["rows"] and rec["rows"][0]["tuples"] == 3 * SMALL_CHUNK
+        assert rec["extra"]["totals"]["sessions_opened"] == 1
+
+
+# ------------------------------------------- tenant-level skew scheduling
+class TestTenantSkewScheduling:
+    def test_hot_session_takes_all_lanes(self, small_spec):
+        eng = _session_engine(small_spec, primary_slots=3,
+                              secondary_slots=2)
+        a = eng.plan_secondary(np.array([40.0, 2.0, 2.0], np.float32))
+        assert a.tolist() == [0, 0]      # greedy max-backlog splitting
+
+    def test_uniform_backlog_spreads_lanes(self, small_spec):
+        eng = _session_engine(small_spec, primary_slots=4,
+                              secondary_slots=3)
+        a = eng.plan_secondary(np.full(4, 10.0, np.float32))
+        assert len(set(a.tolist())) == 3     # three different slots helped
+
+    def test_small_backlog_gets_no_helper(self, small_spec):
+        eng = _session_engine(small_spec, primary_slots=2,
+                              secondary_slots=2, min_grant_chunks=2)
+        a = eng.plan_secondary(np.array([1.0, 0.0], np.float32))
+        assert a.tolist() == [-1, -1]    # 1 chunk cannot be split
+
+    def test_slot_allocation_property(self, small_spec):
+        """Fig. 5 property, lifted: the hottest session's post-grant
+        share never exceeds the no-grant maximum, and grants only go to
+        sessions at/above min_grant_chunks."""
+        rng = np.random.default_rng(3)
+        eng = _session_engine(small_spec, primary_slots=6,
+                              secondary_slots=4)
+        for _ in range(20):
+            backlog = rng.integers(0, 50, size=6).astype(np.float32)
+            a = eng.plan_secondary(backlog)
+            granted = a[a >= 0]
+            assert all(backlog[g] >= eng.min_grant_chunks for g in granted)
+            shares = np.ones(6)
+            np.add.at(shares, granted, 1.0)
+            if backlog.max() >= eng.min_grant_chunks:
+                assert (backlog / shares).max() <= backlog.max() + 1e-6
+
+    def test_regrants_keep_exactness(self, small_spec, zipf_dataset):
+        """Secondary lanes migrate between tenants across flushes (the
+        lifted merge-before-reassign); results stay exact for both."""
+        eng = _session_engine(small_spec, primary_slots=2,
+                              secondary_slots=2)
+        d = {t: np.zeros((0, 2), np.int32) for t in range(2)}
+        sids = {t: eng.open() for t in range(2)}
+        rng = np.random.default_rng(9)
+        for r in range(6):               # alternate who is hot
+            hot = r % 2
+            for t in range(2):
+                n = (6 if t == hot else 1) * SMALL_CHUNK \
+                    + int(rng.integers(0, 50))
+                batch = zipf_dataset(n, DOMAIN, 1.5, seed=10 * r + t)
+                d[t] = np.concatenate([d[t], batch])
+                eng.append(sids[t], batch)
+            eng.flush()
+        assert eng._slot_reschedules > 0     # grants really moved
+        for t in range(2):
+            merged, stats = eng.close(sids[t])
+            np.testing.assert_array_equal(merged, _oracle(d[t][:, 0]))
+            if t == 0:
+                assert stats["sec_lane_flushes"] > 0
+
+    def test_non_decomposable_rejects_secondary(self):
+        from repro.apps import dp
+        spec = dp.make_spec(3, SMALL_M, capacity_per_pe=1024)
+        with pytest.raises(ValueError, match="secondary_slots=0"):
+            _session_engine(spec, secondary_slots=1)
