@@ -29,19 +29,46 @@ per-PE load (all tuples to one shard) or tuples drop; with X secondary
 shards scheduled to the hot PEs, the same drop rate is reached with
 near-uniform capacity -- measured by tests/test_distributed.py and
 examples/distributed_ditto.py.
+
+This module also hosts the SERVING-layer lift of the same mapping
+(DESIGN.md §9): ``make_lane_sharded_executor`` shards the slot *lanes*
+of ``serve.SessionEngine`` -- each lane a full resumable executor carry
+-- along a mesh ``lanes`` axis, so one engine serves
+``P x lanes_per_device`` tenants.  The §IV-B shadow-buffer merge of a
+re-granted lane becomes a ``psum`` collective over the lanes axis (the
+re-granted lane and its old owner's primary lane may live on different
+devices).  Full mapping table + worked example: docs/distributed.md.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import executor as core_executor
 from repro.core import mapper as core_mapper
 from repro.core import scheduler as core_scheduler
 from repro.core.types import DittoSpec, RoutePlan
+
+
+def _shard_map():
+    """jax.shard_map only exists from jax 0.6; fall back to the
+    experimental home it had before that."""
+    try:
+        return jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as _sm
+
+        def shard_map(f, mesh, in_specs, out_specs):
+            return _sm(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+
+        return shard_map
 
 
 def make_distributed_executor(spec: DittoSpec, mesh, num_pri: int,
@@ -105,17 +132,7 @@ def make_distributed_executor(spec: DittoSpec, mesh, num_pri: int,
         workload = jax.lax.psum(workload, axis)              # global hist
         return (new_buf[None], my_load[None], dropped[None], workload)
 
-    # jax.shard_map only exists from jax 0.6; fall back to the
-    # experimental home it had before that
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map as _sm
-
-        def shard_map(f, mesh, in_specs, out_specs):
-            return _sm(f, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False)
-
+    shard_map = _shard_map()
     pspec = P(axis)
     return jax.jit(shard_map(
         step, mesh=mesh,
@@ -166,3 +183,167 @@ def run_stream(spec: DittoSpec, mesh, tuples, num_pri: int, num_sec: int,
              "dropped_postplan": sum(drops[pc:]),
              "assignment": assignment}
     return merged, stats
+
+
+# ---------------------------------------------------------------------------
+# Lane-sharded serving executor (DESIGN.md §9): slot lanes across devices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLaneExecutor:
+    """A lanes-stacked ``ResumableExecutor`` sharded across a mesh axis.
+
+    Where ``make_distributed_executor`` maps one *PE* to one shard (the
+    routed dataflow inside a single stream), this maps one *slot lane*
+    -- a whole per-session executor carry -- to a mesh-shard slice, the
+    serving-layer lift: P devices x lanes_per_device lanes, each lane an
+    independent ``ExecState`` advanced by the vmapped chunk scan of its
+    local shard.  No collective is needed on the flush path (lanes are
+    independent streams); the collectives live in the slot re-scheduling
+    path, where the §IV-B shadow-buffer merge crosses devices:
+
+      run_lanes(states, chunks, mask)  one shard_map'd step: every shard
+                                       vmaps the chunk scan over its
+                                       local lanes (zero communication)
+      fold_lane(states, src, dst)      merge-before-reassign as a
+                                       collective: src's merged buffers
+                                       are masked out locally, psum'd
+                                       over the lanes axis, combined
+                                       (add/max) into dst's primary
+                                       region on dst's shard, and src is
+                                       reset to fresh on its shard
+      merge_lane(states, i)            replicated merged snapshot of one
+                                       lane (the query path), same
+                                       mask + psum selection
+      reset_lane(states, i)            fresh-lane reset on i's shard
+
+    ``num_lanes`` must divide evenly over the mesh axis (shard_map's
+    even-split contract); ``serve.SessionEngine`` surfaces the
+    divisibility requirement at construction.  A mesh of size 1 degenerates to the
+    single-device engine bit-exactly: the vmap body is identical and the
+    psum/selection collectives are identities over a 1-sized axis.
+    """
+
+    res: core_executor.ResumableExecutor
+    mesh: object
+    num_lanes: int
+    axis: str
+    lanes_per_device: int
+    lane_sharding: NamedSharding
+    run_lanes: Callable = dataclasses.field(repr=False)
+    fold_lane: Optional[Callable] = dataclasses.field(repr=False)
+    merge_lane: Callable = dataclasses.field(repr=False)
+    reset_lane: Callable = dataclasses.field(repr=False)
+
+    def init_states(self):
+        """Fresh lanes-stacked ``ExecState``, device_put to the lane
+        sharding (leaf axis 0 split over the mesh's lanes axis)."""
+        stacked = core_executor.stack_states(self.res.init_state(),
+                                             self.num_lanes)
+        return jax.device_put(stacked, self.lane_sharding)
+
+    def shard_states(self, states):
+        """Re-pin a lanes-stacked state to the lane sharding (after a
+        host-side or cross-shard edit, e.g. ``executor.put_lanes``)."""
+        return jax.device_put(states, self.lane_sharding)
+
+
+def make_lane_sharded_executor(res: core_executor.ResumableExecutor, mesh,
+                               num_lanes: int, *,
+                               axis: str = "lanes") -> ShardedLaneExecutor:
+    """Build the shard_map'd lane operations for ``num_lanes`` slot lanes
+    of ``res`` split over ``mesh``'s ``axis``.  See ShardedLaneExecutor."""
+    num_dev = dict(mesh.shape)[axis]
+    if num_lanes % num_dev:
+        raise ValueError(
+            f"num_lanes={num_lanes} must be divisible by the mesh's "
+            f"'{axis}' axis size {num_dev} (shard_map splits the lanes "
+            "axis evenly); pad primary/secondary slots up")
+    lanes_per_device = num_lanes // num_dev
+    shard_map = _shard_map()
+    pspec = P(axis)
+    sharding = NamedSharding(mesh, pspec)
+    fresh = res.init_state()
+
+    def local_ids():
+        """Global lane ids of this shard's local slice."""
+        return (jax.lax.axis_index(axis) * lanes_per_device
+                + jnp.arange(lanes_per_device, dtype=jnp.int32))
+
+    def select(tree, sel):
+        """Zero out every local lane but ``sel``'s, then drop the lane
+        axis by summation: at most one local lane matches, so this
+        extracts it exactly (adding zeros is exact for int and float
+        alike); shards owning no match produce an all-zero pytree."""
+        def leaf(x):
+            selb = sel.reshape(sel.shape + (1,) * (x.ndim - 1))
+            return jnp.where(selb, x, jnp.zeros((), x.dtype)).sum(axis=0)
+        return jax.tree.map(leaf, tree)
+
+    def merge_selected(states, sel):
+        """Merged snapshot of the ONE globally selected lane, computed
+        with a single per-shard merge: select the lane's ExecState
+        locally, merge it once, zero the result on non-owner shards
+        (whose selected state is all-zero garbage), and let the caller
+        psum.  Exact for any dtype -- only the owner contributes."""
+        merged = res.merge_state_raw(select(states, sel))
+        own = sel.any()
+        return jax.tree.map(
+            lambda x: jnp.where(own, x, jnp.zeros((), x.dtype)), merged)
+
+    def set_lane(states, sel, value):
+        """Overwrite the local lanes matching ``sel`` with ``value`` (a
+        single-lane pytree, broadcast over the selector)."""
+        def leaf(x, v):
+            selb = sel.reshape(sel.shape + (1,) * (x.ndim - 1))
+            return jnp.where(selb, v, x)
+        return jax.tree.map(leaf, states, value)
+
+    def _run(states, chunks, mask):
+        return jax.vmap(res.scan_chunks)(states, chunks, mask)
+
+    run_lanes = jax.jit(shard_map(
+        _run, mesh=mesh, in_specs=(pspec, pspec, pspec),
+        out_specs=(pspec, pspec)))
+
+    def _merge(states, i):
+        picked = merge_selected(states, local_ids() == i)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis), picked)
+
+    merge_lane = jax.jit(shard_map(
+        _merge, mesh=mesh, in_specs=(pspec, P()), out_specs=P()))
+
+    def _reset(states, i):
+        return set_lane(states, local_ids() == i, fresh)
+
+    reset_lane = jax.jit(shard_map(
+        _reset, mesh=mesh, in_specs=(pspec, P()), out_specs=pspec))
+
+    fold_lane = None
+    if res.spec.merge is None:        # decomposable buffers only (add/max)
+        def _fold(states, src, dst):
+            gid = local_ids()
+            # src's merged contribution, delivered to every shard: the
+            # §IV-B merge-before-reassign expressed as a collective
+            contrib = jax.lax.psum(merge_selected(states, gid == src), axis)
+            own = (gid == dst).reshape((-1,) + (1,) * contrib.ndim)
+            bufs = states.buffers                    # [L, M+X, *local]
+            m = res.num_pri
+            if res.spec.combine == "add":
+                bufs = bufs.at[:, :m].add(jnp.where(own, contrib, 0))
+            else:
+                neutral = (jnp.iinfo(bufs.dtype).min
+                           if jnp.issubdtype(bufs.dtype, jnp.integer)
+                           else -jnp.inf)
+                bufs = bufs.at[:, :m].max(jnp.where(own, contrib, neutral))
+            states = dataclasses.replace(states, buffers=bufs)
+            return set_lane(states, gid == src, fresh)
+
+        fold_lane = jax.jit(shard_map(
+            _fold, mesh=mesh, in_specs=(pspec, P(), P()), out_specs=pspec))
+
+    return ShardedLaneExecutor(
+        res=res, mesh=mesh, num_lanes=num_lanes, axis=axis,
+        lanes_per_device=lanes_per_device, lane_sharding=sharding,
+        run_lanes=run_lanes, fold_lane=fold_lane, merge_lane=merge_lane,
+        reset_lane=reset_lane)

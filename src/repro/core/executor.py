@@ -317,7 +317,9 @@ class ResumableExecutor:
     disturbing the SecPE shadow buffers (``merge_state``), and keep
     going.  ``step`` is the raw un-jitted scan body ``(state, (chunk,
     mask)) -> (state, stats)`` for callers that compose their own scans
-    or vmaps (e.g. the slot-stacked SessionEngine).
+    or vmaps (e.g. the slot-stacked SessionEngine);
+    ``merge_state_raw`` is the un-jitted snapshot for the same purpose
+    (vmapped per lane under ``shard_map`` in the distributed engine).
     """
 
     spec: DittoSpec
@@ -327,6 +329,7 @@ class ResumableExecutor:
     step: Callable = dataclasses.field(repr=False)
     run_chunks: Callable = dataclasses.field(repr=False)
     merge_state: Callable = dataclasses.field(repr=False)
+    merge_state_raw: Callable = dataclasses.field(repr=False)
 
     def init_state(self) -> ExecState:
         return init_state(self.spec, self.num_pri, self.num_sec)
@@ -381,13 +384,39 @@ def make_resumable_executor(
     def run_chunks(state, chunks, mask=None):
         return jax.lax.scan(step, state, (chunks, mask))
 
-    @jax.jit
-    def merge_state(state):
+    def merge_state_raw(state):
         return _merge_state(spec, num_pri, state)
 
     return ResumableExecutor(spec=spec, num_pri=num_pri, num_sec=num_sec,
                              chunk_size=chunk_size, step=step,
-                             run_chunks=run_chunks, merge_state=merge_state)
+                             run_chunks=run_chunks,
+                             merge_state=jax.jit(merge_state_raw),
+                             merge_state_raw=merge_state_raw)
+
+
+def stack_states(state: ExecState, num_lanes: int) -> ExecState:
+    """Broadcast one ``ExecState`` into a lanes-stacked pytree: every leaf
+    gains a leading ``[num_lanes]`` axis.  This is the slot-lane state of
+    ``serve.SessionEngine``; shard axis 0 over a mesh's ``lanes`` axis
+    (``core.distributed.make_lane_sharded_executor``) for the distributed
+    engine (DESIGN.md §9)."""
+    return jax.tree.map(lambda x: jnp.stack([x] * num_lanes), state)
+
+
+def take_lanes(states: ExecState, idx) -> ExecState:
+    """Gather lane sub-states ``idx`` (int array) out of a lanes-stacked
+    ``ExecState``.  On a sharded state this is the cross-device resume
+    path: the gathered lanes materialize wherever the caller computes,
+    regardless of which shard held them -- an ``ExecState`` is an
+    ordinary pytree of arrays, so suspending on one device and resuming
+    on another is just this gather + ``put_lanes`` scatter."""
+    return jax.tree.map(lambda x: x[idx], states)
+
+
+def put_lanes(states: ExecState, idx, sub: ExecState) -> ExecState:
+    """Scatter lane sub-states back into a lanes-stacked ``ExecState``
+    (inverse of ``take_lanes``)."""
+    return jax.tree.map(lambda x, s: x.at[idx].set(s), states, sub)
 
 
 def make_multistream_executor(

@@ -13,17 +13,25 @@ import jax
 import jax.numpy as jnp
 
 
-def schedule_secpes(workload: jax.Array, num_sec: int) -> jax.Array:
+def schedule_secpes(workload: jax.Array, num_sec: int, *,
+                    min_load=None) -> jax.Array:
     """Greedy max-load splitting.
 
     Args:
       workload: int/float[M] per-PriPE tuple counts from the profiler.
       num_sec:  X, the number of schedulable SecPEs.
+      min_load: when given, grants to PriPEs whose workload is below this
+        floor are suppressed to -1 (idle SecPE).  The paper always
+        schedules every SecPE (helping a balanced PriPE is harmless at
+        PE granularity), but the lifted schedulers -- tenant-level slot
+        grants in ``serve.SessionEngine``, cross-device lane grants in
+        the distributed engine -- pay a real merge on every re-grant, so
+        a helper that cannot shorten the scan (backlog below
+        ``min_grant_chunks``) is net negative there.
 
     Returns:
-      assignment: int32[X] with assignment[j] = PriPE id SecPE j shadows.
-      (Every SecPE is always scheduled, as in the paper; helping an already
-      balanced PriPE is harmless.)
+      assignment: int32[X] with assignment[j] = PriPE id SecPE j shadows
+      (or -1 where ``min_load`` suppressed the grant).
     """
     m = workload.shape[0]
     if num_sec == 0:
@@ -41,6 +49,9 @@ def schedule_secpes(workload: jax.Array, num_sec: int) -> jax.Array:
         return shares, assignment
 
     _, assignment = jax.lax.fori_loop(0, num_sec, body, (shares, assignment))
+    if min_load is not None:
+        hot = w[jnp.clip(assignment, 0, m - 1)] >= min_load
+        assignment = jnp.where(hot, assignment, -1)
     return assignment
 
 

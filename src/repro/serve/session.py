@@ -35,6 +35,23 @@ Suspend/resume + ragged input
   against the one-shot executor on the same tuples for the integer
   paper apps, regardless of append chunking, tails, or slot grants.
 
+Latency tiering (per-session flush)
+  ``query``/``close`` default to ``flush_session``: only the queried
+  session's lane group runs (its own backlog width, <= 1 + granted
+  lanes instead of all engine lanes), so a tenant's query latency is
+  bounded by its OWN backlog under many-tenant load.  ``flush()``
+  remains the engine-wide path (and the only place slot re-scheduling
+  happens); both produce identical results for any interleaving.
+
+Distributed mode (DESIGN.md §9, docs/distributed.md)
+  ``SessionEngine(mesh=...)`` shards the lane axis over the mesh's
+  ``lanes`` axis via ``core.distributed.make_lane_sharded_executor``:
+  P devices x lanes_per_device lanes, one engine serving more tenants
+  than one device's lane budget.  Flushes stay collective-free (lanes
+  are independent streams, shard_map + local vmap); a cross-device slot
+  re-grant runs the §IV-B shadow-buffer merge as a psum over the lanes
+  axis.  A mesh of size 1 is bit-exact vs the unsharded engine.
+
 Telemetry
   Per-flush counters (tuples, chunks, lane width, secondary grants,
   slot re-schedules, backlog, occupancy, modeled cycles) accumulate
@@ -105,6 +122,13 @@ class SessionEngine:
       min_grant_chunks: a session must have at least this many backlog
         chunks before it can be granted a secondary lane (a helper lane
         for <2 chunks cannot shorten the scan).
+      mesh: a ``jax.sharding.Mesh`` with a ``lanes_axis`` axis.  When
+        given, the slot lanes are sharded over that axis (DESIGN.md §9):
+        ``primary_slots + secondary_slots`` must be divisible by the
+        axis size.  ``mesh=None`` (default) keeps everything on the
+        current device; a mesh of size 1 is bit-exact vs ``mesh=None``.
+      lanes_axis: the mesh axis name holding the lanes (default
+        ``"lanes"``).
       **executor_kw: forwarded to ``core.make_resumable_executor``
         (profile_chunks, threshold, mem_width_tuples, kernel_backend).
     """
@@ -113,7 +137,8 @@ class SessionEngine:
                  num_sec: Optional[int] = None,
                  chunk_size: Optional[int] = None, tuned=None,
                  primary_slots: int = 4, secondary_slots: int = 2,
-                 min_grant_chunks: int = 2,
+                 min_grant_chunks: int = 2, mesh=None,
+                 lanes_axis: str = "lanes",
                  kernel_backend: Optional[str] = None, **executor_kw):
         if tuned is not None:
             if num_pri is not None and num_pri != tuned.num_pri:
@@ -129,11 +154,16 @@ class SessionEngine:
             raise ValueError(
                 f"{spec.name}: non-decomposable buffers cannot be combined "
                 "across lanes; use secondary_slots=0")
+        if mesh is not None and lanes_axis not in dict(mesh.shape):
+            raise ValueError(
+                f"mesh has no '{lanes_axis}' axis; mesh axes: "
+                f"{tuple(dict(mesh.shape))}")
         self.spec = spec
         self.primary_slots = primary_slots
         self.secondary_slots = secondary_slots
         self.min_grant_chunks = min_grant_chunks
         self.num_lanes = primary_slots + secondary_slots
+        self.mesh = mesh
 
         self._res = core_executor.make_resumable_executor(
             spec, num_pri, num_sec, chunk_size,
@@ -142,17 +172,37 @@ class SessionEngine:
         self.chunk_size = self._res.chunk_size
         fresh = self._res.init_state()
         self._fresh = fresh
-        self._states = jax.tree.map(
-            lambda x: jnp.stack([x] * self.num_lanes), fresh)
-        self._run_lanes = jax.jit(jax.vmap(self._res.scan_chunks))
-        self._merge_lane = jax.jit(
-            lambda states, i: self._res.merge_state(
-                jax.tree.map(lambda x: x[i], states)))
-        self._reset_lane = jax.jit(
-            lambda states, i: jax.tree.map(
-                lambda x, f: x.at[i].set(f), states, self._fresh))
-        if spec.merge is None:
-            self._fold_lane = jax.jit(self._fold_lane_impl)
+        self._sharded = None
+        if mesh is not None:
+            from repro.core import distributed as core_distributed
+            self._sharded = core_distributed.make_lane_sharded_executor(
+                self._res, mesh, self.num_lanes, axis=lanes_axis)
+            self.lanes_per_device = self._sharded.lanes_per_device
+            self._states = self._sharded.init_states()
+            self._run_lanes = self._sharded.run_lanes
+            self._merge_lane = self._sharded.merge_lane
+            self._reset_lane = self._sharded.reset_lane
+            if spec.merge is None:
+                self._fold_lane = self._sharded.fold_lane
+        else:
+            self.lanes_per_device = self.num_lanes
+            self._states = core_executor.stack_states(fresh, self.num_lanes)
+            self._run_lanes = jax.jit(jax.vmap(self._res.scan_chunks))
+            self._merge_lane = jax.jit(
+                lambda states, i: self._res.merge_state(
+                    jax.tree.map(lambda x: x[i], states)))
+            self._reset_lane = jax.jit(
+                lambda states, i: jax.tree.map(
+                    lambda x, f: x.at[i].set(f), states, self._fresh))
+            if spec.merge is None:
+                self._fold_lane = jax.jit(self._fold_lane_impl)
+        # per-session flush runs the lane GROUP locally in both modes:
+        # take_lanes gathers the group's ExecStates across device
+        # boundaries, the vmapped scan resumes them here, put_lanes
+        # scatters them back (cross-device suspend/resume, DESIGN.md §9)
+        self._run_group = jax.jit(jax.vmap(self._res.scan_chunks))
+        self._take_lanes = jax.jit(core_executor.take_lanes)
+        self._put_lanes = jax.jit(core_executor.put_lanes)
 
         self.sessions: Dict[int, _Session] = {}
         self._queue: List[int] = []                      # sids awaiting a slot
@@ -195,21 +245,34 @@ class SessionEngine:
             s.backlog_tuples += len(data)
             s.stats.tuples_appended += len(data)
 
-    def query(self, sid: int):
+    def query(self, sid: int, *, scope: str = "session"):
         """Merged-buffer snapshot of everything appended so far.
 
         Forces this session's backlog (including the ragged tail, as a
         masked chunk) through the lanes, then combines its primary lane
         with any granted secondary lanes -- non-destructively, like the
         merger reading PriPE+SecPE buffers without resetting them, so the
-        session keeps streaming afterwards."""
+        session keeps streaming afterwards.
+
+        ``scope`` picks the flush tier (identical results either way):
+        ``"session"`` (default) runs ``flush_session`` -- only this
+        session's lane group scans, so the latency is bounded by the
+        session's OWN backlog; ``"engine"`` runs a full ``flush`` (every
+        admitted session advances, secondary grants re-scheduled), the
+        pre-latency-tiering behavior."""
         s = self._session(sid)
         if s.slot is None:
             raise RuntimeError(
                 f"session {sid} is queued (all {self.primary_slots} primary "
                 "slots busy); nothing has run yet -- close another session "
                 "to admit it before querying")
-        self.flush(force=(sid,))
+        if scope == "session":
+            self.flush_session(sid)
+        elif scope == "engine":
+            self.flush(force=(sid,))
+        else:
+            raise ValueError(f"query scope {scope!r} not in "
+                             "('session', 'engine')")
         s.stats.queries += 1
         return self._snapshot(s)
 
@@ -224,7 +287,8 @@ class SessionEngine:
                 f"session {sid} is queued with {s.backlog_tuples} buffered "
                 "tuples; close another session to admit it first (refusing "
                 "to discard data)")
-        self.flush(force=(sid,))
+        if s.slot is not None:
+            self.flush_session(sid)
         merged = self._snapshot(s)
         if s.slot is not None:
             for j in range(self.secondary_slots):
@@ -268,53 +332,133 @@ class SessionEngine:
             if sid is None:
                 continue
             s = self.sessions[sid]
-            lanes = [slot] + [self.primary_slots + j
-                              for j in range(self.secondary_slots)
-                              if self._sec_assign[j] == slot]
+            lanes = self._lane_group(slot)
             for ln in lanes:
                 lane_sid[ln] = sid
-            chunks, masks = self._take_chunks(s, flush_tail=sid in force)
-            for k, (c, m) in enumerate(zip(chunks, masks)):
-                lane = lanes[k % len(lanes)]
-                lane_chunks[lane].append(c)
-                lane_masks[lane].append(m)
-                if lane != slot:
-                    s.stats.sec_lane_flushes += 1
-            n_real = int(sum(m.sum() for m in masks))
+            gc, gm, n_real = self._take_striped(
+                s, lanes, flush_tail=sid in force)
+            for g, ln in enumerate(lanes):
+                lane_chunks[ln].extend(gc[g])
+                lane_masks[ln].extend(gm[g])
             flushed_tuples += n_real
-            s.stats.tuples_flushed += n_real
-            s.stats.chunks_flushed += len(chunks)
 
-        width = max((len(c) for c in lane_chunks), default=0)
+        width = self._batch_width(lane_chunks)
         if width:
-            width = 1 << (width - 1).bit_length()     # stable jit shapes
             self._run_flush(lane_chunks, lane_masks, lane_sid, width)
         self._record_flush(flushed_tuples, lane_chunks, width)
         self._flush_no += 1
 
+    def flush_session(self, sid: int) -> None:
+        """Advance ONLY this session's stream: its backlog (ragged tail
+        included, as a masked chunk) stripes across its current lane
+        group and a single vmapped scan over <= 1 + granted lanes runs
+        it -- the latency-tiering fast path behind ``query``.
+
+        No admission and no secondary re-scheduling happen here (both
+        stay on the engine-wide ``flush``), so the cost is bounded by
+        this session's own backlog.  In distributed mode the lane group
+        is gathered across device boundaries (``executor.take_lanes``),
+        resumed locally, and scattered back -- when all of the session's
+        lanes live on one device, the gather touches a single shard (the
+        local-shard fast path)."""
+        s = self._session(sid)
+        if s.slot is None:
+            raise RuntimeError(
+                f"session {sid} is queued (all {self.primary_slots} primary "
+                "slots busy); nothing has run yet -- close another session "
+                "to admit it first")
+        lanes = self._lane_group(s.slot)
+        group_chunks, group_masks, n_real = self._take_striped(
+            s, lanes, flush_tail=True)
+        width = self._batch_width(group_chunks)
+        if width:
+            arr, msk = self._pack_chunks(group_chunks, group_masks, width)
+            idx = np.asarray(lanes, np.int32)
+            sub = self._take_lanes(self._states, idx)
+            sub, stats = self._run_group(sub, arr, msk)
+            states = self._put_lanes(self._states, idx, sub)
+            self._states = (states if self._sharded is None
+                            else self._sharded.shard_states(states))
+            self._apply_exec_stats(stats, [s] * len(lanes),
+                                   [len(c) for c in group_chunks])
+        self._record_flush(n_real, group_chunks, width, scope="session")
+        self._flush_no += 1
+
+    def _lane_group(self, slot: int) -> List[int]:
+        """The lane ids a primary slot currently owns: its primary lane
+        plus every secondary lane granted to it."""
+        return [slot] + [self.primary_slots + j
+                         for j in range(self.secondary_slots)
+                         if self._sec_assign[j] == slot]
+
+    def _take_striped(self, s: _Session, lanes: List[int],
+                      flush_tail: bool):
+        """Pop the session's pending chunks and stripe them round-robin
+        over its lane group, with the flush accounting (tuples / chunks
+        / sec-lane stats) -- the one striping rule BOTH flush tiers use,
+        so they cannot drift apart."""
+        chunks, masks = self._take_chunks(s, flush_tail=flush_tail)
+        gc: List[List[np.ndarray]] = [[] for _ in lanes]
+        gm: List[List[np.ndarray]] = [[] for _ in lanes]
+        for k, (c, m) in enumerate(zip(chunks, masks)):
+            g = k % len(lanes)
+            gc[g].append(c)
+            gm[g].append(m)
+            if lanes[g] != s.slot:
+                s.stats.sec_lane_flushes += 1
+        n_real = int(sum(m.sum() for m in masks))
+        s.stats.tuples_flushed += n_real
+        s.stats.chunks_flushed += len(chunks)
+        return gc, gm, n_real
+
+    @staticmethod
+    def _batch_width(lane_chunks) -> int:
+        """Scan width for a flush batch: the widest lane's chunk count,
+        rounded up to a power of two so jit retraces stay logarithmic;
+        0 when nothing is pending."""
+        w = max((len(c) for c in lane_chunks), default=0)
+        return 1 << (w - 1).bit_length() if w else 0
+
     def _run_flush(self, lane_chunks, lane_masks, lane_sid, width):
+        chunks, mask = self._pack_chunks(lane_chunks, lane_masks, width)
+        if self._sharded is not None:    # split the batch over the mesh
+            chunks = jax.device_put(chunks, self._sharded.lane_sharding)
+            mask = jax.device_put(mask, self._sharded.lane_sharding)
+        self._states, stats = self._run_lanes(self._states, chunks, mask)
+        self._apply_exec_stats(
+            stats,
+            [None if sid is None else self.sessions[sid]
+             for sid in lane_sid],
+            [len(c) for c in lane_chunks])
+
+    def _pack_chunks(self, lane_chunks, lane_masks, width):
+        """Pack per-lane chunk/mask lists into the dense
+        [lanes, width, chunk, feat] batch the vmapped scan takes;
+        unfilled rows stay all-masked zero padding (exact no-ops)."""
         c = self.chunk_size
         feat = self._feat_shape or (1,)
-        dtype = self._dtype or np.int32
-        chunks = np.zeros((self.num_lanes, width, c, *feat), dtype)
-        mask = np.zeros((self.num_lanes, width, c), bool)
-        for ln in range(self.num_lanes):
+        chunks = np.zeros((len(lane_chunks), width, c, *feat),
+                          self._dtype or np.int32)
+        mask = np.zeros((len(lane_chunks), width, c), bool)
+        for ln in range(len(lane_chunks)):
             for k, (ch, m) in enumerate(zip(lane_chunks[ln], lane_masks[ln])):
                 chunks[ln, k] = ch
                 mask[ln, k] = m
-        self._states, stats = self._run_lanes(
-            self._states, jnp.asarray(chunks), jnp.asarray(mask))
-        cycles = np.asarray(stats.modeled_cycles)       # [L, width]
+        return jnp.asarray(chunks), jnp.asarray(mask)
+
+    def _apply_exec_stats(self, stats, row_sessions, row_counts):
+        """Fold the scan's per-(lane, chunk) ExecStats into each row's
+        owning session (first ``row_counts[row]`` entries are real)."""
+        cycles = np.asarray(stats.modeled_cycles)       # [rows, width]
         loads = np.asarray(stats.max_load)
         resched = np.asarray(stats.rescheduled)
-        for ln in range(self.num_lanes):
-            sid, k = lane_sid[ln], len(lane_chunks[ln])
-            if sid is None or k == 0:
+        for row, (s, k) in enumerate(zip(row_sessions, row_counts)):
+            if s is None or k == 0:
                 continue
-            st = self.sessions[sid].stats
-            st.modeled_cycles += float(cycles[ln, :k].sum())
-            st.max_load = max(st.max_load, int(loads[ln, :k].max()))
-            st.exec_reschedules += int(resched[ln, :k].sum())
+            s.stats.modeled_cycles += float(cycles[row, :k].sum())
+            s.stats.max_load = max(s.stats.max_load,
+                                   int(loads[row, :k].max()))
+            s.stats.exec_reschedules += int(resched[row, :k].sum())
 
     def _take_chunks(self, s: _Session, flush_tail: bool):
         """Pop full chunks (plus, when forced, the masked ragged tail)
@@ -357,15 +501,15 @@ class SessionEngine:
     def plan_secondary(self, backlog_chunks: np.ndarray) -> np.ndarray:
         """Greedy max-backlog splitting: ``scheduler.schedule_secpes`` over
         the per-slot chunk backlog, with grants to sessions below
-        ``min_grant_chunks`` suppressed (idle -1).  Exposed for tests: the
-        tenant-level plan must inherit the paper's Fig. 5 properties."""
+        ``min_grant_chunks`` suppressed (the scheduler's ``min_load``
+        floor).  Exposed for tests: the tenant-level plan must inherit
+        the paper's Fig. 5 properties."""
         if self.secondary_slots == 0:
             return np.zeros(0, np.int64)
-        a = np.asarray(scheduler.schedule_secpes(
+        return np.asarray(scheduler.schedule_secpes(
             jnp.asarray(backlog_chunks, jnp.float32),
-            self.secondary_slots)).astype(np.int64)
-        hot = backlog_chunks[np.clip(a, 0, None)] >= self.min_grant_chunks
-        return np.where(hot, a, -1)
+            self.secondary_slots,
+            min_load=float(self.min_grant_chunks))).astype(np.int64)
 
     def _reschedule_secondary(self) -> None:
         new = self.plan_secondary(self._backlog_chunks())
@@ -413,12 +557,14 @@ class SessionEngine:
 
     # ------------------------------------------------------------- telemetry
 
-    def _record_flush(self, tuples: int, lane_chunks, width: int) -> None:
+    def _record_flush(self, tuples: int, lane_chunks, width: int,
+                      scope: str = "engine") -> None:
         active = sum(sid is not None for sid in self._slot_sid)
         backlog = sum(s.backlog_tuples for s in self.sessions.values()
                       if not s.closed)
         self._telemetry.append({
             "flush": self._flush_no,
+            "scope": scope,
             "active_sessions": active,
             "queued_sessions": len(self._queue),
             "tuples": int(tuples),
@@ -455,6 +601,10 @@ class SessionEngine:
                     "chunk_size": self.chunk_size,
                     "primary_slots": self.primary_slots,
                     "secondary_slots": self.secondary_slots,
+                    "mesh_devices": (None if self._sharded is None
+                                     else self.num_lanes
+                                     // self.lanes_per_device),
+                    "lanes_per_device": self.lanes_per_device,
                 },
                 "totals": totals,
             },

@@ -1,8 +1,11 @@
 """Docs-layer integrity: every `DESIGN.md §N` reference in the tree
-resolves to a committed section, and the benchmark schema docs stay in
-sync with the validator."""
+resolves to a committed section, every module path / `repro` symbol
+named in docs/ + DESIGN.md actually exists (paths on disk, symbols via
+import), every page under docs/ is reachable from the README docs
+index, and the benchmark schema docs stay in sync with the validator."""
 from __future__ import annotations
 
+import importlib
 import re
 import sys
 from pathlib import Path
@@ -10,10 +13,19 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 if str(REPO) not in sys.path:
     sys.path.insert(0, str(REPO))
+SRC = REPO / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
 
 SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.M)
 REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
 CODE_DIRS = ("src", "benchmarks", "examples", "tests")
+
+DOC_FILES = [REPO / "DESIGN.md"] + sorted((REPO / "docs").glob("*.md"))
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^[\w./-]*/[\w.-]+\.(?:py|md|json|yml)$")
+DOTTED_RE = re.compile(r"^[A-Za-z_]\w*(?:\.[A-Za-z_]\w*)+$")
 
 
 def _design_sections() -> set:
@@ -50,6 +62,100 @@ def test_readme_covers_commands():
     assert "python -m pytest -x -q" in text          # tier-1
     assert "python -m benchmarks.run --fast" in text  # bench smoke
     assert "DESIGN.md" in text and "docs/benchmarks.md" in text
+
+
+def _doc_spans():
+    """(file, span) for every inline-code span in docs/ + DESIGN.md,
+    with fenced example blocks stripped (they hold illustrative code,
+    not references)."""
+    for p in DOC_FILES:
+        text = FENCE_RE.sub("", p.read_text())
+        for span in SPAN_RE.findall(text):
+            yield p.name, span.strip()
+
+
+def _symbol_roots():
+    """First-segment names that mark a span as a codebase symbol: the
+    repro top-level packages, the core submodules (docs shorthand like
+    `scheduler.schedule_secpes`), plus `repro` / `benchmarks`."""
+    roots = {"repro", "benchmarks"}
+    for p in (SRC / "repro").iterdir():
+        if p.is_dir() and (p / "__init__.py").exists():
+            roots.add(p.name)
+    for p in (SRC / "repro" / "core").glob("*.py"):
+        if p.stem != "__init__":
+            roots.add(p.stem)
+    return roots
+
+
+def _resolves(token: str) -> bool:
+    """True iff ``token`` imports as a module or getattr-chains from
+    one (dataclass fields count: they are real attributes on
+    instances)."""
+    for prefix in ("", "repro.", "repro.core.", "repro.data.",
+                   "repro.serve.", "repro.tune."):
+        parts = (prefix + token).split(".")
+        for k in range(len(parts), 0, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:k]))
+            except ImportError:
+                continue
+            ok = True
+            for name in parts[k:]:
+                fields = getattr(obj, "__dataclass_fields__", {})
+                if hasattr(obj, name) or name in fields:
+                    obj = getattr(obj, name, None)
+                else:
+                    ok = False
+                    break
+            if ok:
+                return True
+    return False
+
+
+def test_every_doc_path_exists():
+    """Module paths named in docs (`core/executor.py`, `docs/*.md`, ...)
+    must exist -- repo-relative, src/-relative, or src/repro/-relative."""
+    missing = []
+    for doc, span in _doc_spans():
+        if not PATH_RE.match(span):
+            continue
+        if not any((base / span).exists()
+                   for base in (REPO, SRC, SRC / "repro")):
+            missing.append(f"{doc}: {span}")
+    assert not missing, f"docs name nonexistent paths: {missing}"
+
+
+def test_every_doc_symbol_imports():
+    """Every dotted `repro`/`benchmarks` symbol in docs/ + DESIGN.md
+    resolves via import (stale renames fail here, mechanically)."""
+    roots = _symbol_roots()
+    checked, dangling = 0, []
+    for doc, span in _doc_spans():
+        token = re.sub(r"\(.*\)$", "", span)
+        if not DOTTED_RE.match(token) or token.split(".")[0] not in roots:
+            continue
+        checked += 1
+        if not _resolves(token):
+            dangling.append(f"{doc}: {span}")
+    assert not dangling, f"docs name unresolvable symbols: {dangling}"
+    assert checked >= 20, (
+        f"only {checked} doc symbols checked -- the sweep regressed")
+
+
+def test_docs_reachable_from_readme_index():
+    """Every page under docs/ must be linked from the README docs index
+    (one-hop navigation), and the architecture map must link the rest
+    of the docs layer."""
+    readme = (REPO / "README.md").read_text()
+    pages = sorted(p.name for p in (REPO / "docs").glob("*.md"))
+    assert pages, "docs/ is empty"
+    unreachable = [n for n in pages if f"docs/{n}" not in readme]
+    assert not unreachable, f"README docs index missing: {unreachable}"
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    for target in ["DESIGN.md"] + [f"docs/{n}" for n in pages
+                                   if n != "architecture.md"]:
+        assert target in arch, f"docs/architecture.md does not link {target}"
 
 
 def test_benchmarks_doc_matches_schema_version():

@@ -1,12 +1,15 @@
-"""Serving-layer suite (DESIGN.md §8): StreamEngine batch formation /
+"""Serving-layer suite (DESIGN.md §8, §9): StreamEngine batch formation /
 padding isolation, SessionEngine bit-exactness vs the one-shot executor
-(uniform + Zipf 1.5, ragged appends), and the tenant-level skew
-scheduler's slot-allocation properties."""
+(uniform + Zipf 1.5, ragged appends), the tenant-level skew scheduler's
+slot-allocation properties, the per-session flush tier, and the
+mesh-of-1 distributed engine (which must be bit-exact vs the unsharded
+one; multi-device runs live in tests/test_distributed.py)."""
 from __future__ import annotations
 
 import sys
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -274,6 +277,173 @@ class TestSessionEngine:
         rec = validate_record(eng.telemetry_record())
         assert rec["rows"] and rec["rows"][0]["tuples"] == 3 * SMALL_CHUNK
         assert rec["extra"]["totals"]["sessions_opened"] == 1
+
+
+# --------------------------------------- per-session flush (latency tier)
+class TestPerSessionFlush:
+    def test_query_scopes_identical_results(self, small_spec, zipf_dataset):
+        """Acceptance: the per-session flush tier returns results
+        identical to the engine-wide flush, for every tenant, with
+        pending backlog on BOTH."""
+        datasets = {t: zipf_dataset(2 * SMALL_CHUNK + 31 * t, DOMAIN,
+                                    0.7 * t, seed=t) for t in range(2)}
+        snaps = {}
+        for scope in ("session", "engine"):
+            eng = _session_engine(small_spec)
+            sids = {t: eng.open() for t in datasets}
+            for t, d in datasets.items():
+                eng.append(sids[t], d)
+            snaps[scope] = {t: eng.query(sids[t], scope=scope)
+                            for t in datasets}
+        for t, d in datasets.items():
+            np.testing.assert_array_equal(snaps["session"][t],
+                                          snaps["engine"][t])
+            np.testing.assert_array_equal(snaps["session"][t],
+                                          _oracle(d[:, 0]))
+
+    def test_session_flush_leaves_other_backlogs(self, small_spec,
+                                                 zipf_dataset):
+        """flush_session touches ONLY the target session: the other
+        tenant's backlog stays buffered (that is the p99 win), and its
+        eventual answer is still exact."""
+        a, b = zipf_dataset(2 * SMALL_CHUNK, DOMAIN, 1.5, seed=1), \
+            zipf_dataset(3 * SMALL_CHUNK + 17, DOMAIN, 0.0, seed=2)
+        eng = _session_engine(small_spec)
+        sa, sb = eng.open(), eng.open()
+        eng.append(sa, a)
+        eng.append(sb, b)
+        eng.flush_session(sa)
+        assert eng.sessions[sb].backlog_tuples == len(b)   # untouched
+        assert eng.sessions[sa].backlog_tuples == 0
+        np.testing.assert_array_equal(eng.query(sa), _oracle(a[:, 0]))
+        np.testing.assert_array_equal(eng.query(sb), _oracle(b[:, 0]))
+
+    def test_session_flush_uses_granted_lanes(self, small_spec,
+                                              zipf_dataset):
+        """A hot session's per-session flush stripes across its granted
+        secondary lanes (the scan shortens) and stays exact across
+        engine-wide flushes that may re-grant."""
+        eng = _session_engine(small_spec, primary_slots=2,
+                              secondary_slots=2)
+        hot, cold = eng.open(), eng.open()
+        d_hot = zipf_dataset(6 * SMALL_CHUNK + 13, DOMAIN, 1.5, seed=3)
+        eng.append(hot, d_hot)
+        eng.flush()                      # grants secondaries to hot
+        assert eng._lane_group(eng.sessions[hot].slot) != \
+            [eng.sessions[hot].slot]
+        more = zipf_dataset(4 * SMALL_CHUNK + 7, DOMAIN, 1.5, seed=4)
+        eng.append(hot, more)
+        np.testing.assert_array_equal(
+            eng.query(hot),
+            _oracle(np.concatenate([d_hot[:, 0], more[:, 0]])))
+        assert eng.sessions[hot].stats.sec_lane_flushes > 0
+        merged, _ = eng.close(hot)
+        np.testing.assert_array_equal(
+            merged, _oracle(np.concatenate([d_hot[:, 0], more[:, 0]])))
+        eng.close(cold)
+
+    def test_queued_session_flush_raises(self, small_spec, zipf_dataset):
+        eng = _session_engine(small_spec, primary_slots=1)
+        admitted = eng.open()
+        queued = eng.open()
+        with pytest.raises(RuntimeError, match="queued"):
+            eng.flush_session(queued)
+        with pytest.raises(ValueError, match="scope"):
+            eng.query(admitted, scope="bogus")
+
+    def test_telemetry_rows_tag_scope(self, small_spec, zipf_dataset):
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        eng.append(sid, zipf_dataset(2 * SMALL_CHUNK, DOMAIN, 1.5))
+        eng.flush()
+        eng.query(sid)
+        rows = eng.telemetry_record()["rows"]
+        assert rows[0]["scope"] == "engine"
+        assert rows[-1]["scope"] == "session"
+
+
+# ------------------------------------------ distributed engine (mesh of 1)
+def _drive_scenario(eng, datasets, rng_seed=0):
+    """Ragged appends + interleaved flush/query/close; returns every
+    answer keyed by name, for bit-exact engine comparisons."""
+    rng = np.random.default_rng(rng_seed)
+    sids = {t: eng.open(tenant=f"t{t}") for t in datasets}
+    answers = {}
+    for t, data in datasets.items():
+        i = 0
+        while i < len(data):
+            step = int(rng.integers(1, SMALL_CHUNK + 99))
+            eng.append(sids[t], data[i:i + step])
+            i += step
+            if rng.random() < 0.3:
+                eng.flush()
+    eng.flush()
+    for t in datasets:
+        answers[f"q{t}"] = eng.query(sids[t])
+    for t in datasets:
+        merged, stats = eng.close(sids[t])
+        answers[f"c{t}"] = merged
+    return answers
+
+
+class TestSessionEngineMesh1:
+    """Acceptance: a mesh of ONE device is the PR-3 engine, bit-exactly
+    (shard_map over a 1-sized lanes axis degenerates to the local vmap;
+    the psum/selection collectives are identities)."""
+
+    def _mesh(self):
+        return jax.make_mesh((1,), ("lanes",))
+
+    def test_scenario_bit_exact_vs_unsharded(self, small_spec,
+                                             zipf_dataset):
+        datasets = {t: zipf_dataset(3 * SMALL_CHUNK + 41 * t, DOMAIN,
+                                    (0.0, 1.5)[t % 2], seed=t)
+                    for t in range(3)}
+        got = _drive_scenario(
+            _session_engine(small_spec, primary_slots=3,
+                            mesh=self._mesh()), datasets)
+        want = _drive_scenario(_session_engine(small_spec, primary_slots=3),
+                               datasets)
+        assert got.keys() == want.keys()
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+        for t, d in datasets.items():
+            np.testing.assert_array_equal(np.asarray(got[f"c{t}"]),
+                                          _oracle(d[:, 0]))
+
+    def test_regrant_folds_bit_exact(self, small_spec, zipf_dataset):
+        """Alternating hot tenants force secondary re-grants (the
+        collective §IV-B fold path) on the meshed engine; results and
+        re-grant counters match the unsharded engine exactly."""
+        engines = {"mesh": _session_engine(small_spec, mesh=self._mesh()),
+                   "local": _session_engine(small_spec)}
+        results = {}
+        for name, eng in engines.items():
+            d = {t: np.zeros((0, 2), np.int32) for t in range(2)}
+            sids = {t: eng.open() for t in range(2)}
+            for r in range(5):
+                hot = r % 2
+                for t in range(2):
+                    n = (5 if t == hot else 1) * SMALL_CHUNK + 7 * r
+                    batch = zipf_dataset(n, DOMAIN, 1.5, seed=10 * r + t)
+                    d[t] = np.concatenate([d[t], batch])
+                    eng.append(sids[t], batch)
+                eng.flush()
+            results[name] = ([np.asarray(eng.close(sids[t])[0])
+                              for t in range(2)], eng._slot_reschedules)
+        assert results["mesh"][1] == results["local"][1] > 0
+        for got, want in zip(*[results[n][0] for n in ("mesh", "local")]):
+            np.testing.assert_array_equal(got, want)
+
+    def test_mesh_validation(self, small_spec):
+        with pytest.raises(ValueError, match="axis"):
+            _session_engine(small_spec,
+                            mesh=jax.make_mesh((1,), ("pe",)))
+        eng = _session_engine(small_spec, mesh=self._mesh())
+        assert eng.lanes_per_device == eng.num_lanes
+        rec = eng.telemetry_record()
+        assert rec["extra"]["config"]["mesh_devices"] == 1
 
 
 # ------------------------------------------- tenant-level skew scheduling
