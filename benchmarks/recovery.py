@@ -1,0 +1,203 @@
+"""Durability cost + crash recovery (DESIGN.md §10, docs/durability.md).
+
+Two questions a production operator asks before turning the WAL on:
+
+  1. **What does durability cost?**  The identical multi-tenant load
+     (mixed Zipf skews, hot tenant, ragged appends, engine-wide flush
+     per round) is driven through a plain ``serve.SessionEngine`` and a
+     ``serve.DurableSessionEngine`` (WAL on every append + async
+     lane-state checkpoint every ``checkpoint_every`` flushes); the
+     headline ``overhead_factor`` (plain tuples/s ÷ durable tuples/s)
+     must stay ≤ the published ``overhead_bound`` (asserted in-bench --
+     the bound IS the claim this bench defends run over run).
+
+  2. **How fast is recovery, and how much replays?**  For each open-
+     session count S, a durable engine is killed (abandoned mid-stream,
+     past its last checkpoint -- the same disk state a SIGKILL leaves)
+     and ``SessionEngine.recover`` is timed end-to-end: checkpoint
+     restore + WAL-tail replay + the first query per session.  The
+     replayed-tuple count must be a strict subset of the full stream
+     (``replayed < total``, asserted): recovery replays the WAL *tail*,
+     not the life of the engine.  Every recovered answer is verified
+     bit-exact against the numpy oracle.
+
+    PYTHONPATH=src python -m benchmarks.recovery
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import bench_record, print_table, save_record
+from repro.apps import histo
+from repro.data.zipf import zipf_tuples
+from repro.serve import DurableSessionEngine, SessionEngine
+
+ALPHAS = (0.0, 0.8, 1.5, 2.0)
+HOT = 3
+BINS, DOMAIN = 256, 1 << 18
+OVERHEAD_BOUND = 2.5   # plain/durable throughput ratio the headline defends
+
+
+def _drive(eng, tenants, rounds, n_per_round, *, seed0=11, hot_factor=3):
+    """One deterministic serving run: ragged appends, hot tenant,
+    engine-wide flush per round.  Returns per-tenant appended batches."""
+    sids = {t: eng.open(f"zipf{ALPHAS[t % len(ALPHAS)]}-{t}")
+            for t in range(tenants)}
+    appended = {t: [] for t in sids}
+    for r in range(rounds):
+        for t in sids:
+            n = n_per_round * (hot_factor if t == HOT % tenants else 1)
+            n += (seed0 + 53 * r + 17 * t) % 101 + 1        # ragged
+            data = zipf_tuples(n, DOMAIN, ALPHAS[t % len(ALPHAS)],
+                               seed=seed0 + 100 * r + t)
+            eng.append(sids[t], data)
+            appended[t].append(data)
+        eng.flush()
+    return sids, appended
+
+
+def _verify(eng, sids, appended, num_pri):
+    for t, sid in sids.items():
+        keys = np.concatenate([d[:, 0] for d in appended[t]])
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(sid)),
+            histo.oracle(keys, BINS, DOMAIN, num_pri))
+
+
+def run(n_tuples: int = 1 << 15, rounds: int = 6, chunk: int = 1024,
+        num_pri: int = 16, num_sec: int = 4, primary_slots: int = 4,
+        secondary_slots: int = 2, checkpoint_every: int = 2,
+        sessions_sweep=(2, 4), overhead_bound: float = OVERHEAD_BOUND,
+        workdir=None):
+    spec = histo.make_spec(BINS, DOMAIN, num_pri)
+    tenants = primary_slots
+    n_per_round = max(chunk, n_tuples // (rounds * tenants))
+    root = Path(workdir) if workdir else Path(tempfile.mkdtemp(
+        prefix="bench_recovery_"))
+
+    def plain():
+        return SessionEngine(spec, num_pri=num_pri, num_sec=num_sec,
+                             chunk_size=chunk, primary_slots=primary_slots,
+                             secondary_slots=secondary_slots)
+
+    def durable(name, **kw):
+        d = root / name
+        shutil.rmtree(d, ignore_errors=True)
+        return DurableSessionEngine(
+            spec, directory=d, num_pri=num_pri, num_sec=num_sec,
+            chunk_size=chunk, primary_slots=primary_slots,
+            secondary_slots=secondary_slots,
+            checkpoint_every=checkpoint_every, **kw), d
+
+    # ---- phase 1: durability overhead (identical load, WAL+ckpt on/off)
+    # warm-up drives compile every flush width for BOTH modes first, so
+    # the timed runs compare steady-state serving, not jit compiles
+    _drive(plain(), tenants, rounds, n_per_round)
+    weng, _ = durable("warmup")
+    _drive(weng, tenants, rounds, n_per_round)
+    weng.shutdown()
+
+    rows, tput = [], {}
+    for mode in ("plain", "durable"):
+        if mode == "plain":
+            eng = plain()
+        else:
+            eng, _ = durable("overhead")
+        t0 = time.perf_counter()
+        sids, appended = _drive(eng, tenants, rounds, n_per_round)
+        if mode == "durable":
+            eng._mgr.wait()              # async checkpoint writes count
+        seconds = time.perf_counter() - t0
+        total = sum(len(d) for ds in appended.values() for d in ds)
+        tput[mode] = total / seconds
+        _verify(eng, sids, appended, num_pri)
+        ckpts = len(eng._mgr.steps()) if mode == "durable" else 0
+        wal_mb = (sum(p.stat().st_size for p in (eng.dir / "wal")
+                      .glob("*.wal")) / 1e6 if mode == "durable" else 0.0)
+        rows.append({"phase": "overhead", "mode": mode,
+                     "sessions": tenants, "tuples": total,
+                     "seconds": round(seconds, 4),
+                     "tuples_per_sec": round(tput[mode], 1),
+                     "checkpoints": ckpts, "wal_mb": round(wal_mb, 3)})
+        if mode == "durable":
+            eng.shutdown()
+    overhead = tput["plain"] / tput["durable"]
+    assert overhead <= overhead_bound, (
+        f"durability overhead {overhead:.2f}x exceeds the published "
+        f"bound {overhead_bound}x")
+
+    # ---- phase 2: time-to-recover vs open-session count
+    recover_rows = []
+    for s_count in sessions_sweep:
+        eng, d = durable(f"recover_{s_count}")
+        sids, appended = _drive(eng, s_count, rounds, n_per_round)
+        for t in sids:                   # un-checkpointed ragged tail
+            data = zipf_tuples(n_per_round + 31 * t, DOMAIN, 1.5,
+                               seed=7000 + t)
+            eng.append(sids[t], data)
+            appended[t].append(data)
+        eng._mgr.wait()                  # crash point: ckpt on disk, tail in WAL
+        total = sum(len(x) for ds in appended.values() for x in ds)
+
+        t0 = time.perf_counter()
+        eng2 = SessionEngine.recover(spec, d)
+        by_tenant = {s.tenant: sid for sid, s in eng2.sessions.items()
+                     if not s.closed}
+        snaps = {t: np.asarray(eng2.query(by_tenant[eng.sessions[
+            sids[t]].tenant])) for t in sids}
+        recover_s = time.perf_counter() - t0
+
+        info = eng2.recovery_info
+        assert 0 < info["replayed_tuples"] < total, info   # tail-only replay
+        for t in sids:
+            keys = np.concatenate([x[:, 0] for x in appended[t]])
+            np.testing.assert_array_equal(
+                snaps[t], histo.oracle(keys, BINS, DOMAIN, num_pri))
+        recover_rows.append({
+            "phase": "recover", "mode": "durable", "sessions": s_count,
+            "tuples": total, "seconds": round(recover_s, 4),
+            "replayed_tuples": info["replayed_tuples"],
+            "replay_frac": round(info["replayed_tuples"] / total, 4),
+            "ckpt_step": info["checkpoint_step"]})
+        eng2.shutdown()
+    rows.extend(recover_rows)
+
+    if not workdir:
+        shutil.rmtree(root, ignore_errors=True)
+    title = (f"Session durability: WAL+ckpt overhead + time-to-recover "
+             f"({num_pri}P/{num_sec}S PEs, chunk {chunk}, "
+             f"ckpt every {checkpoint_every} flushes)")
+    print_table(title, rows)
+    print(f"overhead {overhead:.2f}x (bound {overhead_bound}x); recover "
+          + ", ".join(f"{r['sessions']} sessions: {r['seconds']:.2f}s "
+                      f"(replayed {r['replay_frac']:.0%})"
+                      for r in recover_rows))
+    return bench_record(
+        "recovery", title, rows,
+        extra={
+            "headline": {
+                "tuples_per_sec_plain": round(tput["plain"], 1),
+                "tuples_per_sec_durable": round(tput["durable"], 1),
+                "overhead_factor": round(overhead, 3),
+                "overhead_bound": overhead_bound,
+                "recover_s_max": max(r["seconds"] for r in recover_rows),
+                "replay_frac_max": max(r["replay_frac"]
+                                       for r in recover_rows),
+            },
+            "config": {
+                "num_pri": num_pri, "num_sec": num_sec, "chunk": chunk,
+                "primary_slots": primary_slots,
+                "secondary_slots": secondary_slots,
+                "checkpoint_every": checkpoint_every,
+                "rounds": rounds, "sessions_sweep": list(sessions_sweep),
+            },
+        })
+
+
+if __name__ == "__main__":
+    save_record(run())

@@ -39,8 +39,28 @@ def _tree_paths(tree) -> list:
     return [jax.tree_util.keystr(kp) for kp, _ in flat]
 
 
+def _fsync_dir(path: Path):
+    """Flush directory metadata so a rename survives a machine crash (a
+    process crash never needs this; best-effort on filesystems without
+    directory fds)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_pytree(path: os.PathLike, tree: Any):
-    """Blocking atomic save of one pytree."""
+    """Blocking crash-safe save of one pytree: every leaf and the manifest
+    are written (and fsync'd) into a temp dir, which becomes visible only
+    through the final atomic rename -- a writer killed at ANY instruction
+    leaves either the previous complete checkpoint or a ``.tmp`` dir that
+    inventory/restore ignore, never a half-checkpoint under the real name."""
     path = Path(path)
     tmp = path.with_name(path.name + ".tmp")
     if tmp.exists():
@@ -52,13 +72,21 @@ def save_pytree(path: os.PathLike, tree: Any):
                 "leaves": []}
     for i, leaf in enumerate(flat):
         arr = np.asarray(leaf)
-        np.save(tmp / f"leaf_{i}.npy", arr)
+        with open(tmp / f"leaf_{i}.npy", "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append({"shape": list(arr.shape),
                                    "dtype": str(arr.dtype)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    with open(tmp / "manifest.json", "w") as f:
+        f.write(json.dumps(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if path.exists():
         shutil.rmtree(path)
     os.replace(tmp, path)
+    _fsync_dir(path.parent)
 
 
 def restore_pytree(path: os.PathLike, template: Any,
@@ -142,10 +170,37 @@ class CheckpointManager:
     # --------------------------------------------------------------- restore
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Optional[Any]:
-        step = self.latest_step() if step is None else step
-        if step is None:
-            return None
-        return restore_pytree(self._path(step), template, shardings)
+        """Restore the newest checkpoint that actually loads.
+
+        With ``step=None`` the candidates are tried newest-first and a
+        checkpoint whose files are truncated or corrupt (a torn write that
+        survived the atomic-rename protocol, e.g. disk damage after the
+        rename) is SKIPPED with a warning -- the durability contract is
+        "the newest *readable* checkpoint".  But failure stays LOUD at
+        the edges: if checkpoints exist and EVERY one fails to load
+        (all-corrupt disk, or a template that no longer matches the run)
+        this raises rather than returning None, so a resuming caller
+        cannot silently restart from scratch and discard prior progress.
+        An explicit ``step`` also raises on corruption (the caller asked
+        for that one specifically).  Returns None only when there is no
+        checkpoint at all (a genuinely fresh directory)."""
+        if step is not None:
+            return restore_pytree(self._path(step), template, shardings)
+        errors = []
+        for s in reversed(self.steps()):
+            try:
+                return restore_pytree(self._path(s), template, shardings)
+            except Exception as e:  # noqa: BLE001 -- any unreadable ckpt
+                import warnings
+                warnings.warn(f"skipping unreadable checkpoint "
+                              f"{self._path(s)}: {e!r}")
+                errors.append(e)
+        if errors:
+            raise RuntimeError(
+                f"all {len(errors)} checkpoints under {self.dir} failed "
+                f"to load (newest error: {errors[0]!r}); repair/remove "
+                "them or fix the restore template")
+        return None
 
     def close(self):
         self.wait()

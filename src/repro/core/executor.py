@@ -409,7 +409,10 @@ def take_lanes(states: ExecState, idx) -> ExecState:
     path: the gathered lanes materialize wherever the caller computes,
     regardless of which shard held them -- an ``ExecState`` is an
     ordinary pytree of arrays, so suspending on one device and resuming
-    on another is just this gather + ``put_lanes`` scatter."""
+    on another is just this gather + ``put_lanes`` scatter.  The same
+    pair is the durability snapshot unit (DESIGN.md §10): gathering all
+    lanes yields the host-serializable engine state a checkpoint
+    persists, and recovery scatters it back with ``put_lanes``."""
     return jax.tree.map(lambda x: x[idx], states)
 
 

@@ -49,7 +49,18 @@ def chunk_stream(data: np.ndarray, chunk_size: int, *,
     into a masked final chunk and ``mask`` (bool[num_chunks, chunk_size])
     marks the real tuples -- feed ``(body, mask)`` straight to
     ``make_executor(...)(body, mask=mask)`` / ``StreamEngine.submit`` and
-    padding is an exact no-op (core.executor's validity-mask path)."""
+    padding is an exact no-op (core.executor's validity-mask path).
+
+    Empty-stream contract (``len(data) == 0``, ``pad_tail=True``): the
+    result is a ZERO-chunk stream, not a single all-masked chunk --
+    ``body`` has shape ``[0, chunk_size, ...]``, ``mask`` has shape
+    ``[0, chunk_size]`` and ``num_tuples == 0``.  A zero-length scan is a
+    no-op for every executor shape (``lax.scan`` over an empty leading
+    axis returns the carry untouched), so callers that may see empty
+    streams -- e.g. the WAL-replay path of ``serve.durability``
+    recovering a session whose only appends were empty -- need no
+    special-casing.  With ``pad_tail=False`` the same input yields an
+    empty ``body`` and ``tail=None``."""
     data = np.asarray(data)
     n = len(data)
     body_len = (n // chunk_size) * chunk_size

@@ -1,6 +1,9 @@
+from repro.serve.durability import (DurableSessionEngine, EnginePreempted,
+                                    WriteAheadLog)
 from repro.serve.engine import (DecodeEngine, StreamEngine, greedy_generate,
                                 prefill_cache)
 from repro.serve.session import SessionEngine, SessionStats
 
-__all__ = ["DecodeEngine", "StreamEngine", "SessionEngine", "SessionStats",
+__all__ = ["DecodeEngine", "DurableSessionEngine", "EnginePreempted",
+           "SessionEngine", "SessionStats", "StreamEngine", "WriteAheadLog",
            "greedy_generate", "prefill_cache"]

@@ -1,0 +1,616 @@
+"""Session durability: per-tenant WAL + lane-state checkpoints +
+crash-exact recovery for ``serve.SessionEngine`` (DESIGN.md §10,
+docs/durability.md).
+
+The paper's architecture keeps all PE state in private on-chip buffers --
+state that vanishes on reset.  A serving system built on it must survive
+engine restarts with open sessions mid-stream (the stateful-FPGA-service
+lesson: a service lives or dies by how it externalizes state).  This
+module externalizes the SessionEngine in two complementary pieces:
+
+  WAL         every ``open``/``append``/``close`` is logged -- per
+              tenant, append-only, CRC-framed -- BEFORE it mutates the
+              engine, so the logical input stream of every session is
+              reconstructible from disk at any instant.
+  checkpoint  periodically, the lanes-stacked ``ExecState`` is gathered
+              (``executor.take_lanes`` over all lanes -- the same
+              primitive the per-session flush tier resumes with) and
+              persisted through ``checkpoint.CheckpointManager`` (async
+              write, atomic rename, bounded keep), together with the
+              scheduler metadata (slot map, secondary grants, queue,
+              per-session backlogs/stats) and the WAL sequence number the
+              snapshot covers -- the **flush watermark**.
+
+Recovery (``recover`` / ``SessionEngine.recover``) composes them: restore
+the newest readable checkpoint, then replay ONLY the WAL tail past its
+watermark.  Replayed appends land in session backlogs exactly as the
+original calls did, and the engine's chunking-invariance guarantee (any
+partition of a stream into appends/flushes merges to identical buffers)
+makes every subsequent ``query()`` bit-exact vs an uninterrupted run --
+in local mode and in ``mesh=`` lane-sharded mode alike (the restored
+lanes are scattered back with ``executor.put_lanes`` and re-pinned to the
+lane sharding).  A checkpoint is mesh-agnostic: a state saved by a local
+engine restores onto a meshed one and vice versa (the elastic property of
+``checkpoint.CheckpointManager``, inherited).
+
+Failure model
+  The engine process can die at ANY instruction (SIGKILL, OOM, node
+  loss).  Durable truth is ``<dir>/wal/*.wal`` + ``<dir>/ckpt/step_N/``
+  + ``<dir>/config.json``; everything else is reconstructed.  A torn WAL
+  tail (frame cut mid-write) is detected by the CRC and truncated away on
+  reopen; a torn checkpoint is invisible (atomic rename) or skipped by
+  ``CheckpointManager.restore``.  With ``wal_sync=False`` (default) a
+  record survives process death once ``append()`` returns; surviving
+  *machine* death too needs ``wal_sync=True`` (fsync per record).
+  ``close()`` is logged after it succeeds, so a crash inside ``close``
+  recovers the session still open with its data intact -- at-least-once,
+  never data loss.  Scheduler counters are restored at checkpoint
+  granularity; answers are exact regardless.
+
+SIGTERM is not a crash: wire a ``train.ft.PreemptionGuard`` in and the
+engine drains instead -- flush every admitted session, blocking
+checkpoint, release the WAL -- then raises ``EnginePreempted`` on new
+work.  A drained directory recovers with an empty replay tail.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import json
+import os
+import re
+import shutil
+import struct
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core import executor as core_executor
+from repro.serve.session import SessionEngine, SessionStats, _Session
+
+_WAL_MAGIC = b"DWAL\x01\x00\x00\x00"      # 8-byte file header: magic + v1
+_FRAME = struct.Struct("<II")             # body length, crc32(body)
+_HEAD = struct.Struct("<I")               # json header length
+
+
+class EnginePreempted(RuntimeError):
+    """The engine drained after a preemption signal: open sessions are
+    flushed and checkpointed on disk; ``recover()`` resumes them."""
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log
+# ---------------------------------------------------------------------------
+
+def _encode_record(meta: Dict[str, Any], payload: bytes = b"") -> bytes:
+    head = json.dumps(meta, separators=(",", ":")).encode()
+    body = _HEAD.pack(len(head)) + head + payload
+    return _FRAME.pack(len(body), zlib.crc32(body) & 0xFFFFFFFF) + body
+
+
+def _read_wal_file(path: Path) -> Tuple[List[Tuple[dict, bytes]], int]:
+    """Parse one WAL file tolerantly.  Returns ``(records, valid_end)``
+    where ``valid_end`` is the byte offset of the last intact frame -- a
+    torn tail (truncated frame, CRC mismatch: the crash landed mid-write)
+    simply ends the file there.  A file without the magic header parses
+    as empty."""
+    records: List[Tuple[dict, bytes]] = []
+    raw = path.read_bytes()
+    if len(raw) < len(_WAL_MAGIC) or raw[:len(_WAL_MAGIC)] != _WAL_MAGIC:
+        return records, 0
+    off = len(_WAL_MAGIC)
+    while True:
+        if off + _FRAME.size > len(raw):
+            break
+        length, crc = _FRAME.unpack_from(raw, off)
+        body = raw[off + _FRAME.size:off + _FRAME.size + length]
+        if len(body) < length or (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+            break
+        try:
+            hlen, = _HEAD.unpack_from(body, 0)
+            meta = json.loads(body[_HEAD.size:_HEAD.size + hlen])
+            payload = body[_HEAD.size + hlen:]
+        except (struct.error, ValueError):
+            break
+        records.append((meta, payload))
+        off += _FRAME.size + length
+    return records, off
+
+
+class WriteAheadLog:
+    """Per-tenant, append-only, CRC-framed write-ahead log.
+
+    One ``.wal`` file per tenant (sanitized name + content hash, so any
+    tenant string maps to a unique stable filename).  Every record is a
+    length+CRC frame holding a compact JSON header (type, global ``seq``,
+    sid, array dtype/shape) plus the raw payload bytes; ``seq`` is a
+    single engine-global counter, so replay merges the per-tenant files
+    back into the original total order.  Flush-watermark records
+    (``{"t": "wm", "step": N, "upto": seq}``) are appended to every
+    tenant file when a checkpoint is taken: they mark the prefix a
+    checkpoint already covers, document the recovery point in-band, and
+    bound ``gc()``.
+
+    Opening a directory repairs torn tails: each file is scanned and
+    truncated back to its last intact frame, so appends after a crash
+    are always readable.  ``sync=True`` fsyncs every record (machine-
+    crash durability); the default flushes to the OS (process-crash
+    durability) and keeps append cost to one buffered write.
+    """
+
+    def __init__(self, directory: os.PathLike, *, sync: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.sync = sync
+        self._files: Dict[Path, Any] = {}     # path -> open append handle
+        self.seq = 1
+        for p in sorted(self.dir.glob("*.wal")):
+            recs, valid_end = _read_wal_file(p)
+            size = p.stat().st_size
+            if valid_end < size:
+                # torn tail: truncate to the last intact frame.  A torn
+                # HEADER (valid_end == 0) truncates to empty, so the
+                # next append rewrites the magic -- zero-padding it
+                # instead would leave a permanently unreadable file.
+                with open(p, "rb+") as f:
+                    f.truncate(valid_end)
+            for meta, _ in recs:
+                self.seq = max(self.seq, int(meta["seq"]) + 1)
+
+    def _tenant_path(self, tenant: str) -> Path:
+        slug = re.sub(r"[^A-Za-z0-9_.-]", "_", tenant)[:40] or "t"
+        digest = hashlib.sha1(tenant.encode()).hexdigest()[:8]
+        return self.dir / f"{slug}-{digest}.wal"
+
+    def _handle(self, path: Path):
+        f = self._files.get(path)
+        if f is None:
+            fresh = not path.exists() or path.stat().st_size == 0
+            f = open(path, "ab")
+            if fresh:
+                f.write(_WAL_MAGIC)
+            self._files[path] = f
+        return f
+
+    def _write(self, f, frame: bytes):
+        f.write(frame)
+        f.flush()
+        if self.sync:
+            os.fsync(f.fileno())
+
+    def log(self, tenant: str, meta: Dict[str, Any],
+            payload: bytes = b"") -> int:
+        """Append one record to ``tenant``'s log; returns its seq."""
+        meta = dict(meta, seq=self.seq)
+        self.seq += 1
+        self._write(self._handle(self._tenant_path(tenant)),
+                    _encode_record(meta, payload))
+        return meta["seq"]
+
+    def watermark(self, step: int, upto: int) -> None:
+        """Record "checkpoint ``step`` covers every record with
+        ``seq <= upto``" in every tenant file (one shared seq: watermarks
+        are markers, not replayed events)."""
+        meta = {"t": "wm", "step": step, "upto": upto, "seq": self.seq}
+        self.seq += 1
+        frame = _encode_record(meta)
+        for p in sorted(self.dir.glob("*.wal")):
+            self._write(self._handle(p), frame)
+
+    def replay(self, after_seq: int = 0) -> List[Tuple[dict, bytes]]:
+        """Every data record with ``seq > after_seq``, in global seq
+        order, torn tails tolerated per file."""
+        recs: List[Tuple[dict, bytes]] = []
+        for p in sorted(self.dir.glob("*.wal")):
+            recs.extend(r for r in _read_wal_file(p)[0]
+                        if r[0]["t"] != "wm" and r[0]["seq"] > after_seq)
+        recs.sort(key=lambda r: r[0]["seq"])
+        return recs
+
+    def watermarks(self) -> Dict[int, int]:
+        """``{checkpoint step: covered seq}`` from the in-band watermark
+        records -- the durable copy of the step→watermark map, so GC
+        works after a recovery too."""
+        out: Dict[int, int] = {}
+        for p in sorted(self.dir.glob("*.wal")):
+            for meta, _ in _read_wal_file(p)[0]:
+                if meta["t"] == "wm":
+                    out[meta["step"]] = max(out.get(meta["step"], 0),
+                                            meta["upto"])
+        return out
+
+    def gc(self, upto: int) -> None:
+        """Drop records with ``seq <= upto`` (covered by the oldest KEPT
+        checkpoint -- pass its watermark).  Each file is rewritten to a
+        temp and atomically renamed, so a crash mid-GC loses nothing."""
+        for p in sorted(self.dir.glob("*.wal")):
+            recs, _ = _read_wal_file(p)
+            keep = [r for r in recs if r[0]["seq"] > upto]
+            if len(keep) == len(recs):
+                continue
+            f = self._files.pop(p, None)
+            if f is not None:
+                f.close()
+            tmp = p.with_name(p.name + ".tmp")
+            with open(tmp, "wb") as g:
+                g.write(_WAL_MAGIC)
+                for meta, payload in keep:
+                    g.write(_encode_record(meta, payload))
+                g.flush()
+                os.fsync(g.fileno())
+            os.replace(tmp, p)
+
+    def close(self) -> None:
+        for f in self._files.values():
+            f.flush()
+            f.close()
+        self._files = {}
+
+
+# ---------------------------------------------------------------------------
+# Durable engine
+# ---------------------------------------------------------------------------
+
+_CONFIG_NAME = "config.json"
+_TELEMETRY_KEEP = 256    # per-flush telemetry rows carried per checkpoint
+# SessionEngine kwargs that round-trip through config.json (JSON scalars
+# only; spec and mesh are live objects the recover() caller supplies).
+_CFG_ENGINE_KW = ("kernel_backend", "lanes_axis", "profile_chunks",
+                  "threshold", "mem_width_tuples", "static_plan")
+
+
+class DurableSessionEngine(SessionEngine):
+    """A ``SessionEngine`` whose sessions survive the process.
+
+    Args (on top of every ``SessionEngine`` knob):
+      directory: the durability root; owns ``wal/``, ``ckpt/`` and
+        ``config.json``.  A fresh engine refuses a directory that already
+        holds durable state (use ``recover()`` to resume it, or
+        ``overwrite=True`` to discard it).
+      checkpoint_every: take a checkpoint after this many engine-wide
+        flushes (0 = manual ``checkpoint()`` calls only).  Checkpoints
+        are async (the flush path is not blocked) and atomic.
+      keep: checkpoints retained (``CheckpointManager`` keep-k GC).
+      wal_sync: fsync every WAL record (see ``WriteAheadLog``).
+      guard: an optional ``train.ft.PreemptionGuard``; when its signal
+        fires, the next ``open``/``append``/``close``/``flush`` drains
+        the engine (flush + blocking checkpoint + WAL release) and
+        raises ``EnginePreempted``.  ``query()`` -- in BOTH flush
+        scopes -- stays available on a drained engine: post-drain
+        flushes only move already-accepted backlog the drain checkpoint
+        captured, so reads never race the durable snapshot's
+        correctness (answers are flush-invariant).
+
+    After recovery, ``recovery_info`` holds ``{checkpoint_step,
+    wal_watermark, replayed_records, replayed_tuples, replay_anomalies}``
+    -- the proof obligation that only the WAL *tail* replayed.
+    """
+
+    def __init__(self, spec, *, directory: os.PathLike,
+                 checkpoint_every: int = 4, keep: int = 3,
+                 wal_sync: bool = False, guard=None,
+                 overwrite: bool = False, _recovering: bool = False, **kw):
+        engine_kw = {k: kw[k] for k in _CFG_ENGINE_KW if k in kw}
+        super().__init__(spec, **kw)
+        self.dir = Path(directory)
+        wal_dir, ckpt_dir = self.dir / "wal", self.dir / "ckpt"
+        if not _recovering:
+            stale = (any(wal_dir.glob("*.wal"))
+                     or any(ckpt_dir.glob("step_*")))
+            if stale and not overwrite:
+                raise ValueError(
+                    f"{self.dir} already holds durable session state; "
+                    "resume it with SessionEngine.recover(...) or pass "
+                    "overwrite=True to discard it")
+            if stale:
+                shutil.rmtree(wal_dir, ignore_errors=True)
+                shutil.rmtree(ckpt_dir, ignore_errors=True)
+        self._wal = WriteAheadLog(wal_dir, sync=wal_sync)
+        self._mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.checkpoint_every = max(0, int(checkpoint_every))
+        self._guard = guard
+        self.drained = False
+        self._replaying = False
+        self.recovery_info: Optional[Dict[str, Any]] = None
+        self._ckpt_step = (self._mgr.latest_step() or 0) + 1
+        self._flushes_since_ckpt = 0
+        self._wm_seq_by_step: Dict[int, int] = {}
+        if not _recovering:
+            self._write_config(wal_sync, engine_kw)
+
+    # ---------------------------------------------------------------- config
+    def _write_config(self, wal_sync: bool, engine_kw: Dict[str, Any]):
+        cfg = {
+            "version": 1,
+            "app": self.spec.name,
+            "num_pri": self.num_pri, "num_sec": self.num_sec,
+            "chunk_size": self.chunk_size,
+            "primary_slots": self.primary_slots,
+            "secondary_slots": self.secondary_slots,
+            "min_grant_chunks": self.min_grant_chunks,
+            "checkpoint_every": self.checkpoint_every,
+            "keep": self._mgr.keep,
+            "wal_sync": wal_sync,
+            "engine_kw": {k: v for k, v in engine_kw.items()
+                          if isinstance(v, (str, int, float, bool,
+                                            type(None)))},
+        }
+        self.dir.mkdir(parents=True, exist_ok=True)
+        tmp = self.dir / (_CONFIG_NAME + ".tmp")
+        tmp.write_text(json.dumps(cfg, indent=2))
+        os.replace(tmp, self.dir / _CONFIG_NAME)
+
+    # ------------------------------------------------------------- lifecycle
+    def open(self, tenant: str = "default") -> int:
+        self._preempt_check()
+        if not self._replaying:
+            self._wal.log(tenant, {"t": "open", "sid": self._next_sid,
+                                   "tenant": tenant})
+        return super().open(tenant)
+
+    def append(self, sid: int, data: np.ndarray) -> None:
+        self._preempt_check()
+        arr = np.asarray(data)
+        if not self._replaying:
+            tenant = self._session(sid).tenant   # bad sids never hit the log
+            self._wal.log(tenant, {"t": "app", "sid": sid,
+                                   "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape)},
+                          arr.tobytes())
+        super().append(sid, arr)
+
+    def close(self, sid: int):
+        self._preempt_check()
+        out = super().close(sid)
+        if not self._replaying:
+            # logged AFTER success: a close that raised (queued session
+            # holding data) must not replay; a crash between the close
+            # and this record recovers the session still open -- its
+            # data is intact either way (at-least-once, never loss)
+            self._wal.log(self.sessions[sid].tenant,
+                          {"t": "close", "sid": sid})
+        return out
+
+    def flush(self, force=()) -> None:
+        if self.drained:
+            # the read path of a drained engine: query(scope="engine")
+            # routes through here, and a post-drain flush only moves
+            # already-accepted backlog (the drain checkpoint captured
+            # it), so it is answer-neutral -- no WAL, no checkpoint
+            SessionEngine.flush(self, force)
+            return
+        self._preempt_check()
+        super().flush(force)
+        if not self._replaying and self.checkpoint_every:
+            self._flushes_since_ckpt += 1
+            if self._flushes_since_ckpt >= self.checkpoint_every:
+                self.checkpoint()
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self, block: bool = False) -> int:
+        """Persist a consistent cut of the engine: the lanes-stacked
+        ``ExecState`` (gathered with ``executor.take_lanes`` -- across
+        shards in ``mesh=`` mode) plus scheduler/session metadata and the
+        covering WAL seq (the flush watermark).  The snapshot is host-
+        side before this returns; serialization runs async unless
+        ``block``.  A blocking checkpoint also GCs WAL records every
+        kept checkpoint already covers."""
+        upto = self._wal.seq - 1        # every record logged so far
+        idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
+        lanes = jax.tree.map(np.asarray,
+                             self._take_lanes(self._states, idx))
+        step = self._ckpt_step
+        self._ckpt_step += 1
+        meta = self._capture_meta(upto, step)
+        blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+        self._mgr.save(step, {"lanes": lanes, "meta": blob}, block=block)
+        self._wal.watermark(step, upto)
+        self._wm_seq_by_step[step] = upto
+        self._flushes_since_ckpt = 0
+        self._gc_wal()
+        return step
+
+    def _gc_wal(self) -> None:
+        """Drop WAL records the oldest KEPT checkpoint already covers.
+        Runs after every checkpoint (``CheckpointManager.save`` waits
+        for the previous write, so the steps on disk are complete ones);
+        the step→watermark map falls back to the WAL's own in-band
+        watermark records, so GC resumes after a recovery."""
+        steps = self._mgr.steps()
+        if not steps:
+            return
+        upto = self._wm_seq_by_step.get(steps[0])
+        if upto is None:
+            upto = self._wal.watermarks().get(steps[0])
+        if upto is not None:
+            self._wal.gc(upto)
+
+    def _capture_meta(self, wal_seq: int, step: int) -> Dict[str, Any]:
+        sessions = {}
+        for sid, s in self.sessions.items():
+            ent: Dict[str, Any] = {"tenant": s.tenant, "slot": s.slot,
+                                   "closed": s.closed,
+                                   "stats": s.stats.as_dict()}
+            if s.backlog_tuples:
+                b = np.concatenate(s.backlog, axis=0)
+                ent["backlog"] = {
+                    "dtype": str(b.dtype), "shape": list(b.shape),
+                    "data": base64.b64encode(b.tobytes()).decode("ascii")}
+            sessions[str(sid)] = ent
+        return {
+            "version": 1, "step": step, "wal_seq": wal_seq,
+            "next_sid": self._next_sid, "flush_no": self._flush_no,
+            "slot_reschedules": self._slot_reschedules,
+            "slot_sid": [-1 if x is None else int(x)
+                         for x in self._slot_sid],
+            "sec_assign": [int(x) for x in self._sec_assign],
+            "queue": list(self._queue),
+            "feat_shape": (list(self._feat_shape)
+                           if self._feat_shape is not None else None),
+            "dtype": (str(np.dtype(self._dtype))
+                      if self._dtype is not None else None),
+            # telemetry is observability, not recovery state: persist a
+            # bounded tail so checkpoint size tracks the engine shape,
+            # not its uptime (one row accrues per flush, forever)
+            "telemetry": self._telemetry[-_TELEMETRY_KEEP:],
+            "sessions": sessions,
+        }
+
+    def _restore_meta(self, meta: Dict[str, Any]) -> None:
+        self._next_sid = int(meta["next_sid"])
+        self._flush_no = int(meta["flush_no"])
+        self._slot_reschedules = int(meta["slot_reschedules"])
+        self._slot_sid = [None if x < 0 else int(x)
+                          for x in meta["slot_sid"]]
+        self._sec_assign = np.asarray(meta["sec_assign"], np.int64)
+        self._queue = [int(x) for x in meta["queue"]]
+        self._feat_shape = (tuple(meta["feat_shape"])
+                            if meta["feat_shape"] is not None else None)
+        self._dtype = np.dtype(meta["dtype"]) if meta["dtype"] else None
+        self._telemetry = list(meta["telemetry"])
+        self.sessions = {}
+        for sid_s, ent in meta["sessions"].items():
+            backlog, n = [], 0
+            if "backlog" in ent:
+                b = ent["backlog"]
+                arr = np.frombuffer(base64.b64decode(b["data"]),
+                                    dtype=np.dtype(b["dtype"]))
+                arr = arr.reshape(b["shape"])
+                backlog, n = [arr], len(arr)
+            self.sessions[int(sid_s)] = _Session(
+                int(sid_s), ent["tenant"], slot=ent["slot"],
+                backlog=backlog, backlog_tuples=n,
+                stats=SessionStats(**ent["stats"]), closed=ent["closed"])
+
+    # -------------------------------------------------------------- recovery
+    def _recover(self) -> None:
+        template = {"lanes": core_executor.stack_states(
+            self._res.init_state(), self.num_lanes),
+            "meta": np.zeros(0, np.uint8)}
+        try:
+            ck = self._mgr.restore(template)
+        except RuntimeError as e:
+            # checkpoints exist but none restored cleanly (all corrupt,
+            # or the caller's overrides changed the engine shape so the
+            # template no longer matches).  A silent WAL-only recovery
+            # here would be WRONG whenever GC dropped records those
+            # checkpoints cover -- refuse instead of answering short.
+            raise RuntimeError(
+                f"{self.dir}: no checkpoint restored cleanly; refusing "
+                "WAL-only recovery (the WAL may have been GC'd past "
+                "their watermarks).  Repair or remove ckpt/, or recover "
+                "with the original engine shape.") from e
+        wal_seq, ck_step = 0, None
+        if ck is not None:
+            meta = json.loads(bytes(np.asarray(ck["meta"])).decode())
+            self._restore_meta(meta)
+            wal_seq, ck_step = int(meta["wal_seq"]), int(meta["step"])
+            idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
+            lanes = jax.tree.map(jnp.asarray, ck["lanes"])
+            states = self._put_lanes(self._states, idx, lanes)
+            self._states = (states if self._sharded is None
+                            else self._sharded.shard_states(states))
+        recs = self._wal.replay(after_seq=wal_seq)
+        replayed_tuples, anomalies = 0, 0
+        self._replaying = True
+        try:
+            for meta_r, payload in recs:
+                t = meta_r["t"]
+                try:
+                    if t == "open":
+                        got = self.open(meta_r["tenant"])
+                        if got != meta_r["sid"]:
+                            raise RuntimeError(
+                                f"replayed open produced sid {got}, WAL "
+                                f"says {meta_r['sid']}: the WAL and "
+                                "checkpoint disagree")
+                    elif t == "app":
+                        arr = np.frombuffer(
+                            payload, dtype=np.dtype(meta_r["dtype"]))
+                        arr = arr.reshape(meta_r["shape"])
+                        self.append(meta_r["sid"], arr)
+                        shp = meta_r["shape"]
+                        replayed_tuples += int(shp[0]) if shp else 0
+                    elif t == "close":
+                        self.close(meta_r["sid"])
+                except (ValueError, KeyError):
+                    anomalies += 1   # the original call failed identically
+        finally:
+            self._replaying = False
+        self.recovery_info = {
+            "checkpoint_step": ck_step,
+            "wal_watermark": wal_seq,
+            "replayed_records": len(recs),
+            "replayed_tuples": int(replayed_tuples),
+            "replay_anomalies": anomalies,
+        }
+
+    # ------------------------------------------------------------ preemption
+    def _preempt_check(self) -> None:
+        if self._replaying:
+            return
+        if self.drained:
+            raise EnginePreempted(
+                "engine drained after preemption; recover() resumes the "
+                f"sessions from {self.dir}")
+        if self._guard is not None and self._guard.preempted:
+            self.drain()
+            raise EnginePreempted(
+                "preemption signal: open sessions flushed and "
+                f"checkpointed under {self.dir}; recover() resumes them")
+
+    def drain(self) -> None:
+        """Graceful SIGTERM path: flush every admitted session's backlog
+        into the lanes, take a blocking checkpoint (the ragged sub-chunk
+        remainders ride the checkpoint's backlog metadata), release the
+        WAL and the guard's signal handlers.  Idempotent; afterwards new
+        work raises ``EnginePreempted`` while ``query()`` still answers."""
+        if self.drained:
+            return
+        SessionEngine.flush(self)       # bypass the checkpoint-every hook
+        self.checkpoint(block=True)
+        self._wal.close()
+        if self._guard is not None:
+            self._guard.uninstall()
+        self.drained = True
+
+    def shutdown(self) -> None:
+        """Release background resources (checkpoint thread, WAL handles)
+        WITHOUT draining -- the test/bench teardown path."""
+        self._mgr.close()
+        self._wal.close()
+
+
+def recover(spec, directory: os.PathLike, *, mesh=None, guard=None,
+            **overrides) -> DurableSessionEngine:
+    """Resume a durable engine from ``directory``: rebuild it from
+    ``config.json`` (``overrides`` win over saved knobs; ``spec`` must be
+    the same application the directory was serving), restore the newest
+    readable checkpoint, scatter the lanes back (``executor.put_lanes``,
+    re-pinned to the lane sharding when ``mesh=`` is given), and replay
+    the WAL tail past the watermark.  Every open session then answers
+    ``query()`` bit-exactly as an uninterrupted run would."""
+    directory = Path(directory)
+    cfg = json.loads((directory / _CONFIG_NAME).read_text())
+    if cfg.get("app") not in (None, spec.name):
+        raise ValueError(f"{directory} was serving app {cfg['app']!r}, "
+                         f"got spec {spec.name!r}")
+    kw: Dict[str, Any] = dict(
+        num_pri=cfg["num_pri"], num_sec=cfg["num_sec"],
+        chunk_size=cfg["chunk_size"],
+        primary_slots=cfg["primary_slots"],
+        secondary_slots=cfg["secondary_slots"],
+        min_grant_chunks=cfg["min_grant_chunks"],
+        **cfg.get("engine_kw", {}))
+    ctl = {k: overrides.pop(k, cfg[k])
+           for k in ("checkpoint_every", "keep", "wal_sync")}
+    kw.update(overrides)
+    eng = DurableSessionEngine(spec, directory=directory, mesh=mesh,
+                               guard=guard, _recovering=True, **ctl, **kw)
+    eng._recover()
+    return eng

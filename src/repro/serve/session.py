@@ -57,6 +57,14 @@ Telemetry
   slot re-schedules, backlog, occupancy, modeled cycles) accumulate
   into a schema-v1 benchmark record (``telemetry_record``), the same
   shape ``benchmarks.common`` validates and ``benchmarks.run`` reports.
+
+Durability (DESIGN.md §10, docs/durability.md)
+  ``serve.durability`` wraps this engine in a per-tenant write-ahead
+  log plus periodic lane-state checkpoints (``executor.take_lanes`` of
+  every lane through ``checkpoint.CheckpointManager``);
+  ``SessionEngine.recover`` restores the newest checkpoint, replays
+  only the WAL tail past its watermark, and resumes every open session
+  bit-exactly after a crash -- in local and ``mesh=`` mode alike.
 """
 from __future__ import annotations
 
@@ -617,6 +625,20 @@ class SessionEngine:
             else:
                 validate_record(rec)
         return rec
+
+    # ------------------------------------------------------------ durability
+
+    @classmethod
+    def recover(cls, spec, directory, *, mesh=None, guard=None, **overrides):
+        """Resume a crashed/preempted durable engine from ``directory``:
+        restore the newest lane-state checkpoint, replay the WAL tail
+        past its flush watermark, and return a
+        ``serve.DurableSessionEngine`` whose open sessions answer
+        ``query()`` bit-exactly as an uninterrupted run would
+        (DESIGN.md §10, docs/durability.md)."""
+        from repro.serve import durability
+        return durability.recover(spec, directory, mesh=mesh, guard=guard,
+                                  **overrides)
 
     # --------------------------------------------------------------- helpers
 

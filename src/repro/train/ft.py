@@ -21,7 +21,14 @@ from typing import Optional
 class PreemptionGuard:
     """Installs SIGTERM/SIGINT handlers that set a flag instead of killing
     the process mid-step.  Safe to instantiate in non-main threads (no-op
-    installation there -- tests)."""
+    installation there -- tests).
+
+    Consumers poll ``preempted`` at a step boundary: the train loop
+    checkpoints and exits, and the serving layer's durable engine
+    (``serve.DurableSessionEngine``) runs its drain-and-checkpoint path
+    (flush open sessions, blocking checkpoint, release the WAL) before
+    refusing further work -- DESIGN.md §10.  ``uninstall()`` restores the
+    previous handlers once the guard's owner has drained."""
 
     def __init__(self, signals=(signal.SIGTERM,)):
         self._flag = threading.Event()
@@ -38,6 +45,16 @@ class PreemptionGuard:
 
     def trigger(self):     # tests / manual drain
         self._flag.set()
+
+    def uninstall(self):
+        """Restore the signal handlers that were active before this guard
+        (called by the drain path once its owner is durable on disk)."""
+        for s, prev in self._prev.items():
+            try:
+                signal.signal(s, prev)
+            except (ValueError, OSError):
+                pass
+        self._prev = {}
 
     @property
     def preempted(self) -> bool:

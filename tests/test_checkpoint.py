@@ -82,6 +82,44 @@ def test_half_written_checkpoint_is_invisible(tmp_path):
     m.close()
 
 
+def test_restore_skips_truncated_checkpoint(tmp_path):
+    """A checkpoint whose leaf file is truncated/partial (torn after the
+    rename, e.g. disk damage) must be SKIPPED by restore -- falling back
+    to the previous step -- instead of crashing recovery."""
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, {"x": jnp.arange(4, dtype=jnp.int32)}, block=True)
+    m.save(2, {"x": jnp.arange(4, dtype=jnp.int32) * 10}, block=True)
+    leaf = tmp_path / "step_2" / "leaf_0.npy"
+    leaf.write_bytes(leaf.read_bytes()[:8])
+    with pytest.warns(UserWarning, match="skipping unreadable"):
+        got = m.restore({"x": jnp.zeros(4, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(4))
+    m.close()
+
+
+def test_restore_all_corrupt_raises_loudly(tmp_path):
+    """If checkpoints exist but NONE loads, restore must raise -- a
+    resuming caller must never silently restart from scratch."""
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, {"x": jnp.arange(3)}, block=True)
+    (tmp_path / "step_1" / "leaf_0.npy").write_bytes(b"not an npy")
+    with pytest.warns(UserWarning, match="skipping unreadable"):
+        with pytest.raises(RuntimeError, match="failed to load"):
+            m.restore({"x": jnp.zeros(3)})
+    m.close()
+
+
+def test_restore_explicit_corrupt_step_still_raises(tmp_path):
+    """An explicitly requested step must NOT silently fall back."""
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, {"x": jnp.arange(3)}, block=True)
+    m.save(2, {"x": jnp.arange(3)}, block=True)
+    (tmp_path / "step_2" / "manifest.json").write_text("{ truncated")
+    with pytest.raises(Exception):
+        m.restore({"x": jnp.zeros(3)}, step=2)
+    m.close()
+
+
 def test_elastic_restore_dtype_cast(tmp_path):
     """Restore casts to the template dtype (e.g. serve-time bf16)."""
     save_pytree(tmp_path / "ck", {"w": jnp.ones((4,), jnp.float32)})

@@ -294,6 +294,19 @@ class TestExecutor:
             np.asarray(res.merge_state(state)),
             _oracle_hist(data[:, 0], self.M, self.B))
 
+    def test_empty_stream_is_exact_noop(self):
+        """The chunk_stream empty-stream contract end-to-end: a
+        zero-chunk (body [0, C, ...]) stream scans as a no-op -- fresh
+        buffers, zero tuples -- so WAL-replay-style callers never
+        special-case 'nothing appended'."""
+        from repro.data.pipeline import chunk_stream
+        spec = _histo_spec(self.B)
+        ts = chunk_stream(np.zeros((0, 2), np.int32), self.C, pad_tail=True)
+        run = make_executor(spec, self.M, 3, self.C)
+        merged, stats = run(jnp.asarray(ts.body), mask=jnp.asarray(ts.mask))
+        assert int(np.asarray(merged).sum()) == 0
+        assert np.asarray(stats.max_load).shape == (0,)
+
     def test_reschedule_on_evolving_skew(self):
         """Shift the hot key range mid-stream; the monitor must fire and the
         result must still be exact (merge-before-reassign correctness)."""
@@ -310,3 +323,135 @@ class TestExecutor:
         np.testing.assert_array_equal(np.asarray(merged),
                                       _oracle_hist(keys, self.M, self.B))
         assert bool(np.asarray(stats.rescheduled).any())
+
+
+# -------------------------------------- lane gather/scatter primitives
+class TestLanePrimitives:
+    """Direct round-trip coverage for ``stack_states`` / ``take_lanes``
+    / ``put_lanes`` -- the SessionEngine's per-session-flush resume unit
+    AND the durability snapshot unit (DESIGN.md §9, §10), previously
+    exercised only through the engine."""
+
+    L, M, X, C = 4, 8, 2, 64
+
+    def _setup(self):
+        from repro.core import executor as E
+        spec = _histo_spec(16)
+        res = E.make_resumable_executor(spec, self.M, self.X, self.C)
+        return E, res
+
+    def _advanced(self, E, res, seed=0):
+        """A lanes-stacked state advanced with per-lane-distinct data."""
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, self.M * 16, size=(self.L, 2, self.C))
+        chunks = jnp.asarray(np.stack([keys, keys], axis=-1), jnp.int32)
+        states = E.stack_states(res.init_state(), self.L)
+        states, _ = jax.jit(jax.vmap(res.scan_chunks))(states, chunks, None)
+        return states, chunks
+
+    def test_stack_states_broadcasts_every_leaf(self):
+        E, res = self._setup()
+        fresh = res.init_state()
+        stacked = E.stack_states(fresh, self.L)
+        for leaf, f in zip(jax.tree.leaves(stacked), jax.tree.leaves(fresh)):
+            assert leaf.shape == (self.L,) + np.asarray(f).shape
+            for ln in range(self.L):
+                np.testing.assert_array_equal(np.asarray(leaf[ln]),
+                                              np.asarray(f))
+
+    def test_take_permuted_then_put_is_identity(self):
+        """take(idx) gathers exactly the named lanes IN idx ORDER, and
+        put(idx, take(idx)) reconstructs the original state bit-for-bit
+        for any permutation."""
+        E, res = self._setup()
+        states, _ = self._advanced(E, res)
+        for perm in ([3, 1, 0, 2], [2, 0], [1]):
+            idx = jnp.asarray(perm, jnp.int32)
+            sub = E.take_lanes(states, idx)
+            for leaf, full in zip(jax.tree.leaves(sub),
+                                  jax.tree.leaves(states)):
+                for k, ln in enumerate(perm):
+                    np.testing.assert_array_equal(np.asarray(leaf[k]),
+                                                  np.asarray(full[ln]))
+            back = E.put_lanes(states, idx, sub)
+            for got, want in zip(jax.tree.leaves(back),
+                                 jax.tree.leaves(states)):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+
+    def test_subset_advance_equals_masked_lanes(self):
+        """Advancing a gathered lane SUBSET and scattering it back must
+        equal the all-lanes scan in which the untouched lanes ran
+        fully-masked padding chunks (the mask no-op guarantee): the two
+        suspend/resume shapes cannot drift."""
+        E, res = self._setup()
+        states, _ = self._advanced(E, res)
+        rng = np.random.default_rng(3)
+        keys = rng.integers(0, self.M * 16, size=(2, 1, self.C))
+        more = jnp.asarray(np.stack([keys, keys], axis=-1), jnp.int32)
+        idx = jnp.asarray([1, 3], jnp.int32)
+
+        sub = E.take_lanes(states, idx)
+        sub, _ = jax.jit(jax.vmap(res.scan_chunks))(
+            sub, more, jnp.ones((2, 1, self.C), bool))
+        got = E.put_lanes(states, idx, sub)
+
+        full_chunks = jnp.zeros((self.L, 1, self.C, 2), jnp.int32)
+        full_chunks = full_chunks.at[idx].set(more)
+        full_mask = jnp.zeros((self.L, 1, self.C), bool).at[idx].set(True)
+        want, _ = jax.jit(jax.vmap(res.scan_chunks))(states, full_chunks,
+                                                     full_mask)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_take_put_roundtrip_on_mesh_of_1(self):
+        """The same round-trip through a SHARDED lanes stack: gather off
+        the mesh, scatter back, re-pin to the lane sharding -- the
+        distributed per-session flush and checkpoint-restore path."""
+        from repro.core import distributed as D
+        E, res = self._setup()
+        mesh = jax.make_mesh((1,), ("lanes",))
+        sh = D.make_lane_sharded_executor(res, mesh, self.L)
+        states = sh.init_states()
+        rng = np.random.default_rng(5)
+        keys = rng.integers(0, self.M * 16, size=(self.L, 2, self.C))
+        chunks = jnp.asarray(np.stack([keys, keys], axis=-1), jnp.int32)
+        states, _ = sh.run_lanes(states, chunks,
+                                 jnp.ones((self.L, 2, self.C), bool))
+        idx = jnp.asarray([2, 0], jnp.int32)
+        sub = E.take_lanes(states, idx)
+        back = sh.shard_states(E.put_lanes(states, idx, sub))
+        for got, want in zip(jax.tree.leaves(back),
+                             jax.tree.leaves(states)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        for ln in range(self.L):          # merged answers survive the trip
+            np.testing.assert_array_equal(
+                np.asarray(sh.merge_lane(back, ln)),
+                np.asarray(sh.merge_lane(states, ln)))
+
+
+# ------------------------------------------------------- input pipeline
+class TestChunkStreamContract:
+    def test_empty_stream_pad_tail(self):
+        """chunk_stream(pad_tail=True) on a ZERO-tuple stream: zero
+        chunks, empty mask, num_tuples == 0 (not one all-masked chunk)."""
+        from repro.data.pipeline import chunk_stream
+        ts = chunk_stream(np.zeros((0, 2), np.int32), 8, pad_tail=True)
+        assert ts.body.shape == (0, 8, 2)
+        assert ts.mask.shape == (0, 8)
+        assert ts.tail is None and ts.num_tuples == 0
+
+    def test_empty_stream_legacy_shape(self):
+        from repro.data.pipeline import chunk_stream
+        ts = chunk_stream(np.zeros((0,), np.int64), 8, pad_tail=False)
+        assert ts.body.shape == (0, 8)
+        assert ts.tail is None and ts.num_tuples == 0
+
+    def test_ragged_and_exact_multiples(self):
+        from repro.data.pipeline import chunk_stream
+        data = np.arange(20, dtype=np.int32)
+        ts = chunk_stream(data, 8, pad_tail=True)
+        assert ts.body.shape == (3, 8) and ts.num_tuples == 20
+        assert ts.mask[-1].tolist() == [True] * 4 + [False] * 4
+        exact = chunk_stream(data[:16], 8, pad_tail=True)
+        assert exact.body.shape == (2, 8) and exact.mask.all()
