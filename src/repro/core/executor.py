@@ -338,6 +338,19 @@ class ResumableExecutor:
         """Un-jitted run_chunks (for embedding under an outer jit/vmap)."""
         return jax.lax.scan(self.step, state, (chunks, mask))
 
+    def scan_lanes(self, states: ExecState, chunks, mask=None):
+        """Un-jitted vmapped scan over a leading lanes axis: a
+        lanes-stacked ``ExecState`` (see ``stack_states``) advances by
+        ``chunks[lane, k]`` per lane in one batched scan.
+
+        This is the **lowerable entry point** of the serving layer's hot
+        path: ``serve.SessionEngine`` wraps it in ``jax.jit`` and, with
+        ``aot_buckets=`` enabled, AOT-lowers and compiles one executable
+        per (lane count, scan width) shape bucket at warmup
+        (``jit(scan_lanes).lower(...).compile()``), so ragged traffic
+        never retraces on the flush path."""
+        return jax.vmap(self.scan_chunks)(states, chunks, mask)
+
 
 def make_resumable_executor(
     spec: DittoSpec,

@@ -62,6 +62,7 @@ import re
 import shutil
 import struct
 import zlib
+from collections import deque
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -261,7 +262,8 @@ _TELEMETRY_KEEP = 256    # per-flush telemetry rows carried per checkpoint
 # SessionEngine kwargs that round-trip through config.json (JSON scalars
 # only; spec and mesh are live objects the recover() caller supplies).
 _CFG_ENGINE_KW = ("kernel_backend", "lanes_axis", "profile_chunks",
-                  "threshold", "mem_width_tuples", "static_plan")
+                  "threshold", "mem_width_tuples", "static_plan",
+                  "aot_buckets")
 
 
 class DurableSessionEngine(SessionEngine):
@@ -297,6 +299,11 @@ class DurableSessionEngine(SessionEngine):
                  overwrite: bool = False, _recovering: bool = False, **kw):
         engine_kw = {k: kw[k] for k in _CFG_ENGINE_KW if k in kw}
         super().__init__(spec, **kw)
+        if self._aot_widths:
+            # normalize to the max width (an int) so the knob round-trips
+            # through config.json's JSON-scalar filter and recover() lands
+            # in the SAME bucket table
+            engine_kw["aot_buckets"] = int(self._aot_widths[-1])
         self.dir = Path(directory)
         wal_dir, ckpt_dir = self.dir / "wal", self.dir / "ckpt"
         if not _recovering:
@@ -437,7 +444,9 @@ class DurableSessionEngine(SessionEngine):
                                    "closed": s.closed,
                                    "stats": s.stats.as_dict()}
             if s.backlog_tuples:
-                b = np.concatenate(s.backlog, axis=0)
+                pend = s.pending_arrays()
+                b = pend[0] if len(pend) == 1 else np.concatenate(pend,
+                                                                  axis=0)
                 ent["backlog"] = {
                     "dtype": str(b.dtype), "shape": list(b.shape),
                     "data": base64.b64encode(b.tobytes()).decode("ascii")}
@@ -468,20 +477,20 @@ class DurableSessionEngine(SessionEngine):
         self._slot_sid = [None if x < 0 else int(x)
                           for x in meta["slot_sid"]]
         self._sec_assign = np.asarray(meta["sec_assign"], np.int64)
-        self._queue = [int(x) for x in meta["queue"]]
+        self._queue = deque(int(x) for x in meta["queue"])
         self._feat_shape = (tuple(meta["feat_shape"])
                             if meta["feat_shape"] is not None else None)
         self._dtype = np.dtype(meta["dtype"]) if meta["dtype"] else None
         self._telemetry = list(meta["telemetry"])
         self.sessions = {}
         for sid_s, ent in meta["sessions"].items():
-            backlog, n = [], 0
+            backlog, n = deque(), 0
             if "backlog" in ent:
                 b = ent["backlog"]
                 arr = np.frombuffer(base64.b64decode(b["data"]),
                                     dtype=np.dtype(b["dtype"]))
                 arr = arr.reshape(b["shape"])
-                backlog, n = [arr], len(arr)
+                backlog, n = deque([arr]), len(arr)
             self.sessions[int(sid_s)] = _Session(
                 int(sid_s), ent["tenant"], slot=ent["slot"],
                 backlog=backlog, backlog_tuples=n,
@@ -515,6 +524,10 @@ class DurableSessionEngine(SessionEngine):
             states = self._put_lanes(self._states, idx, lanes)
             self._states = (states if self._sharded is None
                             else self._sharded.shard_states(states))
+        if self._aot_widths and self._dtype is not None:
+            # land the restored engine in the same buckets BEFORE the WAL
+            # tail replays: replayed appends/flushes must not retrace
+            self.warmup()
         recs = self._wal.replay(after_seq=wal_seq)
         replayed_tuples, anomalies = 0, 0
         self._replaying = True

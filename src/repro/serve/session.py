@@ -52,11 +52,31 @@ Distributed mode (DESIGN.md §9, docs/distributed.md)
   re-grant runs the §IV-B shadow-buffer merge as a psum over the lanes
   axis.  A mesh of size 1 is bit-exact vs the unsharded engine.
 
+AOT shape buckets (compile-stall elimination)
+  Ragged appends produce ragged flush batches, and every new
+  (lane count, scan width) shape is a fresh jit trace -- a silent
+  multi-hundred-ms stall on the flush path.  With
+  ``SessionEngine(aot_buckets=W)`` both flush tiers route through a
+  **bucket table**: scan widths round up to powers of two (as before)
+  and are chopped into segments of at most ``W``; per-session lane
+  groups round up to power-of-two buckets padded with all-masked zero
+  lanes (exact no-ops -- a padded lane's state rides through the scan
+  bit-identically).  ``warmup()`` AOT-lowers and compiles ONE
+  executable per bucket up front (``jit(scan_lanes).lower().compile()``
+  on ``core.executor.ResumableExecutor.scan_lanes``, local and mesh
+  variants alike) and primes every fixed-shape helper, so steady-state
+  traffic -- however ragged -- never compiles again.  Warmup runs
+  explicitly or at the first ``append`` (when the tuple dtype/shape
+  becomes known); ``recover`` lands a restored engine in the same
+  buckets before replaying the WAL tail.
+
 Telemetry
   Per-flush counters (tuples, chunks, lane width, secondary grants,
-  slot re-schedules, backlog, occupancy, modeled cycles) accumulate
-  into a schema-v1 benchmark record (``telemetry_record``), the same
-  shape ``benchmarks.common`` validates and ``benchmarks.run`` reports.
+  slot re-schedules, backlog, occupancy, modeled cycles -- plus
+  ``n_retraces`` / ``compile_stall_ms`` observed during the flush, via
+  ``core.compilemon``'s jax.monitoring listener) accumulate into a
+  schema-v1 benchmark record (``telemetry_record``), the same shape
+  ``benchmarks.common`` validates and ``benchmarks.run`` reports.
 
 Durability (DESIGN.md §10, docs/durability.md)
   ``serve.durability`` wraps this engine in a per-tenant write-ahead
@@ -69,12 +89,15 @@ Durability (DESIGN.md §10, docs/durability.md)
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Optional
+import time
+from collections import deque
+from typing import Any, Deque, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compilemon
 from repro.core import executor as core_executor
 from repro.core import scheduler
 from repro.data.pipeline import pad_tail_chunk
@@ -104,10 +127,20 @@ class _Session:
     sid: int
     tenant: str
     slot: Optional[int]                 # primary lane id, None while queued
-    backlog: List[np.ndarray]
-    backlog_tuples: int = 0
+    backlog: Deque[np.ndarray]          # appended arrays, FIFO; never
+    backlog_off: int = 0                # re-copied -- backlog_off marks the
+    backlog_tuples: int = 0             # consumed prefix of backlog[0]
     stats: SessionStats = dataclasses.field(default_factory=SessionStats)
     closed: bool = False
+
+    def pending_arrays(self) -> List[np.ndarray]:
+        """The buffered remainder as a list of array views (first entry
+        trimmed past ``backlog_off``); concatenates nothing."""
+        if not self.backlog:
+            return []
+        first = self.backlog[0]
+        head = first[self.backlog_off:] if self.backlog_off else first
+        return [head, *list(self.backlog)[1:]]
 
 
 class SessionEngine:
@@ -137,6 +170,14 @@ class SessionEngine:
         current device; a mesh of size 1 is bit-exact vs ``mesh=None``.
       lanes_axis: the mesh axis name holding the lanes (default
         ``"lanes"``).
+      aot_buckets: enable the AOT shape-bucketed flush path.  An int is
+        the max scan width per flush segment (rounded up to a power of
+        two); an iterable of widths uses its max.  ``warmup()``
+        pre-compiles one executable per (lane bucket, width in
+        1,2,...,W) and wider flushes chop into W-wide segments, so a
+        warmed engine NEVER retraces on the flush path.  ``None``
+        (default) keeps the plain jit path (one retrace per fresh
+        shape, ``_batch_width`` keeping them logarithmic).
       **executor_kw: forwarded to ``core.make_resumable_executor``
         (profile_chunks, threshold, mem_width_tuples, kernel_backend).
     """
@@ -146,7 +187,7 @@ class SessionEngine:
                  chunk_size: Optional[int] = None, tuned=None,
                  primary_slots: int = 4, secondary_slots: int = 2,
                  min_grant_chunks: int = 2, mesh=None,
-                 lanes_axis: str = "lanes",
+                 lanes_axis: str = "lanes", aot_buckets=None,
                  kernel_backend: Optional[str] = None, **executor_kw):
         if tuned is not None:
             if num_pri is not None and num_pri != tuned.num_pri:
@@ -195,7 +236,7 @@ class SessionEngine:
         else:
             self.lanes_per_device = self.num_lanes
             self._states = core_executor.stack_states(fresh, self.num_lanes)
-            self._run_lanes = jax.jit(jax.vmap(self._res.scan_chunks))
+            self._run_lanes = jax.jit(self._res.scan_lanes)
             self._merge_lane = jax.jit(
                 lambda states, i: self._res.merge_state(
                     jax.tree.map(lambda x: x[i], states)))
@@ -208,12 +249,48 @@ class SessionEngine:
         # take_lanes gathers the group's ExecStates across device
         # boundaries, the vmapped scan resumes them here, put_lanes
         # scatters them back (cross-device suspend/resume, DESIGN.md §9)
-        self._run_group = jax.jit(jax.vmap(self._res.scan_chunks))
+        self._run_group = jax.jit(self._res.scan_lanes)
         self._take_lanes = jax.jit(core_executor.take_lanes)
         self._put_lanes = jax.jit(core_executor.put_lanes)
 
+        # --- AOT shape buckets: widths 1,2,...,W plus the power-of-two
+        # lane-group sizes a per-session flush can present (capped at
+        # num_lanes -- padding never outgrows the lane table)
+        self._aot: Dict[Tuple, Any] = {}      # bucket key -> compiled exec
+        self._aot_info: Optional[Dict[str, Any]] = None
+        if aot_buckets is None:
+            self._aot_widths = None
+            self._group_buckets: Tuple[int, ...] = ()
+        else:
+            if isinstance(aot_buckets, (int, np.integer)):
+                max_w = int(aot_buckets)
+            else:
+                widths = [int(w) for w in aot_buckets]
+                max_w = max(widths) if widths else 0
+            if max_w < 1:
+                raise ValueError(f"aot_buckets={aot_buckets!r}: need a "
+                                 "max scan width >= 1")
+            max_w = 1 << (max_w - 1).bit_length()        # pow2 ceiling
+            self._aot_widths = tuple(1 << k
+                                     for k in range(max_w.bit_length()))
+            self._group_buckets = tuple(sorted(
+                {self._group_bucket(g)
+                 for g in range(1, 2 + self.secondary_slots)}))
+
+        # jit the slot scheduler ONCE: schedule_secpes builds its scan
+        # eagerly, which re-traces (and re-compiles) on every call --
+        # a per-flush compile stall the monitor would charge to us
+        self._plan_sec = jax.jit(
+            lambda w: scheduler.schedule_secpes(
+                w, self.secondary_slots,
+                min_load=float(self.min_grant_chunks)))
+
+        compilemon.install()
+        self._n_retraces = 0
+        self._compile_stall_ms = 0.0
+
         self.sessions: Dict[int, _Session] = {}
-        self._queue: List[int] = []                      # sids awaiting a slot
+        self._queue: Deque[int] = deque()                # sids awaiting a slot
         self._slot_sid: List[Optional[int]] = [None] * primary_slots
         self._sec_assign = np.full(secondary_slots, -1, np.int64)
         self._next_sid = 0
@@ -231,7 +308,8 @@ class SessionEngine:
         sessions close -- the continuous-batching admission path)."""
         sid = self._next_sid
         self._next_sid += 1
-        self.sessions[sid] = _Session(sid, tenant, slot=None, backlog=[])
+        self.sessions[sid] = _Session(sid, tenant, slot=None,
+                                      backlog=deque())
         self._queue.append(sid)
         self._admit()
         return sid
@@ -245,6 +323,9 @@ class SessionEngine:
             data = data[:, None]
         if self._feat_shape is None:
             self._feat_shape, self._dtype = data.shape[1:], data.dtype
+            if self._aot_widths and not self._aot:
+                self.warmup()        # deferred startup warmup: the tuple
+                                     # shape is now known
         elif data.shape[1:] != self._feat_shape:
             raise ValueError(f"append shape {data.shape[1:]} != engine tuple "
                              f"shape {self._feat_shape}")
@@ -326,8 +407,11 @@ class SessionEngine:
         3. stripe each session's full chunks across its lane group (the
            ``force`` sessions also flush their ragged tail as a masked
            chunk); idle lanes carry all-masked padding;
-        4. one vmapped ``run_chunks`` advances all lane states together.
+        4. one vmapped ``run_chunks`` advances all lane states together
+           -- per width segment, through the AOT bucket table when
+           ``aot_buckets=`` is enabled.
         """
+        snap = compilemon.snapshot()
         force = set(force)
         self._admit()
         self._reschedule_secondary()
@@ -350,10 +434,22 @@ class SessionEngine:
                 lane_masks[ln].extend(gm[g])
             flushed_tuples += n_real
 
-        width = self._batch_width(lane_chunks)
-        if width:
-            self._run_flush(lane_chunks, lane_masks, lane_sid, width)
-        self._record_flush(flushed_tuples, lane_chunks, width)
+        row_sessions = [None if sid is None else self.sessions[sid]
+                        for sid in lane_sid]
+        width = 0
+        for off, w in self._segments(lane_chunks):
+            chunks, mask = self._pack_chunks(lane_chunks, lane_masks, w,
+                                             offset=off)
+            if self._sharded is not None:    # split the batch over the mesh
+                chunks = jax.device_put(chunks, self._sharded.lane_sharding)
+                mask = jax.device_put(mask, self._sharded.lane_sharding)
+            run = self._aot.get(("eng", w), self._run_lanes)
+            self._states, stats = run(self._states, chunks, mask)
+            self._apply_exec_stats(
+                stats, row_sessions,
+                [min(max(len(c) - off, 0), w) for c in lane_chunks])
+            width += w
+        self._record_flush(flushed_tuples, lane_chunks, width, snap=snap)
         self._flush_no += 1
 
     def flush_session(self, sid: int) -> None:
@@ -368,7 +464,15 @@ class SessionEngine:
         is gathered across device boundaries (``executor.take_lanes``),
         resumed locally, and scattered back -- when all of the session's
         lanes live on one device, the gather touches a single shard (the
-        local-shard fast path)."""
+        local-shard fast path).
+
+        With ``aot_buckets=`` enabled the lane group rounds up to a
+        power-of-two bucket, padded with lanes OUTSIDE the group
+        carrying all-masked zero chunks: a fully masked scan leaves an
+        ``ExecState`` bit-identical (the executor's validity-mask
+        no-op), so the padded lanes are written back unchanged and the
+        scan hits a pre-compiled bucket instead of retracing."""
+        snap = compilemon.snapshot()
         s = self._session(sid)
         if s.slot is None:
             raise RuntimeError(
@@ -378,19 +482,154 @@ class SessionEngine:
         lanes = self._lane_group(s.slot)
         group_chunks, group_masks, n_real = self._take_striped(
             s, lanes, flush_tail=True)
-        width = self._batch_width(group_chunks)
-        if width:
-            arr, msk = self._pack_chunks(group_chunks, group_masks, width)
+        width = 0
+        if any(group_chunks):
+            n_real_lanes = len(lanes)
+            if self._aot_widths:
+                bucket = self._group_bucket(n_real_lanes)
+                if bucket > n_real_lanes:
+                    in_group = set(lanes)
+                    pads = [ln for ln in range(self.num_lanes)
+                            if ln not in in_group][:bucket - n_real_lanes]
+                    lanes = lanes + pads
+                    group_chunks = group_chunks + [[] for _ in pads]
+                    group_masks = group_masks + [[] for _ in pads]
+            row_sessions = [s] * n_real_lanes + \
+                [None] * (len(lanes) - n_real_lanes)
             idx = np.asarray(lanes, np.int32)
             sub = self._take_lanes(self._states, idx)
-            sub, stats = self._run_group(sub, arr, msk)
+            for off, w in self._segments(group_chunks):
+                arr, msk = self._pack_chunks(group_chunks, group_masks, w,
+                                             offset=off)
+                run = self._aot.get(("grp", len(lanes), w), self._run_group)
+                sub, stats = run(sub, arr, msk)
+                self._apply_exec_stats(
+                    stats, row_sessions,
+                    [min(max(len(c) - off, 0), w) for c in group_chunks])
+                width += w
             states = self._put_lanes(self._states, idx, sub)
             self._states = (states if self._sharded is None
                             else self._sharded.shard_states(states))
-            self._apply_exec_stats(stats, [s] * len(lanes),
-                                   [len(c) for c in group_chunks])
-        self._record_flush(n_real, group_chunks, width, scope="session")
+        self._record_flush(n_real, group_chunks, width, scope="session",
+                           snap=snap)
         self._flush_no += 1
+
+    # ------------------------------------------------------- AOT bucket table
+
+    def _group_bucket(self, g: int) -> int:
+        """Lane-group bucket: the power-of-two ceiling of ``g``, capped
+        at the LARGEST group a session can own (its primary lane + every
+        secondary lane) -- the maximal group never pays padding, and the
+        padding lanes always exist."""
+        gmax = min(1 + self.secondary_slots, self.num_lanes)
+        return min(1 << (g - 1).bit_length(), gmax)
+
+    def _segments(self, lane_chunks):
+        """Yield the ``(offset, width)`` scan segments covering the
+        widest lane.  Plain path: ONE power-of-two segment
+        (``_batch_width``, retraces stay logarithmic).  AOT path: chop
+        into bucket widths ``<= W`` -- a scan is sequential, so running
+        two segments with the state carried between them is bit-exact
+        vs one wide scan, and every segment hits a pre-compiled
+        executable."""
+        wmax = max((len(c) for c in lane_chunks), default=0)
+        if not wmax:
+            return
+        if not self._aot_widths:
+            yield 0, self._batch_width(lane_chunks)
+            return
+        cap = self._aot_widths[-1]
+        off = 0
+        while off < wmax:
+            rem = wmax - off
+            w = cap if rem >= cap else 1 << (rem - 1).bit_length()
+            yield off, w
+            off += w
+
+    def warmup(self, *, dtype=None, feat_shape=None) -> Dict[str, Any]:
+        """Pre-compile the whole AOT bucket table so steady-state
+        traffic never retraces (requires ``aot_buckets=``).
+
+        AOT-lowers and compiles one executable per engine-wide scan
+        width (``jit(scan_lanes).lower().compile()``, sharded over the
+        mesh when distributed) and one per (lane-group bucket, width)
+        for the per-session tier, then primes every remaining
+        fixed-shape entry point (lane gather/scatter, merge, reset,
+        fold, the secondary scheduler) by executing it on scratch
+        states -- so ``flush`` / ``flush_session`` / ``query`` /
+        ``close`` are all compile-free afterwards.
+
+        Needs the engine tuple dtype+shape: either call after the first
+        ``append`` (``append`` triggers warmup automatically then), or
+        pass ``dtype=`` and ``feat_shape=`` to warm up before any data
+        arrives (what ``recover`` does, from the checkpoint meta).
+        Returns the warmup info dict also exposed under
+        ``telemetry_record()['extra']['aot']``."""
+        if not self._aot_widths:
+            raise RuntimeError("warmup() needs SessionEngine(aot_buckets=...)")
+        if dtype is not None:
+            dtype = np.dtype(dtype)
+            if self._dtype is not None and dtype != self._dtype:
+                raise ValueError(f"warmup dtype {dtype} != engine tuple "
+                                 f"dtype {self._dtype}")
+            self._dtype = dtype
+        if feat_shape is not None:
+            feat_shape = tuple(int(d) for d in feat_shape)
+            if self._feat_shape is not None and feat_shape != self._feat_shape:
+                raise ValueError(f"warmup feat_shape {feat_shape} != engine "
+                                 f"tuple shape {self._feat_shape}")
+            self._feat_shape = feat_shape
+        if self._dtype is None or self._feat_shape is None:
+            raise RuntimeError(
+                "warmup() before the tuple shape is known: pass dtype= and "
+                "feat_shape=, or append data first")
+        t0 = time.perf_counter()
+        before = compilemon.snapshot()
+        c, feat = self.chunk_size, self._feat_shape
+        scratch = (self._sharded.init_states() if self._sharded is not None
+                   else core_executor.stack_states(self._fresh,
+                                                   self.num_lanes))
+
+        def zeros(lanes, w):
+            zc = np.zeros((lanes, w, c, *feat), self._dtype)
+            zm = np.zeros((lanes, w, c), bool)
+            return zc, zm
+
+        for w in self._aot_widths:
+            zc, zm = zeros(self.num_lanes, w)
+            if self._sharded is not None:
+                zc = jax.device_put(zc, self._sharded.lane_sharding)
+                zm = jax.device_put(zm, self._sharded.lane_sharding)
+            self._aot[("eng", w)] = \
+                self._run_lanes.lower(scratch, zc, zm).compile()
+        for b in self._group_buckets:
+            idx = np.arange(b, dtype=np.int32)
+            sub = self._take_lanes(scratch, idx)     # primes the gather
+            for w in self._aot_widths:
+                zc, zm = zeros(b, w)
+                self._aot[("grp", b, w)] = \
+                    self._run_group.lower(sub, zc, zm).compile()
+            put = self._put_lanes(scratch, idx, sub)  # primes the scatter
+            if self._sharded is not None:
+                self._sharded.shard_states(put)
+        # remaining fixed-shape entry points (query/close/re-grant): a
+        # plain execution populates their jit caches
+        self._merge_lane(scratch, 0)
+        self._reset_lane(scratch, 0)
+        if self.secondary_slots and self.spec.merge is None:
+            self._fold_lane(scratch, self.primary_slots, 0)
+        self._res.merge_state(self._fresh)
+        self.plan_secondary(np.zeros(self.primary_slots, np.float32))
+        d = compilemon.since(before)
+        self._aot_info = {
+            "widths": [int(w) for w in self._aot_widths],
+            "group_buckets": [int(b) for b in self._group_buckets],
+            "n_executables": len(self._aot),
+            "warmup_ms": round((time.perf_counter() - t0) * 1e3, 3),
+            "warmup_compiles": int(d.n_compiles),
+            "warmup_compile_ms": float(d.stall_ms),
+        }
+        return self._aot_info
 
     def _lane_group(self, slot: int) -> List[int]:
         """The lane ids a primary slot currently owns: its primary lane
@@ -427,42 +666,39 @@ class SessionEngine:
         w = max((len(c) for c in lane_chunks), default=0)
         return 1 << (w - 1).bit_length() if w else 0
 
-    def _run_flush(self, lane_chunks, lane_masks, lane_sid, width):
-        chunks, mask = self._pack_chunks(lane_chunks, lane_masks, width)
-        if self._sharded is not None:    # split the batch over the mesh
-            chunks = jax.device_put(chunks, self._sharded.lane_sharding)
-            mask = jax.device_put(mask, self._sharded.lane_sharding)
-        self._states, stats = self._run_lanes(self._states, chunks, mask)
-        self._apply_exec_stats(
-            stats,
-            [None if sid is None else self.sessions[sid]
-             for sid in lane_sid],
-            [len(c) for c in lane_chunks])
-
-    def _pack_chunks(self, lane_chunks, lane_masks, width):
+    def _pack_chunks(self, lane_chunks, lane_masks, width, offset=0):
         """Pack per-lane chunk/mask lists into the dense
-        [lanes, width, chunk, feat] batch the vmapped scan takes;
-        unfilled rows stay all-masked zero padding (exact no-ops)."""
+        [lanes, width, chunk, feat] batch the vmapped scan takes --
+        ``offset`` selects the chunk window ``[offset, offset+width)``
+        of each lane (the AOT segment loop); unfilled rows stay
+        all-masked zero padding (exact no-ops)."""
         c = self.chunk_size
         feat = self._feat_shape or (1,)
         chunks = np.zeros((len(lane_chunks), width, c, *feat),
                           self._dtype or np.int32)
         mask = np.zeros((len(lane_chunks), width, c), bool)
         for ln in range(len(lane_chunks)):
-            for k, (ch, m) in enumerate(zip(lane_chunks[ln], lane_masks[ln])):
+            row_c = lane_chunks[ln][offset:offset + width]
+            row_m = lane_masks[ln][offset:offset + width]
+            for k, (ch, m) in enumerate(zip(row_c, row_m)):
                 chunks[ln, k] = ch
                 mask[ln, k] = m
         return jnp.asarray(chunks), jnp.asarray(mask)
 
     def _apply_exec_stats(self, stats, row_sessions, row_counts):
         """Fold the scan's per-(lane, chunk) ExecStats into each row's
-        owning session (first ``row_counts[row]`` entries are real)."""
+        owning session (first ``row_counts[row]`` entries are real).
+        The device transfer is LAZY: an all-padding batch (no real
+        session rows) never forces a sync on the flush path."""
+        live = [(row, s, k)
+                for row, (s, k) in enumerate(zip(row_sessions, row_counts))
+                if s is not None and k > 0]
+        if not live:
+            return
         cycles = np.asarray(stats.modeled_cycles)       # [rows, width]
         loads = np.asarray(stats.max_load)
         resched = np.asarray(stats.rescheduled)
-        for row, (s, k) in enumerate(zip(row_sessions, row_counts)):
-            if s is None or k == 0:
-                continue
+        for row, s, k in live:
             s.stats.modeled_cycles += float(cycles[row, :k].sum())
             s.stats.max_load = max(s.stats.max_load,
                                    int(loads[row, :k].max()))
@@ -470,30 +706,53 @@ class SessionEngine:
 
     def _take_chunks(self, s: _Session, flush_tail: bool):
         """Pop full chunks (plus, when forced, the masked ragged tail)
-        off a session's backlog; the sub-chunk remainder stays buffered."""
+        off a session's backlog; the sub-chunk remainder stays buffered.
+        Only the CONSUMED tuples are ever copied (``_pop_backlog``) --
+        repeated small appends cost O(taken) per flush, not
+        O(total backlog)."""
         c = self.chunk_size
-        if not s.backlog_tuples:
+        avail = s.backlog_tuples
+        take = avail if flush_tail else (avail // c) * c
+        if not take:
             return [], []
-        data = np.concatenate(s.backlog, axis=0)
+        data = self._pop_backlog(s, take)
         nfull = len(data) // c
         chunks = [data[k * c:(k + 1) * c] for k in range(nfull)]
         masks = [np.ones(c, bool)] * nfull
-        taken = nfull * c
-        if flush_tail and taken < len(data):
-            padded, m = pad_tail_chunk(data[taken:], c)
+        if nfull * c < len(data):
+            padded, m = pad_tail_chunk(data[nfull * c:], c)
             chunks.append(padded)
             masks.append(m)
-            taken = len(data)
-        s.backlog = [data[taken:]] if taken < len(data) else []
-        s.backlog_tuples = len(data) - taken
         return chunks, masks
+
+    @staticmethod
+    def _pop_backlog(s: _Session, n: int) -> np.ndarray:
+        """Consume exactly ``n`` tuples off the backlog front: exhausted
+        arrays pop left, a partially consumed head just advances
+        ``backlog_off`` -- the unconsumed remainder is never copied."""
+        parts: List[np.ndarray] = []
+        need = n
+        while need:
+            head = s.backlog[0]
+            rest = len(head) - s.backlog_off
+            if rest <= need:
+                parts.append(head[s.backlog_off:])
+                s.backlog.popleft()
+                s.backlog_off = 0
+                need -= rest
+            else:
+                parts.append(head[s.backlog_off:s.backlog_off + need])
+                s.backlog_off += need
+                need = 0
+        s.backlog_tuples -= n
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
 
     # ------------------------------------------------------- slot scheduling
 
     def _admit(self) -> None:
         for slot in range(self.primary_slots):
             if self._slot_sid[slot] is None and self._queue:
-                sid = self._queue.pop(0)
+                sid = self._queue.popleft()
                 self._slot_sid[slot] = sid
                 self.sessions[sid].slot = slot
 
@@ -514,10 +773,8 @@ class SessionEngine:
         the paper's Fig. 5 properties."""
         if self.secondary_slots == 0:
             return np.zeros(0, np.int64)
-        return np.asarray(scheduler.schedule_secpes(
-            jnp.asarray(backlog_chunks, jnp.float32),
-            self.secondary_slots,
-            min_load=float(self.min_grant_chunks))).astype(np.int64)
+        return np.asarray(self._plan_sec(
+            jnp.asarray(backlog_chunks, jnp.float32))).astype(np.int64)
 
     def _reschedule_secondary(self) -> None:
         new = self.plan_secondary(self._backlog_chunks())
@@ -566,7 +823,11 @@ class SessionEngine:
     # ------------------------------------------------------------- telemetry
 
     def _record_flush(self, tuples: int, lane_chunks, width: int,
-                      scope: str = "engine") -> None:
+                      scope: str = "engine", snap=None) -> None:
+        delta = compilemon.since(snap) if snap is not None else None
+        if delta is not None:
+            self._n_retraces += delta.n_compiles
+            self._compile_stall_ms += delta.stall_ms
         active = sum(sid is not None for sid in self._slot_sid)
         backlog = sum(s.backlog_tuples for s in self.sessions.values()
                       if not s.closed)
@@ -582,6 +843,9 @@ class SessionEngine:
             "slot_reschedules": int(self._slot_reschedules),
             "backlog_tuples": int(backlog),
             "slot_occupancy": round(active / self.primary_slots, 4),
+            "n_retraces": 0 if delta is None else int(delta.n_compiles),
+            "compile_stall_ms": (0.0 if delta is None
+                                 else float(delta.stall_ms)),
         })
 
     def telemetry_record(self, validate: bool = True) -> Dict[str, Any]:
@@ -594,6 +858,8 @@ class SessionEngine:
             "slot_reschedules": self._slot_reschedules,
             "tuples_flushed": int(sum(s.stats.tuples_flushed
                                       for s in self.sessions.values())),
+            "n_retraces": int(self._n_retraces),
+            "compile_stall_ms": round(self._compile_stall_ms, 3),
         }
         rec = {
             "schema_version": TELEMETRY_SCHEMA_VERSION,
@@ -613,7 +879,10 @@ class SessionEngine:
                                      else self.num_lanes
                                      // self.lanes_per_device),
                     "lanes_per_device": self.lanes_per_device,
+                    "aot_buckets": (None if self._aot_widths is None
+                                    else int(self._aot_widths[-1])),
                 },
+                "aot": self._aot_info,
                 "totals": totals,
             },
         }

@@ -452,3 +452,46 @@ def test_crash_recovery_example_sigkill_multi_device(cpu_mesh_env,
     assert "OK WAL tail only" in r.stdout
     assert "OK recovered answers oracle-exact" in r.stdout
     assert "OK post-recovery stream + close oracle-exact" in r.stdout
+
+
+class TestRecoverAOTBuckets:
+    def test_recover_lands_in_same_buckets_zero_retraces(
+            self, small_spec, zipf_dataset, tmp_path):
+        """Acceptance: an ``aot_buckets=`` engine's knob round-trips
+        through config.json, ``recover`` re-warms the bucket table from
+        the checkpoint's dtype/shape BEFORE the WAL tail replays, the
+        recovered answers stay crash-exact, and post-recover queries
+        record zero retraces."""
+        import json
+        eng = _engine(small_spec, tmp_path, aot_buckets=2)
+        sids, appended = _drive_pre_crash(eng, zipf_dataset, tenants=2)
+        eng.shutdown()                       # abandon == SIGKILL on disk
+        cfg = json.loads((tmp_path / "config.json").read_text())
+        assert cfg["engine_kw"]["aot_buckets"] == 2
+
+        eng2 = SessionEngine.recover(small_spec, tmp_path)
+        rec = eng2.telemetry_record(validate=False)
+        assert rec["extra"]["config"]["aot_buckets"] == 2
+        assert rec["extra"]["aot"] is not None   # warmup really ran
+        n0 = len(rec["rows"])
+        by_tenant = _tenant_sids(eng2)
+        for t in sids:
+            keys = np.concatenate([b[:, 0] for b in appended[t]])
+            np.testing.assert_array_equal(
+                np.asarray(eng2.query(by_tenant[f"t{t}"])), _oracle(keys))
+        steady = eng2.telemetry_record(validate=False)["rows"][n0:]
+        assert steady and all(r["n_retraces"] == 0 for r in steady), steady
+        eng2.shutdown()
+
+    def test_recover_plain_engine_stays_unbucketed(
+            self, small_spec, zipf_dataset, tmp_path):
+        """No knob, no buckets: recovery of a plain durable engine keeps
+        the plain jit path (aot config None, no warmup info)."""
+        eng = _engine(small_spec, tmp_path)
+        _drive_pre_crash(eng, zipf_dataset, tenants=2)
+        eng.shutdown()
+        eng2 = SessionEngine.recover(small_spec, tmp_path)
+        rec = eng2.telemetry_record(validate=False)
+        assert rec["extra"]["config"]["aot_buckets"] is None
+        assert rec["extra"]["aot"] is None
+        eng2.shutdown()

@@ -512,3 +512,143 @@ class TestTenantSkewScheduling:
         spec = dp.make_spec(3, SMALL_M, capacity_per_pe=1024)
         with pytest.raises(ValueError, match="secondary_slots=0"):
             _session_engine(spec, secondary_slots=1)
+
+
+# --------------------------------------------------- AOT bucketed flush
+class TestAOTBuckets:
+    """DESIGN.md §8 AOT shape buckets: a bucketed engine must answer
+    bit-exactly like the plain-jit engine in every mode, and a warmed
+    engine must never retrace on the flush path -- however ragged the
+    appends, and across bucket (width and lane-group) boundaries."""
+
+    def _datasets(self, zipf_dataset, n=3):
+        # sizes straddle the width-2 segment boundary on purpose:
+        # 1..5-chunk backlogs, ragged tails, mixed skew
+        return {t: zipf_dataset((2 + t) * SMALL_CHUNK + 41 * t + 7, DOMAIN,
+                                (0.0, 1.5)[t % 2], seed=t)
+                for t in range(n)}
+
+    def test_bit_exact_vs_unbucketed_local(self, small_spec, zipf_dataset):
+        """Acceptance: same ragged multi-tenant scenario through the
+        plain-jit and the aot_buckets=2 engine (width chopping active:
+        backlogs run to 5+ chunks) -- every query/close answer
+        identical, and exact vs the oracle."""
+        datasets = self._datasets(zipf_dataset)
+        want = _drive_scenario(
+            _session_engine(small_spec, primary_slots=3), datasets)
+        got = _drive_scenario(
+            _session_engine(small_spec, primary_slots=3, aot_buckets=2),
+            datasets)
+        assert got.keys() == want.keys()
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+        for t, d in datasets.items():
+            np.testing.assert_array_equal(np.asarray(got[f"c{t}"]),
+                                          _oracle(d[:, 0]))
+
+    def test_bit_exact_vs_unbucketed_mesh_of_1(self, small_spec,
+                                               zipf_dataset):
+        """Acceptance: the bucketed MESH engine (warmup lowers the
+        shard_map'd executables) answers identically to the plain local
+        engine on the same scenario."""
+        datasets = self._datasets(zipf_dataset, n=2)
+        want = _drive_scenario(_session_engine(small_spec), datasets)
+        got = _drive_scenario(
+            _session_engine(small_spec, aot_buckets=4,
+                            mesh=jax.make_mesh((1,), ("lanes",))),
+            datasets)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+
+    def test_zero_retraces_after_warmup(self, small_spec, zipf_dataset):
+        """Regression: after the (append-triggered) warmup, a ragged
+        multi-tenant scenario -- widths crossing the W=2 bucket cap,
+        lane groups crossing group buckets, both flush tiers -- records
+        ZERO retraces in the per-flush telemetry."""
+        eng = _session_engine(small_spec, aot_buckets=2)
+        sid = eng.open()
+        eng.append(sid, zipf_dataset(8, DOMAIN, 1.5))  # triggers warmup
+        eng.close(sid)
+        aot = eng.telemetry_record()["extra"]["aot"]
+        assert aot is not None and aot["widths"] == [1, 2]
+        assert aot["warmup_compiles"] > 0
+        n0 = len(eng.telemetry_record()["rows"])
+        _drive_scenario(eng, self._datasets(zipf_dataset, n=2))
+        rec = eng.telemetry_record()
+        steady = rec["rows"][n0:]
+        assert steady, "scenario recorded no flushes"
+        bad = [r for r in steady if r["n_retraces"]]
+        assert not bad, bad
+        # width chopping: a >W-chunk backlog flushes in one go, still
+        # compile-free (W-wide segments through the bucket table)
+        wide = zipf_dataset(5 * SMALL_CHUNK + 9, DOMAIN, 1.5, seed=99)
+        sid2 = eng.open()
+        eng.append(sid2, wide)
+        merged, _ = eng.close(sid2)
+        np.testing.assert_array_equal(np.asarray(merged),
+                                      _oracle(wide[:, 0]))
+        rec = eng.telemetry_record()
+        assert rec["rows"][-1]["lane_width"] > 2
+        assert rec["rows"][-1]["n_retraces"] == 0
+        assert rec["extra"]["totals"]["n_retraces"] == 0
+        assert rec["extra"]["totals"]["compile_stall_ms"] == 0.0
+        assert rec["extra"]["config"]["aot_buckets"] == 2
+
+    def test_group_padding_leaves_other_sessions_untouched(
+            self, small_spec, zipf_dataset):
+        """A per-session flush whose lane group rounds UP to a bucket
+        pads with another session's lane carrying all-masked chunks;
+        both sessions must stay exact (the padded lane's state rides
+        through the scan bit-identically)."""
+        eng = _session_engine(small_spec, primary_slots=2,
+                              secondary_slots=3, aot_buckets=2)
+        sids = [eng.open(), eng.open()]
+        d0 = zipf_dataset(10 * SMALL_CHUNK + 13, DOMAIN, 1.5, seed=1)
+        d1 = zipf_dataset(6 * SMALL_CHUNK + 7, DOMAIN, 1.5, seed=2)
+        eng.append(sids[0], d0)
+        eng.append(sids[1], d1)
+        eng.flush()                       # grants settle: 2 + 1 split
+        s0 = eng.sessions[sids[0]]
+        if len(eng._lane_group(s0.slot)) == 3:   # group 3 -> bucket 4:
+            tail0 = zipf_dataset(2 * SMALL_CHUNK + 99, DOMAIN, 1.5, seed=3)
+            eng.append(sids[0], tail0)           # the padded-lane path
+            eng.flush_session(sids[0])
+            d0 = np.concatenate([d0, tail0])
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(sids[0])), _oracle(d0[:, 0]))
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(sids[1])), _oracle(d1[:, 0]))
+
+    def test_warmup_validation_and_knobs(self, small_spec):
+        with pytest.raises(ValueError, match="aot_buckets"):
+            _session_engine(small_spec, aot_buckets=0)
+        with pytest.raises(RuntimeError, match="aot_buckets"):
+            _session_engine(small_spec).warmup()
+        eng = _session_engine(small_spec, aot_buckets=3)  # pow2-ceiled
+        assert eng._aot_widths == (1, 2, 4)
+        with pytest.raises(RuntimeError, match="tuple shape"):
+            eng.warmup()
+        info = eng.warmup(dtype=np.int32, feat_shape=(2,))
+        assert info["n_executables"] == len(eng._aot) > 0
+        with pytest.raises(ValueError, match="dtype"):
+            eng.warmup(dtype=np.float32)
+
+    def test_backlog_consumes_without_recopy(self, small_spec):
+        """Satellite: a flush that leaves a sub-chunk remainder advances
+        ``backlog_off`` inside the appended array instead of rebuilding
+        the backlog -- repeated small appends stay O(taken)."""
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        n = SMALL_CHUNK + 100
+        keys = (np.arange(n, dtype=np.int32) * 7) % DOMAIN
+        eng.append(sid, np.stack([keys, np.ones_like(keys)], axis=1))
+        eng.flush()                  # one full chunk runs, 100 stay
+        s = eng.sessions[sid]
+        assert s.backlog_tuples == 100
+        assert len(s.backlog) == 1 and s.backlog_off == SMALL_CHUNK
+        pend = s.pending_arrays()
+        assert len(pend) == 1 and len(pend[0]) == 100
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(sid)), _oracle(keys))
