@@ -49,7 +49,8 @@ FAST_KW = {
     "fig9": dict(total_chunks=128),
     "moe_balance": dict(tokens=512, d_model=32, d_ff=64, group=256),
     "backend_sweep": dict(t=1024, iters=1),
-    "serving_session": dict(n_tuples=1 << 13, rounds=5, chunk=1024),
+    "serving_session": dict(n_tuples=1 << 13, rounds=5, chunk=1024,
+                            storm_sessions=64, storms=2, storm_chunk=128),
     # fast sizes make the WAL/checkpoint I/O a large share of a tiny
     # compute budget, so the overhead bound is looser than the full
     # run's (it is still published + asserted via the headline)

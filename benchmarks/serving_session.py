@@ -31,6 +31,16 @@ Reports sustained tuples/sec and p50/p99 query latency per tier,
 verifies every tenant's final buffers bit-exactly against the numpy
 oracle, and embeds the engine's own per-flush telemetry record.
 
+A second **session-storm phase** measures batched admission (the
+memcached request-path scenario): ``storms`` bursts of
+``storm_sessions`` brand-new tenants each arrive in ONE
+``open_batch`` call with chunk-straddling first appends.  The phase
+ASSERTS in-bench that every storm runs O(width buckets) scan
+dispatches (not one per session) and -- on the warmed table -- that
+``n_retraces_admit == 0``; the headline carries ``admit_p99_ms`` and
+``n_retraces_admit``, and a sample of each burst is verified
+bit-exact against the oracle.
+
     PYTHONPATH=src python -m benchmarks.serving_session
 """
 from __future__ import annotations
@@ -52,7 +62,8 @@ HOT_TENANT = 3            # the alpha=2.0 tenant appends hot_factor x data
 def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
         num_pri: int = 16, num_sec: int = 8, primary_slots: int = 4,
         secondary_slots: int = 2, hot_factor: int = 4, mesh="auto",
-        aot_buckets: int = 8):
+        aot_buckets: int = 8, storm_sessions: int = 1024,
+        storms: int = 3, storm_chunk: int = 256):
     import jax
     if rounds < 3:
         raise ValueError("rounds must be >= 3: one warm-up pass plus at "
@@ -181,6 +192,69 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
         if not p99_sess < p99_full:
             assert pct(np.sort(lat_sess)[:-1], 99) < \
                 pct(np.sort(lat_full)[:-1], 99), (p99_sess, p99_full)
+
+    # ------------------------------------------------ session-storm phase
+    # A dedicated wide engine (one primary slot per storm session, no
+    # secondary tier -- admission is the thing under test) absorbs
+    # ``storms`` bursts of ``storm_sessions`` brand-new tenants, each
+    # burst ONE open_batch call with 1..3-chunk first appends (ragged,
+    # chunk-straddling).  Between bursts every session closes, so each
+    # storm re-admits a cold full house through the same buckets.
+    storm_num_pri = 8
+    if mesh is not None:
+        storm_sessions += -storm_sessions % num_dev
+    storm_spec = histo.make_spec(512, 1 << 20, storm_num_pri)
+    storm_aot = 2 if aot_buckets is not None else None
+    storm_eng = SessionEngine(storm_spec, num_pri=storm_num_pri, num_sec=2,
+                              chunk_size=storm_chunk,
+                              primary_slots=storm_sessions,
+                              secondary_slots=0, mesh=mesh,
+                              aot_buckets=storm_aot)
+    if storm_aot is not None:
+        storm_eng.warmup(dtype=np.int64, feat_shape=(2,))
+    srng = np.random.default_rng(7)
+    sample = sorted({0, storm_sessions // 2, storm_sessions - 1})
+    admit_ms, dispatches = [], []
+    pre_storm = compilemon.snapshot()
+    for s in range(storms):
+        firsts = []
+        for i in range(storm_sessions):
+            n = storm_chunk * (1 + (i + s) % 3) + \
+                int(srng.integers(0, storm_chunk))
+            keys = srng.integers(0, 1 << 20, size=n)
+            firsts.append(np.stack([keys, np.ones_like(keys)], axis=1))
+        sids = storm_eng.open_batch(
+            [f"burst{s}.{i}" for i in range(storm_sessions)], first=firsts)
+        row = storm_eng._telemetry[-1]
+        assert row["scope"] == "admit" and \
+            row["n_admitted"] == storm_sessions, row
+        admit_ms.append(row["admit_ms"])
+        dispatches.append(row["n_scan_dispatches"])
+        # the tentpole claim, asserted in-bench: the widest first append
+        # is 3 chunks, so the whole storm runs in <= ceil(3/W) pow2
+        # segments -- O(buckets) scan dispatches, NOT one per session
+        assert row["n_scan_dispatches"] <= 2 < storm_sessions, row
+        for i in sample:              # bit-exact spot check per burst
+            np.testing.assert_array_equal(
+                np.asarray(storm_eng.query(sids[i], scope="session")),
+                histo.oracle(firsts[i][:, 0], 512, 1 << 20, storm_num_pri))
+        for sid in sids:              # drain: next burst re-admits cold
+            storm_eng.close(sid)
+    storm_delta = compilemon.since(pre_storm)
+    storm_totals = storm_eng.telemetry_record(
+        validate=False)["extra"]["totals"]
+    n_retraces_admit = int(storm_totals["n_retraces_admit"])
+    admit_p99 = pct(admit_ms, 99)
+    print(f"storm phase: {storms} x {storm_sessions}-session open_batch; "
+          f"admit p99 {admit_p99:.2f} ms, {max(dispatches)} scan "
+          f"dispatch(es)/storm, {n_retraces_admit} admission retrace(s)")
+    if storm_aot is not None:
+        # warmed admission buckets: a storm must never hit the compiler
+        assert n_retraces_admit == 0, storm_totals
+        assert storm_delta.n_compiles == 0, (
+            f"{storm_delta.n_compiles} retrace(s) "
+            f"({storm_delta.stall_ms:.1f} ms) inside the storm phase "
+            f"despite aot_buckets={storm_aot}")
     return bench_record(
         "serving_session", title, rows,
         extra={
@@ -191,6 +265,8 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
                 "p99_session_speedup": speedup,
                 "n_retraces_steady": int(steady.n_compiles),
                 "compile_stall_ms_steady": round(steady.stall_ms, 3),
+                "admit_p99_ms": admit_p99,
+                "n_retraces_admit": n_retraces_admit,
                 "devices": devices,
             },
             "config": {
@@ -201,7 +277,13 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
                 "aot_buckets": aot_buckets,
                 "query_p50_ms_full": pct(lat_full, 50),
                 "query_p50_ms_session": pct(lat_sess, 50),
+                "storm_sessions": storm_sessions,
+                "storms": storms,
+                "storm_chunk": storm_chunk,
+                "admit_p50_ms": pct(admit_ms, 50),
+                "admit_scan_dispatches_max": int(max(dispatches)),
             },
+            "storm_telemetry_totals": storm_totals,
             "aot": aot_info,
             "timed_tuples": int(tuples_timed),
             "timed_seconds": round(seconds, 4),

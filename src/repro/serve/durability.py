@@ -11,7 +11,12 @@ module externalizes the SessionEngine in two complementary pieces:
   WAL         every ``open``/``append``/``close`` is logged -- per
               tenant, append-only, CRC-framed -- BEFORE it mutates the
               engine, so the logical input stream of every session is
-              reconstructible from disk at any instant.
+              reconstructible from disk at any instant.  An
+              ``open_batch`` storm logs as its constituent opens and
+              first-appends (the batched path dispatches differently
+              but accepts identically), so replay is admission-path
+              agnostic: a recovered engine re-warms its AOT table
+              first, and a replayed storm lands in the same buckets.
   checkpoint  periodically, the lanes-stacked ``ExecState`` is gathered
               (``executor.take_lanes`` over all lanes -- the same
               primitive the per-session flush tier resumes with) and
@@ -476,6 +481,11 @@ class DurableSessionEngine(SessionEngine):
         self._slot_reschedules = int(meta["slot_reschedules"])
         self._slot_sid = [None if x < 0 else int(x)
                           for x in meta["slot_sid"]]
+        # a sorted list IS a valid min-heap: the free-slot heap must
+        # mirror the restored slot map or post-recovery admission would
+        # double-book slots
+        self._free_slots = sorted(
+            i for i, x in enumerate(self._slot_sid) if x is None)
         self._sec_assign = np.asarray(meta["sec_assign"], np.int64)
         self._queue = deque(int(x) for x in meta["queue"])
         self._feat_shape = (tuple(meta["feat_shape"])

@@ -70,6 +70,24 @@ AOT shape buckets (compile-stall elimination)
   becomes known); ``recover`` lands a restored engine in the same
   buckets before replaying the WAL tail.
 
+Batched admission (session storms)
+  Admitting sessions one at a time re-opens the retrace/dispatch hole
+  the bucket table closed: a storm of N new tenants (the memcached
+  request-path scenario) would cost O(N) lane inits and O(N) scans.
+  ``open_batch(tenants, first=...)`` packs the whole storm -- every
+  open plus its first append -- into ONE batched lane-init (a single
+  gather-free ``x.at[idx].set`` over all admitted lanes) and one
+  pow2-bucketed scan over the admitted primary lanes, chopped into the
+  same AOT width segments as a flush: O(buckets) dispatches for a
+  thousand-session storm.  Admission lane-group shapes (the pow2
+  ceiling of the admitted count, capped at ``primary_slots``) are part
+  of the ``warmup()`` table, so the zero-steady-retrace invariant
+  holds THROUGH storms, local and mesh alike.  Ragged first-append
+  tails stay buffered (answers are chunking-invariant), keeping the
+  storm path bit-exact vs serial admission.  Overflow is strictly
+  FIFO: tenants past ``primary_slots`` queue in ``open_batch`` call
+  order and admit deterministically as slots free.
+
 Telemetry
   Per-flush counters (tuples, chunks, lane width, secondary grants,
   slot re-schedules, backlog, occupancy, modeled cycles -- plus
@@ -89,6 +107,7 @@ Durability (DESIGN.md §10, docs/durability.md)
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from collections import deque
 from typing import Any, Deque, Dict, Iterable, List, Optional, Tuple
@@ -156,6 +175,14 @@ class SessionEngine:
         tuned at its M, so overriding M would silently invalidate them.
       primary_slots: max concurrently admitted sessions; further ``open``
         calls queue and admit as slots free (continuous batching).
+        **Overflow contract**: the waitlist is strictly FIFO by
+        ``open``/``open_batch`` call order -- when slots free (a
+        ``close``), the longest-waiting sid admits first, into the
+        lowest-numbered free slot; admission order and slot placement
+        are deterministic, never a function of dict/set iteration.  A
+        queued session accepts ``append`` (host-buffered); ``query``
+        raises ``RuntimeError`` until it is admitted, and ``close``
+        raises while it holds buffered data (refusing to discard).
       secondary_slots: extra lanes the backlog scheduler grants to hot
         sessions (0 disables tenant-level skew scheduling).  Requires a
         decomposable spec (``spec.merge is None``): cross-lane merging is
@@ -252,6 +279,13 @@ class SessionEngine:
         self._run_group = jax.jit(self._res.scan_lanes)
         self._take_lanes = jax.jit(core_executor.take_lanes)
         self._put_lanes = jax.jit(core_executor.put_lanes)
+        # batched lane-init: reset a GROUP of lanes to fresh state in one
+        # dispatch (close's group reset, the storm-admission lane-init).
+        # Duplicate indices are legal -- the same fresh value lands twice
+        # -- so fixed-shape callers may pad idx by repeating a lane.
+        self._reset_lanes = jax.jit(
+            lambda states, idx: jax.tree.map(
+                lambda x, f: x.at[idx].set(f), states, self._fresh))
 
         # --- AOT shape buckets: widths 1,2,...,W plus the power-of-two
         # lane-group sizes a per-session flush can present (capped at
@@ -261,6 +295,7 @@ class SessionEngine:
         if aot_buckets is None:
             self._aot_widths = None
             self._group_buckets: Tuple[int, ...] = ()
+            self._admit_buckets: Tuple[int, ...] = ()
         else:
             if isinstance(aot_buckets, (int, np.integer)):
                 max_w = int(aot_buckets)
@@ -276,6 +311,9 @@ class SessionEngine:
             self._group_buckets = tuple(sorted(
                 {self._group_bucket(g)
                  for g in range(1, 2 + self.secondary_slots)}))
+            self._admit_buckets = tuple(sorted(
+                {self._admit_bucket(k)
+                 for k in range(1, 1 + self.primary_slots)}))
 
         # jit the slot scheduler ONCE: schedule_secpes builds its scan
         # eagerly, which re-traces (and re-compiles) on every call --
@@ -288,10 +326,15 @@ class SessionEngine:
         compilemon.install()
         self._n_retraces = 0
         self._compile_stall_ms = 0.0
+        self._storms = 0                   # open_batch calls
+        self._n_admitted_batch = 0         # sessions admitted via storms
+        self._admit_stall_ms = 0.0         # wall-clock inside open_batch
+        self._n_retraces_admit = 0         # compiles observed during storms
 
         self.sessions: Dict[int, _Session] = {}
         self._queue: Deque[int] = deque()                # sids awaiting a slot
         self._slot_sid: List[Optional[int]] = [None] * primary_slots
+        self._free_slots: List[int] = list(range(primary_slots))  # min-heap
         self._sec_assign = np.full(secondary_slots, -1, np.int64)
         self._next_sid = 0
         self._feat_shape: Optional[tuple] = None
@@ -313,6 +356,65 @@ class SessionEngine:
         self._queue.append(sid)
         self._admit()
         return sid
+
+    def open_batch(self, tenants: Iterable[str],
+                   first: Optional[Iterable[Optional[np.ndarray]]] = None
+                   ) -> List[int]:
+        """Admit a STORM of new sessions in one batched admission step.
+
+        Semantically identical to ``open(t)`` (+ ``append(sid, f)`` when
+        ``first`` is given) per tenant, in order -- same sids, same FIFO
+        queueing past ``primary_slots``, bit-exact answers -- but the
+        admitted sessions' first backlog chunks run NOW through one
+        batched lane-init plus one pow2-bucketed scan over the admitted
+        primary lanes (``_flush_admission``): O(width buckets) scan
+        dispatches for the whole storm instead of O(sessions).  With
+        ``aot_buckets=`` the admission shapes are part of the
+        ``warmup()`` table, so a warmed engine absorbs a storm with
+        ZERO retraces (the ``n_retraces_admit`` telemetry total).
+
+        Args:
+          tenants: tenant names, one new session each, opened in order.
+          first: optional per-tenant first append (same length; entries
+            may be ``None``).  Ragged sub-chunk tails stay host-buffered
+            exactly as a serial ``append`` would leave them.
+
+        Returns the new sids, aligned with ``tenants``.  Appends one
+        ``scope="admit"`` telemetry row carrying ``n_admitted``,
+        ``n_queued_batch``, ``n_scan_dispatches`` and ``admit_ms``."""
+        tenants = list(tenants)
+        if first is not None:
+            first = list(first)
+            if len(first) != len(tenants):
+                raise ValueError(
+                    f"open_batch: {len(tenants)} tenants but {len(first)} "
+                    "first-append entries (pass one per tenant, or None)")
+        snap = compilemon.snapshot()
+        t0 = time.perf_counter()
+        sids: List[int] = []
+        for i, tenant in enumerate(tenants):
+            sid = self.open(tenant)     # virtual dispatch: the durable
+            sids.append(sid)            # engine WAL-logs each open/append
+            if first is not None and first[i] is not None:
+                self.append(sid, first[i])
+        admitted = [sid for sid in sids
+                    if self.sessions[sid].slot is not None]
+        group_chunks, width, flushed, n_disp = \
+            self._flush_admission(admitted)
+        ms = (time.perf_counter() - t0) * 1e3
+        delta = compilemon.since(snap)
+        self._storms += 1
+        self._n_admitted_batch += len(admitted)
+        self._admit_stall_ms += ms
+        self._n_retraces_admit += delta.n_compiles
+        self._record_flush(flushed, group_chunks, width, scope="admit",
+                           snap=snap,
+                           extra={"n_admitted": len(admitted),
+                                  "n_queued_batch": len(sids) - len(admitted),
+                                  "n_scan_dispatches": int(n_disp),
+                                  "admit_ms": round(ms, 3)})
+        self._flush_no += 1
+        return sids
 
     def append(self, sid: int, data: np.ndarray) -> None:
         """Append a tuple batch of ANY length (ragged welcome) to an open
@@ -380,13 +482,18 @@ class SessionEngine:
             self.flush_session(sid)
         merged = self._snapshot(s)
         if s.slot is not None:
+            lanes = self._lane_group(s.slot)
             for j in range(self.secondary_slots):
                 if self._sec_assign[j] == s.slot:
-                    self._states = self._reset_lane(
-                        self._states, self.primary_slots + j)
                     self._sec_assign[j] = -1
-            self._states = self._reset_lane(self._states, s.slot)
+            # one batched reset of the whole lane group (primary +
+            # granted secondaries) instead of one dispatch per lane
+            states = self._reset_lanes(self._states,
+                                       np.asarray(lanes, np.int32))
+            self._states = (states if self._sharded is None
+                            else self._sharded.shard_states(states))
             self._slot_sid[s.slot] = None
+            heapq.heappush(self._free_slots, s.slot)
             s.slot = None
         else:
             self._queue.remove(sid)
@@ -514,7 +621,82 @@ class SessionEngine:
                            snap=snap)
         self._flush_no += 1
 
+    def _flush_admission(self, sids: List[int]):
+        """The storm flush behind ``open_batch``: run the newly admitted
+        sessions' first backlog chunks as one batched lane-init plus one
+        pow2-bucketed scan over their primary lanes.
+
+        Only FULL chunks run (``flush_tail=False``): answers are
+        chunking-invariant, so deferring ragged tails to the next
+        query/close keeps the path bit-exact vs serial admission, and a
+        session whose first append is sub-chunk costs zero dispatches.
+        A newly admitted session holds no secondary grants, so its lane
+        group is exactly its primary lane -- the storm group is the
+        admitted lanes, padded up to the admission bucket with OTHER
+        real lanes carrying all-masked chunks (written back
+        bit-identically, the ``flush_session`` pad rule).  The lane-init
+        idx pads with DUPLICATE admitted lanes instead: resetting a
+        fresh lane twice is a no-op, while resetting another session's
+        lane would destroy it.
+
+        Returns ``(group_chunks, width, flushed_tuples,
+        n_scan_dispatches)`` for the caller's telemetry row."""
+        live = [self.sessions[sid] for sid in sids
+                if self.sessions[sid].backlog_tuples >= self.chunk_size]
+        if not live:
+            return [], 0, 0, 0
+        lanes = [s.slot for s in live]
+        n_real_lanes = len(lanes)
+        bucket = (self._admit_bucket(n_real_lanes) if self._aot_widths
+                  else n_real_lanes)
+        init_idx = lanes + [lanes[0]] * (bucket - n_real_lanes)
+        states = self._reset_lanes(self._states,
+                                   np.asarray(init_idx, np.int32))
+        self._states = (states if self._sharded is None
+                        else self._sharded.shard_states(states))
+        group_chunks: List[List[np.ndarray]] = []
+        group_masks: List[List[np.ndarray]] = []
+        flushed = 0
+        for s in live:
+            gc, gm, n_real = self._take_striped(s, [s.slot],
+                                                flush_tail=False)
+            group_chunks.append(gc[0])
+            group_masks.append(gm[0])
+            flushed += n_real
+        if bucket > n_real_lanes:
+            in_group = set(lanes)
+            pads = [ln for ln in range(self.num_lanes)
+                    if ln not in in_group][:bucket - n_real_lanes]
+            lanes = lanes + pads
+            group_chunks += [[] for _ in pads]
+            group_masks += [[] for _ in pads]
+        row_sessions = live + [None] * (len(lanes) - n_real_lanes)
+        idx = np.asarray(lanes, np.int32)
+        sub = self._take_lanes(self._states, idx)
+        width = n_disp = 0
+        for off, w in self._segments(group_chunks):
+            arr, msk = self._pack_chunks(group_chunks, group_masks, w,
+                                         offset=off)
+            run = self._aot.get(("grp", len(lanes), w), self._run_group)
+            sub, stats = run(sub, arr, msk)
+            self._apply_exec_stats(
+                stats, row_sessions,
+                [min(max(len(c) - off, 0), w) for c in group_chunks])
+            width += w
+            n_disp += 1
+        states = self._put_lanes(self._states, idx, sub)
+        self._states = (states if self._sharded is None
+                        else self._sharded.shard_states(states))
+        return group_chunks, width, flushed, n_disp
+
     # ------------------------------------------------------- AOT bucket table
+
+    def _admit_bucket(self, k: int) -> int:
+        """Admission-storm lane bucket: the power-of-two ceiling of the
+        ``k`` admitted sessions, capped at ``primary_slots`` -- a storm
+        can never admit more than every primary lane, so the full-house
+        storm pays no padding and the pad lanes always exist."""
+        return min(1 << (k - 1).bit_length(), self.primary_slots)
 
     def _group_bucket(self, g: int) -> int:
         """Lane-group bucket: the power-of-two ceiling of ``g``, capped
@@ -602,7 +784,11 @@ class SessionEngine:
                 zm = jax.device_put(zm, self._sharded.lane_sharding)
             self._aot[("eng", w)] = \
                 self._run_lanes.lower(scratch, zc, zm).compile()
-        for b in self._group_buckets:
+        # one executable per (lane-group bucket, width) serves BOTH the
+        # per-session flush tier and the admission-storm path: compiled
+        # executables key on argument shapes alone, so the two bucket
+        # families share the ("grp", b, w) table
+        for b in sorted({*self._group_buckets, *self._admit_buckets}):
             idx = np.arange(b, dtype=np.int32)
             sub = self._take_lanes(scratch, idx)     # primes the gather
             for w in self._aot_widths:
@@ -612,6 +798,14 @@ class SessionEngine:
             put = self._put_lanes(scratch, idx, sub)  # primes the scatter
             if self._sharded is not None:
                 self._sharded.shard_states(put)
+        # batched lane-init shapes: close resets exact group sizes
+        # (1..1+secondary_slots); the storm lane-init pads its idx up to
+        # the admission bucket
+        for n in sorted({*range(1, 2 + self.secondary_slots),
+                         *self._admit_buckets}):
+            reset = self._reset_lanes(scratch, np.arange(n, dtype=np.int32))
+            if self._sharded is not None:
+                self._sharded.shard_states(reset)
         # remaining fixed-shape entry points (query/close/re-grant): a
         # plain execution populates their jit caches
         self._merge_lane(scratch, 0)
@@ -624,6 +818,7 @@ class SessionEngine:
         self._aot_info = {
             "widths": [int(w) for w in self._aot_widths],
             "group_buckets": [int(b) for b in self._group_buckets],
+            "admit_buckets": [int(b) for b in self._admit_buckets],
             "n_executables": len(self._aot),
             "warmup_ms": round((time.perf_counter() - t0) * 1e3, 3),
             "warmup_compiles": int(d.n_compiles),
@@ -749,12 +944,21 @@ class SessionEngine:
 
     # ------------------------------------------------------- slot scheduling
 
-    def _admit(self) -> None:
-        for slot in range(self.primary_slots):
-            if self._slot_sid[slot] is None and self._queue:
-                sid = self._queue.popleft()
-                self._slot_sid[slot] = sid
-                self.sessions[sid].slot = slot
+    def _admit(self) -> List[int]:
+        """Admit queued sids into free primary slots: strictly FIFO by
+        ``open`` order, each into the LOWEST-numbered free slot (the
+        documented overflow contract -- deterministic admission order
+        AND slot placement).  The free-slot min-heap makes this O(log
+        slots) per admission, so a thousand-session ``open_batch`` does
+        not pay an O(slots) scan per open.  Returns the admitted sids."""
+        admitted: List[int] = []
+        while self._queue and self._free_slots:
+            sid = self._queue.popleft()
+            slot = heapq.heappop(self._free_slots)
+            self._slot_sid[slot] = sid
+            self.sessions[sid].slot = slot
+            admitted.append(sid)
+        return admitted
 
     def _backlog_chunks(self) -> np.ndarray:
         """Per-primary-slot pending chunk counts -- the workload histogram
@@ -823,7 +1027,8 @@ class SessionEngine:
     # ------------------------------------------------------------- telemetry
 
     def _record_flush(self, tuples: int, lane_chunks, width: int,
-                      scope: str = "engine", snap=None) -> None:
+                      scope: str = "engine", snap=None,
+                      extra: Optional[Dict[str, Any]] = None) -> None:
         delta = compilemon.since(snap) if snap is not None else None
         if delta is not None:
             self._n_retraces += delta.n_compiles
@@ -831,7 +1036,7 @@ class SessionEngine:
         active = sum(sid is not None for sid in self._slot_sid)
         backlog = sum(s.backlog_tuples for s in self.sessions.values()
                       if not s.closed)
-        self._telemetry.append({
+        row = {
             "flush": self._flush_no,
             "scope": scope,
             "active_sessions": active,
@@ -846,7 +1051,10 @@ class SessionEngine:
             "n_retraces": 0 if delta is None else int(delta.n_compiles),
             "compile_stall_ms": (0.0 if delta is None
                                  else float(delta.stall_ms)),
-        })
+        }
+        if extra:
+            row.update(extra)
+        self._telemetry.append(row)
 
     def telemetry_record(self, validate: bool = True) -> Dict[str, Any]:
         """Per-flush telemetry as a schema-v1 benchmark record (the shape
@@ -860,6 +1068,12 @@ class SessionEngine:
                                       for s in self.sessions.values())),
             "n_retraces": int(self._n_retraces),
             "compile_stall_ms": round(self._compile_stall_ms, 3),
+            # storm admission: n_retraces_admit is a SUBSET of n_retraces
+            # (compiles observed inside open_batch count in both)
+            "storms": int(self._storms),
+            "batch_admitted": int(self._n_admitted_batch),
+            "n_retraces_admit": int(self._n_retraces_admit),
+            "admit_stall_ms": round(self._admit_stall_ms, 3),
         }
         rec = {
             "schema_version": TELEMETRY_SCHEMA_VERSION,
@@ -915,9 +1129,16 @@ class SessionEngine:
         return self._session(sid, allow_closed=True).stats.as_dict()
 
     def _session(self, sid: int, allow_closed: bool = False) -> _Session:
-        if sid not in self.sessions:
-            raise KeyError(f"unknown session {sid}")
-        s = self.sessions[sid]
+        s = self.sessions.get(sid)
+        if s is None:
+            n_open = sum(not x.closed for x in self.sessions.values())
+            raise ValueError(
+                f"unknown session id {sid}: this engine has issued "
+                f"{self._next_sid} sid(s), {n_open} open "
+                f"({len(self._queue)} of them queued) -- append/query/"
+                "close need a sid returned by open()/open_batch()")
         if s.closed and not allow_closed:
-            raise ValueError(f"session {sid} is closed")
+            raise ValueError(
+                f"session {sid} (tenant {s.tenant!r}) is closed; a "
+                "closed sid cannot be reused -- open() a new session")
         return s

@@ -495,3 +495,67 @@ class TestRecoverAOTBuckets:
         assert rec["extra"]["config"]["aot_buckets"] is None
         assert rec["extra"]["aot"] is None
         eng2.shutdown()
+
+
+# ------------------------------------------------------ storms x recovery
+class TestStormRecovery:
+    def test_sigkill_mid_storm_wal_tail_replays_rest(
+            self, small_spec, zipf_dataset, tmp_path):
+        """ISSUE 7 satellite: crash with a storm half-admitted -- the
+        checkpoint covers the pre-storm state, the WAL tail holds the
+        whole ``open_batch`` (logged as its constituent opens/appends),
+        and recovery replays it into the SAME admission buckets: queue
+        order FIFO-preserved, answers oracle-exact, zero retraces on the
+        re-warmed engine."""
+        eng = _engine(small_spec, tmp_path, primary_slots=3,
+                      secondary_slots=1, aot_buckets=2, checkpoint_every=0)
+        warm_data = zipf_dataset(2 * SMALL_CHUNK + 31, DOMAIN, 1.5, seed=1)
+        warm = eng.open("warm")
+        eng.append(warm, warm_data)
+        eng.flush()
+        eng.checkpoint(block=True)          # storm below is NOT covered
+
+        # over-capacity storm: 2 admit (slots 1,2), 3 queue behind them
+        tenants = [f"s{i}" for i in range(5)]
+        firsts = [zipf_dataset(SMALL_CHUNK * (1 + i % 3) + 17 * i, DOMAIN,
+                               (0.0, 1.5)[i % 2], seed=10 + i)
+                  for i in range(4)] + [None]
+        sids = eng.open_batch(tenants, first=firsts)
+        assert [eng.sessions[s].slot is not None for s in sids] == \
+            [True, True, False, False, False]
+        crashed_queue = list(eng._queue)
+        assert eng.telemetry_record(validate=False)["extra"]["totals"][
+            "n_retraces_admit"] == 0
+        # abandon WITHOUT shutdown/checkpoint == SIGKILL here (see module
+        # docstring); the WAL has the storm, no checkpoint does
+
+        eng2 = SessionEngine.recover(small_spec, tmp_path)
+        info = eng2.recovery_info
+        assert info["checkpoint_step"] is not None
+        assert info["replay_anomalies"] == 0
+        assert info["replayed_tuples"] == sum(
+            len(f) for f in firsts if f is not None)
+        by_tenant = _tenant_sids(eng2)
+        assert list(eng2._queue) == \
+            [by_tenant[t] for t in tenants[2:]] == crashed_queue
+        n0 = len(eng2.telemetry_record(validate=False)["rows"])
+        for i in (0, 1):                    # the half that was admitted
+            np.testing.assert_array_equal(
+                np.asarray(eng2.query(by_tenant[tenants[i]])),
+                _oracle(firsts[i][:, 0]))
+        np.testing.assert_array_equal(
+            np.asarray(eng2.query(by_tenant["warm"])),
+            _oracle(warm_data[:, 0]))
+        # drain FIFO: closing admitted sessions admits the queued rest
+        for t in ("warm", *tenants[:2]):
+            eng2.close(by_tenant[t])
+        for i in (2, 3):
+            assert eng2.sessions[by_tenant[tenants[i]]].slot is not None
+            np.testing.assert_array_equal(
+                np.asarray(eng2.query(by_tenant[tenants[i]])),
+                _oracle(firsts[i][:, 0]))
+        # the replayed storm landed in the pre-warmed buckets: every
+        # post-recover flush row is compile-free
+        steady = eng2.telemetry_record(validate=False)["rows"][n0:]
+        assert steady and all(r["n_retraces"] == 0 for r in steady), steady
+        eng2.shutdown()

@@ -240,10 +240,17 @@ class TestSessionEngine:
         sid = eng.open()
         eng.append(sid, zipf_dataset(64, DOMAIN, 0.0))
         eng.close(sid)
-        with pytest.raises(ValueError):
+        # closed and never-opened sids both get a descriptive ValueError
+        # (naming the sid and the engine state), not a bare KeyError
+        with pytest.raises(ValueError, match=f"session {sid}.*closed"):
             eng.append(sid, zipf_dataset(64, DOMAIN, 0.0))
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError,
+                           match=f"unknown session id {sid + 999}"):
             eng.query(sid + 999)
+        with pytest.raises(ValueError, match="unknown session id"):
+            eng.close(sid + 999)
+        with pytest.raises(ValueError, match="open\\(\\)/open_batch\\(\\)"):
+            eng.append(sid + 999, zipf_dataset(4, DOMAIN, 0.0))
 
     def test_tuned_plan_config(self, small_spec, zipf_dataset):
         """tuned=TunedPlan resolves the engine shape through the core's
@@ -652,3 +659,213 @@ class TestAOTBuckets:
         assert len(pend) == 1 and len(pend[0]) == 100
         np.testing.assert_array_equal(
             np.asarray(eng.query(sid)), _oracle(keys))
+
+
+# ------------------------------------------------------- batched admission
+class TestBatchedAdmission:
+    """ISSUE 7 tentpole: ``open_batch`` packs a session storm into ONE
+    batched lane-init + one pow2-bucketed scan segment -- it must be
+    bit-exact vs serial ``open``+``append`` admission (local and mesh),
+    keep the FIFO overflow contract, and absorb a storm on a warmed
+    engine with ZERO retraces."""
+
+    def _storm_data(self, zipf_dataset, n):
+        # first appends straddle the chunk boundary: some admit-flushable
+        # (>= 1 chunk), some sub-chunk (stay host-buffered), one None
+        sizes = [2 * SMALL_CHUNK + 17, SMALL_CHUNK, 73,
+                 3 * SMALL_CHUNK, SMALL_CHUNK + 1]
+        out = []
+        for i in range(n):
+            if i == n - 1:
+                out.append(None)
+            else:
+                out.append(zipf_dataset(sizes[i % len(sizes)], DOMAIN,
+                                        (0.0, 1.5)[i % 2], seed=50 + i))
+        return out
+
+    def _finish(self, eng, sids, firsts, tails):
+        """Drain the storm: late appends + close everything (queued
+        sessions admit FIFO as slots free), returning answers by sid."""
+        for sid, tail in zip(sids, tails):
+            eng.append(sid, tail)
+        answers = {}
+        for sid, first in zip(sids, firsts):
+            merged, _ = eng.close(sid)
+            answers[sid] = np.asarray(merged)
+        return answers
+
+    @pytest.mark.parametrize("mode", ["local", "mesh1"])
+    def test_bit_exact_vs_serial_admission(self, small_spec, zipf_dataset,
+                                           mode):
+        """Acceptance: the SAME over-capacity storm (7 sessions, 3
+        primary slots) through open_batch and through serial
+        open+append gives identical sids, identical slot/queue state,
+        and bit-exact answers -- locally and on a mesh of 1."""
+        kw = dict(primary_slots=3, secondary_slots=1, aot_buckets=2)
+        if mode == "mesh1":
+            kw["mesh"] = jax.make_mesh((1,), ("lanes",))
+        firsts = self._storm_data(zipf_dataset, 7)
+        tenants = [f"t{i}" for i in range(7)]
+        tails = [zipf_dataset(SMALL_CHUNK + 31 * i, DOMAIN, 1.0,
+                              seed=100 + i) for i in range(7)]
+
+        batch = _session_engine(small_spec, **kw)
+        sids_b = batch.open_batch(tenants, first=firsts)
+        serial = _session_engine(small_spec, **kw)
+        sids_s = []
+        for t, f in zip(tenants, firsts):
+            sid = serial.open(t)
+            sids_s.append(sid)
+            if f is not None:
+                serial.append(sid, f)
+        assert sids_b == sids_s
+        assert batch._slot_sid == serial._slot_sid
+        assert list(batch._queue) == list(serial._queue)
+        assert sorted(batch._free_slots) == sorted(serial._free_slots)
+        got = self._finish(batch, sids_b, firsts, tails)
+        want = self._finish(serial, sids_s, firsts, tails)
+        for sid in want:
+            np.testing.assert_array_equal(got[sid], want[sid])
+        # ... and both equal the oracle on the full per-session stream
+        for sid, first, tail in zip(sids_b, firsts, tails):
+            keys = (tail[:, 0] if first is None
+                    else np.concatenate([first[:, 0], tail[:, 0]]))
+            np.testing.assert_array_equal(got[sid], _oracle(keys))
+
+    def test_fifo_overflow_and_drain_deterministic(self, small_spec):
+        """Satellite: the waitlist is STRICTLY FIFO by open/open_batch
+        call order, and a freed slot always goes to the queue front --
+        admitted into the lowest-numbered free slot (never dict/set
+        iteration order)."""
+        eng = _session_engine(small_spec, primary_slots=2,
+                              secondary_slots=0)
+        sids = eng.open_batch([f"t{i}" for i in range(5)])
+        assert sids == [0, 1, 2, 3, 4]
+        assert eng._slot_sid == [0, 1]
+        assert list(eng._queue) == [2, 3, 4]
+        eng.close(sids[1])                 # frees slot 1 -> sid 2 admits
+        assert eng._slot_sid == [0, 2]
+        assert list(eng._queue) == [3, 4]
+        eng.close(sids[0])                 # frees slot 0 -> sid 3 admits
+        assert eng._slot_sid == [3, 2]
+        assert list(eng._queue) == [4]
+        eng.close(sids[2])                 # frees slot 1 -> sid 4 admits
+        assert eng._slot_sid == [3, 4]
+        eng.close(sids[3])                 # queue empty: slot 0 stays free
+        late = eng.open("late")            # ... and the next open takes it
+        assert eng._slot_sid == [late, 4]
+        assert not eng._queue
+        # interleaved single opens keep global FIFO order with the batch
+        eng2 = _session_engine(small_spec, primary_slots=1,
+                               secondary_slots=0)
+        a = eng2.open("a")
+        mid = eng2.open_batch(["b", "c"])
+        d = eng2.open("d")
+        order = []
+        for sid in [a, *mid, d]:
+            assert eng2.sessions[sid].slot == (0 if sid == a else None)
+        for _ in range(4):
+            front = eng2._slot_sid[0]
+            order.append(front)
+            eng2.close(front)
+        assert order == [a, *mid, d]
+
+    def test_open_batch_validation(self, small_spec, zipf_dataset):
+        eng = _session_engine(small_spec)
+        with pytest.raises(ValueError, match="first-append"):
+            eng.open_batch(["a", "b"], first=[None])
+        # empty storm is a no-op that still records an admit row
+        assert eng.open_batch([]) == []
+        row = eng.telemetry_record()["rows"][-1]
+        assert row["scope"] == "admit" and row["n_admitted"] == 0
+
+    def test_zero_retrace_storm_and_telemetry(self, small_spec,
+                                              zipf_dataset):
+        """Acceptance: a warmed engine absorbs an over-capacity storm
+        with zero retraces, one admit scan dispatch per width bucket,
+        and the storm totals/row columns land in the schema-v1 record."""
+        eng = _session_engine(small_spec, primary_slots=4,
+                              secondary_slots=1, aot_buckets=2)
+        eng.warmup(dtype=np.int64, feat_shape=(2,))
+        firsts = self._storm_data(zipf_dataset, 6)
+        sids = eng.open_batch([f"t{i}" for i in range(6)], first=firsts)
+        rec = eng.telemetry_record()
+        row = rec["rows"][-1]
+        assert row["scope"] == "admit"
+        assert row["n_admitted"] == 4 and row["n_queued_batch"] == 2
+        assert row["n_retraces"] == 0
+        # O(buckets): the widest admitted backlog is 3 chunks -> at most
+        # ceil(3 / W=2) = 2 pow2 segments, NOT one dispatch per session
+        assert 1 <= row["n_scan_dispatches"] <= 2
+        assert row["admit_ms"] > 0
+        totals = rec["extra"]["totals"]
+        assert totals["storms"] == 1
+        assert totals["batch_admitted"] == 4
+        assert totals["n_retraces_admit"] == 0
+        assert totals["n_retraces"] == 0
+        assert totals["admit_stall_ms"] >= row["admit_ms"]
+        # a second storm after a drain is also compile-free
+        for sid in sids:
+            eng.close(sid)
+        eng.open_batch(["x", "y", "z"],
+                       first=self._storm_data(zipf_dataset, 3))
+        totals = eng.telemetry_record()["extra"]["totals"]
+        assert totals["storms"] == 2 and totals["n_retraces_admit"] == 0
+
+    def test_unknown_and_closed_sid_messages(self, small_spec,
+                                             zipf_dataset):
+        """Satellite: bad sids raise ValueError naming the sid and the
+        engine state (issued/open/queued counts), not a bare KeyError."""
+        eng = _session_engine(small_spec)
+        sid = eng.open()
+        with pytest.raises(ValueError, match=r"issued 1 sid\(s\), 1 open"):
+            eng.query(sid + 7)
+        eng.close(sid)
+        with pytest.raises(ValueError, match="closed sid cannot be reused"):
+            eng.append(sid, zipf_dataset(4, DOMAIN, 0.0))
+
+
+class TestWarmupTableCompleteness:
+    """Satellite: every width/group shape the engine can LEGALLY produce
+    -- pow2 scan segments, capped lane-group buckets, admission buckets
+    -- is in the compiled table, and nothing else is; the zero-retrace
+    asserts above cannot pass vacuously against an empty table."""
+
+    @pytest.mark.parametrize("primary_slots,secondary_slots,aot_buckets",
+                             [(2, 2, 2), (3, 1, 4), (5, 0, 1), (1, 3, 8)])
+    def test_table_covers_exactly_the_legal_shapes(
+            self, small_spec, primary_slots, secondary_slots, aot_buckets):
+        eng = _session_engine(small_spec, primary_slots=primary_slots,
+                              secondary_slots=secondary_slots,
+                              aot_buckets=aot_buckets)
+        eng.warmup(dtype=np.int64, feat_shape=(2,))
+        widths = eng._aot_widths
+        # legal widths: _segments only ever yields pow2 widths <= cap
+        assert widths == tuple(sorted(widths))
+        assert all(w & (w - 1) == 0 for w in widths)
+        # enumerate every shape the runtime paths can present
+        legal = {("eng", w) for w in widths}
+        for g in range(1, 2 + secondary_slots):        # flush_session groups
+            legal |= {("grp", eng._group_bucket(g), w) for w in widths}
+        for k in range(1, 1 + primary_slots):          # admission storms
+            legal |= {("grp", eng._admit_bucket(k), w) for w in widths}
+        assert set(eng._aot) == legal
+        assert eng._aot_info["n_executables"] == len(legal)
+        # the info dict advertises the same bucket families
+        assert set(eng._aot_info["group_buckets"]) == \
+            {eng._group_bucket(g) for g in range(1, 2 + secondary_slots)}
+        assert set(eng._aot_info["admit_buckets"]) == \
+            {eng._admit_bucket(k) for k in range(1, 1 + primary_slots)}
+
+    def test_every_segment_width_hits_the_table(self, small_spec):
+        """Property: for ANY backlog width 1..6*W the pow2 segments
+        ``_segments`` yields are all present as ("eng", w) keys -- no
+        legal flush can fall through to a fresh trace."""
+        eng = _session_engine(small_spec, aot_buckets=2)
+        eng.warmup(dtype=np.int64, feat_shape=(2,))
+        cap = eng._aot_widths[-1]
+        for wmax in range(1, 6 * cap + 1):
+            segs = list(eng._segments([list(range(wmax))]))
+            assert sum(w for _, w in segs) >= wmax
+            for _, w in segs:
+                assert ("eng", w) in eng._aot, (wmax, w)
