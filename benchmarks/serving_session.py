@@ -41,19 +41,43 @@ dispatches (not one per session) and -- on the warmed table -- that
 ``n_retraces_admit``, and a sample of each burst is verified
 bit-exact against the oracle.
 
+Both phases run fully instrumented through one shared ``repro.obs``
+bundle (DESIGN.md §11, docs/observability.md): the storm engine is a
+``DurableSessionEngine`` over a throwaway WAL directory so the trace
+carries ``wal.append`` and ``ckpt.save`` spans next to the flush and
+admission spans.  The bench ASSERTS in-bench that (a) the measured
+observability overhead -- interleaved obs-on/obs-off round pairs over
+identical load, best-round estimator, one retry for CI-runner stalls
+-- stays under ``obs_overhead_bound`` percent, (b) the Prometheus
+exposition round-trips through ``obs.parse_prometheus``, and (c) the
+exported Perfetto trace is non-empty and contains the
+flush/admission/WAL span families.  It exports
+``serving_session.prom`` (Prometheus text), ``serving_session_trace.json``
+(Chrome/Perfetto ``trace_event`` JSON) and ``serving_session_obs.json``
+(the snapshot ``python -m repro.obs.report`` renders) next to the
+bench record, and the headline carries ``obs_overhead_pct``.
+
     PYTHONPATH=src python -m benchmarks.serving_session
 """
 from __future__ import annotations
 
+import json
+import shutil
+import tempfile
 import time
+from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import bench_record, print_table, save_record
+from benchmarks.common import (RESULTS_DIR, bench_record, print_table,
+                               save_record)
+from repro import obs as obs_lib
 from repro.apps import histo
 from repro.core import compilemon
 from repro.data.zipf import zipf_tuples
-from repro.serve import SessionEngine
+from repro.obs import parse_prometheus, report as obs_report
+from repro.serve import DurableSessionEngine, SessionEngine
 
 ALPHAS = (0.0, 0.8, 1.5, 2.0)
 HOT_TENANT = 3            # the alpha=2.0 tenant appends hot_factor x data
@@ -63,7 +87,9 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
         num_pri: int = 16, num_sec: int = 8, primary_slots: int = 4,
         secondary_slots: int = 2, hot_factor: int = 4, mesh="auto",
         aot_buckets: int = 8, storm_sessions: int = 1024,
-        storms: int = 3, storm_chunk: int = 256):
+        storms: int = 3, storm_chunk: int = 256,
+        obs_overhead_bound: float = 5.0,
+        export_dir: Optional[str] = None):
     import jax
     if rounds < 3:
         raise ValueError("rounds must be >= 3: one warm-up pass plus at "
@@ -76,10 +102,14 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
         num_dev = dict(mesh.shape)["lanes"]
         primary_slots += -(primary_slots + secondary_slots) % num_dev
     spec = histo.make_spec(512, 1 << 20, num_pri)
+    # one shared bundle across both phases: the serving engine and the
+    # storm engine emit into the same registry/trace, so the exports
+    # show the whole run on one timeline
+    obs = obs_lib.Observability()
     eng = SessionEngine(spec, num_pri=num_pri, num_sec=num_sec,
                         chunk_size=chunk, primary_slots=primary_slots,
                         secondary_slots=secondary_slots, mesh=mesh,
-                        aot_buckets=aot_buckets)
+                        aot_buckets=aot_buckets, obs=obs)
     aot_info = (eng.warmup(dtype=np.int32, feat_shape=(2,))
                 if aot_buckets is not None else None)
     devices = eng.num_lanes // eng.lanes_per_device
@@ -130,6 +160,41 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
     snap_full = eng.query(sids[HOT_TENANT], scope="engine")
     np.testing.assert_array_equal(np.asarray(snap_sess),
                                   np.asarray(snap_full))
+
+    # ------------------------------------------- observability overhead
+    # The <obs_overhead_bound>% acceptance claim, measured in-bench:
+    # identical-shape rounds run with the shared bundle toggled on/off,
+    # interleaved in pairs whose order alternates so clock drift
+    # cancels.  Each state is summarized by its BEST round (max
+    # tuples/sec), which is robust to a one-off CI-runner stall landing
+    # in a single round; a measurement over the bound gets one full
+    # retry (taking the min of the two estimates) before it fails the
+    # bench.  Rounds still append real data (recorded in ``appended``),
+    # so the bit-exact oracle check below covers them too.
+    def obs_round(r):
+        t0 = time.perf_counter()
+        n = one_round(r, "engine", timed=False)
+        return n / (time.perf_counter() - t0)
+
+    def measure_overhead(base):
+        tput_by_state = {True: [], False: []}
+        for k in range(3):
+            for j, state in enumerate((bool(k % 2), not k % 2)):
+                obs.enabled = state
+                tput_by_state[state].append(obs_round(base + 2 * k + j))
+        obs.enabled = True
+        on, off = max(tput_by_state[True]), max(tput_by_state[False])
+        return round((off - on) / off * 100.0, 2)
+
+    obs_overhead_pct = measure_overhead(1000)
+    if obs_overhead_pct >= obs_overhead_bound:
+        obs_overhead_pct = min(obs_overhead_pct, measure_overhead(2000))
+    print(f"observability overhead: {obs_overhead_pct:+.2f}% "
+          f"(bound {obs_overhead_bound:.1f}%)")
+    assert obs_overhead_pct < obs_overhead_bound, (
+        f"obs-on throughput trails obs-off by {obs_overhead_pct:.2f}% "
+        f">= {obs_overhead_bound:.1f}% even after a retry; the "
+        "instrumentation hot path regressed")
 
     def pct(v, q):
         return round(float(np.percentile(v, q)), 2) if len(v) else None
@@ -205,11 +270,18 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
         storm_sessions += -storm_sessions % num_dev
     storm_spec = histo.make_spec(512, 1 << 20, storm_num_pri)
     storm_aot = 2 if aot_buckets is not None else None
-    storm_eng = SessionEngine(storm_spec, num_pri=storm_num_pri, num_sec=2,
-                              chunk_size=storm_chunk,
-                              primary_slots=storm_sessions,
-                              secondary_slots=0, mesh=mesh,
-                              aot_buckets=storm_aot)
+    # durable on purpose: open_batch dispatches through the virtual
+    # open/append, so every admitted session WAL-logs -- the shared
+    # trace gets ``wal.append`` (and, after the storms, ``ckpt.save``)
+    # spans on the same timeline as the admission spans.  The WAL
+    # directory is throwaway; checkpoint_every=0 keeps the admission
+    # timing free of background checkpoints.
+    storm_dir = tempfile.mkdtemp(prefix="serving_session_storm_")
+    storm_eng = DurableSessionEngine(
+        storm_spec, directory=storm_dir, checkpoint_every=0,
+        num_pri=storm_num_pri, num_sec=2, chunk_size=storm_chunk,
+        primary_slots=storm_sessions, secondary_slots=0, mesh=mesh,
+        aot_buckets=storm_aot, obs=obs)
     if storm_aot is not None:
         storm_eng.warmup(dtype=np.int64, feat_shape=(2,))
     srng = np.random.default_rng(7)
@@ -255,6 +327,45 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
             f"{storm_delta.n_compiles} retrace(s) "
             f"({storm_delta.stall_ms:.1f} ms) inside the storm phase "
             f"despite aot_buckets={storm_aot}")
+
+    # --------------------------------------------- observability exports
+    # checkpoint AFTER the zero-retrace window closes: the lane gather
+    # may legitimately compile a fresh shape
+    storm_eng.checkpoint(block=True)
+    storm_eng.shutdown()
+    shutil.rmtree(storm_dir, ignore_errors=True)
+    out_dir = Path(export_dir) if export_dir is not None else RESULTS_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    prom_text = obs.registry.prometheus_text()
+    (out_dir / "serving_session.prom").write_text(prom_text)
+    obs.tracer.write(out_dir / "serving_session_trace.json",
+                     process_name="benchmarks.serving_session")
+    obs_snapshot = {"metrics": obs.registry.snapshot(),
+                    "telemetry": telemetry}
+    (out_dir / "serving_session_obs.json").write_text(
+        json.dumps(obs_snapshot, indent=2, default=float))
+    # acceptance, in-bench: the exposition round-trips through the
+    # strict parser, the trace is non-empty and carries the flush /
+    # admission / WAL / checkpoint span families, and the operator
+    # report renders from the exported snapshot
+    prom_samples = parse_prometheus(prom_text)
+    assert prom_samples, "empty Prometheus exposition"
+    sample_names = {name for name, _, _ in prom_samples}
+    for required in ("flush_latency_ms_count", "admit_latency_ms_count",
+                     "wal_records_total", "checkpoints_total"):
+        assert required in sample_names, (required, sorted(sample_names))
+    span_names = obs.tracer.span_names()
+    missing = {"engine.flush", "engine.admit_storm", "wal.append",
+               "ckpt.save"} - span_names
+    assert not missing, f"trace is missing span families: {missing}"
+    n_trace_events = len(obs.tracer.events())
+    assert n_trace_events > 0, "empty trace export"
+    health = obs_report.render(obs_snapshot)
+    assert "engine health report" in health, health[:200]
+    print(f"observability: {len(prom_samples)} Prometheus samples, "
+          f"{n_trace_events} trace events "
+          f"({len(span_names)} span names) -> {out_dir}/"
+          "serving_session{.prom,_trace.json,_obs.json}")
     return bench_record(
         "serving_session", title, rows,
         extra={
@@ -267,6 +378,7 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
                 "compile_stall_ms_steady": round(steady.stall_ms, 3),
                 "admit_p99_ms": admit_p99,
                 "n_retraces_admit": n_retraces_admit,
+                "obs_overhead_pct": obs_overhead_pct,
                 "devices": devices,
             },
             "config": {
@@ -284,6 +396,15 @@ def run(n_tuples: int = 1 << 15, rounds: int = 5, chunk: int = 2048,
                 "admit_scan_dispatches_max": int(max(dispatches)),
             },
             "storm_telemetry_totals": storm_totals,
+            "obs": {
+                "overhead_pct": obs_overhead_pct,
+                "overhead_bound_pct": obs_overhead_bound,
+                "prom_samples": len(prom_samples),
+                "trace_events": n_trace_events,
+                "trace_dropped": int(obs.tracer.dropped),
+                "span_names": sorted(span_names),
+                "export_dir": str(out_dir),
+            },
             "aot": aot_info,
             "timed_tuples": int(tuples_timed),
             "timed_seconds": round(seconds, 4),

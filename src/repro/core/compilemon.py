@@ -31,10 +31,29 @@ compile stalls::
 deltas in its schema-v1 telemetry (``n_retraces`` /
 ``compile_stall_ms`` per flush row and lifetime totals);
 ``benchmarks/serving_session.py`` asserts the steady-state count is 0
-after the AOT bucket warmup.  Attribution is per-region, not per-cause:
-a concurrent thread compiling inside the region would be counted too
-(the engine is single-threaded on the flush path, so in practice the
-deltas are its own).
+after the AOT bucket warmup.
+
+Interleaving contract (pinned by ``tests/test_obs.py``)
+  The counters are PROCESS-GLOBAL and MONOTONE; a snapshot/since pair
+  carries no identity, only two readings.  Three consequences callers
+  must design around:
+
+  * **Overlap double-counts.**  Two regions whose snapshot/since
+    windows overlap in time BOTH count any compile landing in the
+    overlap -- region deltas are not a partition of the total, and
+    summing them over overlapping regions over-reports.  Nested
+    regions are the common case: the outer delta always INCLUDES the
+    inner's.  Use ``repro.obs.region()`` when composition matters: it
+    keeps a thread-local region stack and reports an ``exclusive``
+    delta per region (children subtracted) alongside the raw
+    ``inclusive`` one.
+  * **Attribution is per-window, not per-cause.**  A concurrent thread
+    compiling inside the window is counted too (the serving engine is
+    single-threaded on the flush path, so in practice its deltas are
+    its own).
+  * **Reads are atomic, windows are not.**  ``snapshot()`` itself is
+    lock-consistent (n_compiles and stall_secs from the same instant),
+    but nothing orders it against compiles in flight on other threads.
 """
 from __future__ import annotations
 

@@ -385,13 +385,25 @@ def make_resumable_executor(
         raise ValueError(
             f"{spec.name}: non-decomposable applications keep per-PE output "
             "regions and cannot re-merge mid-stream; use threshold=0.0")
-    pe_update = spec.pe_update or partial(default_pe_update,
-                                          combine=spec.combine,
-                                          backend=kernel_backend)
-    step = _build_chunk_step(
-        spec, num_pri, num_sec, chunk_size, profile_chunks=profile_chunks,
-        threshold=threshold, mem_width_tuples=mem_width_tuples,
-        static_plan=static_plan, pe_update=pe_update)
+    # observability hook on the one factory funnel every executor build
+    # goes through (make_executor / multistream / the serving engines all
+    # land here).  Lazy import: repro.obs imports repro.core at module
+    # scope, so the reverse edge must stay inside the function.
+    from repro import obs as obs_lib
+    obs = obs_lib.get_default()
+    obs.registry.counter(
+        "executor_builds_total",
+        "executor factory calls, by entry point",
+        labels=("kind",)).inc(kind=_who)
+    with obs.span("executor.build", cat="build", kind=_who, app=spec.name,
+                  num_pri=num_pri, num_sec=num_sec, chunk_size=chunk_size):
+        pe_update = spec.pe_update or partial(default_pe_update,
+                                              combine=spec.combine,
+                                              backend=kernel_backend)
+        step = _build_chunk_step(
+            spec, num_pri, num_sec, chunk_size, profile_chunks=profile_chunks,
+            threshold=threshold, mem_width_tuples=mem_width_tuples,
+            static_plan=static_plan, pe_update=pe_update)
 
     @jax.jit
     def run_chunks(state, chunks, mask=None):

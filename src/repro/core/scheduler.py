@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def schedule_secpes(workload: jax.Array, num_sec: int, *,
@@ -66,3 +67,29 @@ def post_plan_max_load(workload: jax.Array, assignment: jax.Array) -> jax.Array:
     onehot = (assignment[:, None] == jnp.arange(m)[None, :]).astype(jnp.float32)
     shares = 1.0 + onehot.sum(axis=0)
     return jnp.max(workload.astype(jnp.float32) / shares)
+
+
+def plan_summary(workload, assignment) -> dict:
+    """Host-side observability summary of one scheduling plan.
+
+    Pure numpy (no trace, no device sync beyond reading the inputs) --
+    the serving engine calls this per flush to feed its metrics
+    registry (``sched_n_granted`` / ``sched_post_plan_max_load``
+    gauges, docs/observability.md), so it must never jit or allocate on
+    device.
+
+    Returns ``n_granted`` (assignments != -1), ``max_load_before`` (the
+    hottest PriPE's raw workload) and ``max_load_after`` (the paper's
+    post-plan balance metric: hottest workload / (1 + attached SecPEs),
+    matching ``post_plan_max_load``).
+    """
+    w = np.asarray(workload, np.float32)
+    a = np.asarray(assignment, np.int64)
+    granted = a[a >= 0]
+    shares = np.ones(len(w), np.float32)
+    np.add.at(shares, granted, 1.0)
+    return {
+        "n_granted": int(len(granted)),
+        "max_load_before": float(w.max()) if len(w) else 0.0,
+        "max_load_after": float((w / shares).max()) if len(w) else 0.0,
+    }

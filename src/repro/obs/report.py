@@ -1,0 +1,174 @@
+"""Engine health report: render metrics + telemetry as an operator-
+facing text dashboard (DESIGN.md §11, docs/observability.md).
+
+Works from a LIVE engine or from an exported snapshot file::
+
+    # live (in-process)
+    from repro.obs import report
+    print(report.render_engine(engine))
+
+    # exported (what benchmarks/serving_session.py writes)
+    python -m repro.obs.report experiments/bench/serving_session_obs.json
+
+The snapshot file is either a bare ``MetricsRegistry.snapshot()`` record
+or the combined ``{"metrics": <snapshot>, "telemetry":
+<telemetry_record>}`` object ``export_engine`` produces.  Sections:
+
+  * engine totals  -- flushes, retraces + compile stall, storms, drops;
+  * latency        -- one ASCII histogram per latency family
+    (``flush_latency_ms`` per scope, ``admit_latency_ms``,
+    ``wal_fsync_ms``, ...);
+  * lanes          -- the lane-occupancy / tenant-backlog skew heatmap
+    (the serving layer's workload histogram: sessions are the tuples,
+    slots the PEs);
+  * grant history  -- per-flush secondary grants / re-schedules /
+    retraces from the telemetry tail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+_BLOCKS = " ▁▂▃▄▅▆▇█"
+_BAR_W = 30
+
+
+def _bar(frac: float, width: int = _BAR_W) -> str:
+    n = int(round(max(0.0, min(1.0, frac)) * width))
+    return "█" * n + "·" * (width - n)
+
+
+def _heat(v: float, vmax: float) -> str:
+    if vmax <= 0:
+        return _BLOCKS[0]
+    return _BLOCKS[min(int(v / vmax * (len(_BLOCKS) - 1)), len(_BLOCKS) - 1)]
+
+
+def _labels_dict(lbl: str) -> Dict[str, str]:
+    return dict(p.split("=", 1) for p in lbl.split(",") if "=" in p)
+
+
+def export_engine(engine) -> Dict[str, Any]:
+    """The combined snapshot object for an engine wired with ``obs=``:
+    metrics registry snapshot + the engine's own telemetry record."""
+    return {
+        "metrics": engine.obs.registry.snapshot(),
+        "telemetry": engine.telemetry_record(validate=False),
+    }
+
+
+def render_engine(engine) -> str:
+    """Render the health report straight from a live engine."""
+    return render(export_engine(engine))
+
+
+def render(snapshot: Dict[str, Any]) -> str:
+    """Render a report from an exported snapshot (combined object or a
+    bare metrics record)."""
+    if "metrics" in snapshot and "rows" not in snapshot:
+        metrics = snapshot["metrics"]
+        telemetry = snapshot.get("telemetry")
+    else:
+        metrics, telemetry = snapshot, None
+    rows = metrics.get("rows", [])
+    hists = metrics.get("extra", {}).get("histograms", {})
+    out: List[str] = ["== engine health report =="]
+
+    # ------------------------------------------------------------- totals
+    totals: Dict[str, Any] = {}
+    if telemetry:
+        totals = telemetry.get("extra", {}).get("totals", {})
+        cfg = telemetry.get("extra", {}).get("config", {})
+        if cfg:
+            out.append("engine: " + ", ".join(
+                f"{k}={v}" for k, v in cfg.items() if v is not None))
+    counters = {(r["metric"], r["labels"]): r["value"] for r in rows
+                if r.get("type") == "counter"}
+    if totals or counters:
+        out.append("-- totals --")
+        for k in ("flushes", "tuples_flushed", "slot_reschedules",
+                  "n_retraces", "compile_stall_ms", "storms",
+                  "batch_admitted", "n_retraces_admit"):
+            if k in totals:
+                out.append(f"  {k:<24} {totals[k]}")
+        tele = (telemetry or {}).get("extra", {}).get("telemetry", {})
+        if tele:
+            out.append(f"  {'telemetry_dropped_rows':<24} "
+                       f"{tele.get('dropped_rows', 0)} "
+                       f"(cap {tele.get('cap')})")
+        for (name, lbl), v in sorted(counters.items()):
+            if name.endswith("_total"):
+                tag = f"{name}{{{lbl}}}" if lbl else name
+                out.append(f"  {tag:<44} {v:g}")
+
+    # ------------------------------------------------------------ latency
+    if hists:
+        out.append("-- latency histograms --")
+        for name in sorted(hists):
+            spec = hists[name]
+            buckets = spec["buckets"]
+            for lbl, counts in sorted(spec["series"].items()):
+                total = sum(counts)
+                if not total:
+                    continue
+                tag = f"{name}{{{lbl}}}" if lbl else name
+                out.append(f"  {tag}  (n={total})")
+                edges = [f"<={b:g}ms" for b in buckets] + ["+Inf"]
+                for edge, c in zip(edges, counts):
+                    if c:
+                        out.append(f"    {edge:>10} {_bar(c / total)} {c}")
+
+    # -------------------------------------------------------------- lanes
+    occ = {int(_labels_dict(r["labels"]).get("lane", -1)): r["value"]
+           for r in rows if r["metric"] == "lane_occupancy"}
+    if occ:
+        lanes = sorted(occ)
+        vmax = max(occ.values()) or 1.0
+        strip = "".join(_heat(occ[ln], vmax) for ln in lanes)
+        out.append("-- lane occupancy --")
+        out.append(f"  lanes {lanes[0]}..{lanes[-1]}: [{strip}]  "
+                   f"({sum(1 for v in occ.values() if v > 0)} busy)")
+    depth = {_labels_dict(r["labels"]).get("tenant", "?"): r["value"]
+             for r in rows if r["metric"] == "backlog_depth"}
+    if depth:
+        vmax = max(depth.values()) or 1.0
+        out.append("-- tenant backlog skew --")
+        for tenant in sorted(depth, key=lambda t: -depth[t])[:16]:
+            out.append(f"  {tenant:<24} {_bar(depth[tenant] / vmax, 20)} "
+                       f"{depth[tenant]:g}")
+
+    # ------------------------------------------------------ grant history
+    if telemetry and telemetry.get("rows"):
+        tail = telemetry["rows"][-12:]
+        out.append("-- flush tail (grant history) --")
+        out.append(f"  {'flush':>5} {'scope':<8} {'tuples':>8} "
+                   f"{'sec':>4} {'resched':>7} {'retrace':>7} "
+                   f"{'backlog':>8}")
+        for r in tail:
+            out.append(
+                f"  {r.get('flush', '?'):>5} {r.get('scope', '?'):<8} "
+                f"{r.get('tuples', 0):>8} {r.get('sec_granted', 0):>4} "
+                f"{r.get('slot_reschedules', 0):>7} "
+                f"{r.get('n_retraces', 0):>7} "
+                f"{r.get('backlog_tuples', 0):>8}")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Render an engine health report from an exported "
+                    "observability snapshot (see docs/observability.md).")
+    ap.add_argument("snapshot", help="path to the snapshot JSON "
+                    "(combined {metrics, telemetry} or a bare metrics "
+                    "record)")
+    args = ap.parse_args(argv)
+    with open(args.snapshot) as f:
+        print(render(json.load(f)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,167 @@
+"""Span tracer: nested timing spans exported as Chrome/Perfetto
+``trace_event`` JSON (DESIGN.md §11, docs/observability.md).
+
+A flush is a small pipeline -- admit, re-grant, pack, N scan segments,
+merge -- and a slow query is almost always one stage of it (a WAL
+fsync, a compile stall, one wide segment).  Counters say *that* it was
+slow; spans say *where*.  ``SpanTracer`` records complete ("ph": "X")
+events with microsecond timestamps; nesting falls out of time
+containment on one thread track, which is exactly how the Perfetto /
+``chrome://tracing`` UI renders call stacks::
+
+    tracer = SpanTracer()
+    with tracer.span("engine.flush", scope="engine"):
+        with tracer.span("scan.segment", width=4):
+            ...
+    tracer.write("flush_timeline.json")     # load in ui.perfetto.dev
+
+Every span carries its attributes in ``args`` (visible in the viewer's
+detail pane).  The event buffer is a ring (``cap`` events, oldest
+dropped first, ``dropped`` counted) so a long-running engine holds a
+bounded trace tail; ``enabled=False`` makes ``span()`` return a shared
+no-op context (one attribute check per call on the disabled path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+
+class _NullSpan:
+    """Reusable no-op context for the disabled fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One live span; records a complete ("X") event on exit."""
+
+    __slots__ = ("_tracer", "name", "cat", "args", "_t0")
+
+    def __init__(self, tracer: "SpanTracer", name: str, cat: str,
+                 args: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+
+    def set(self, **attrs) -> None:
+        """Attach attributes discovered mid-span (e.g. tuple counts only
+        known after the work ran)."""
+        self.args.update(attrs)
+
+    def __enter__(self):
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc):
+        now = time.perf_counter_ns()
+        self._tracer._emit({
+            "name": self.name, "ph": "X", "cat": self.cat,
+            "ts": self._t0 // 1000 - self._tracer._epoch_us,
+            "dur": max((now - self._t0) // 1000, 1),
+            "pid": self._tracer.pid, "tid": threading.get_ident(),
+            "args": self.args,
+        })
+        return False
+
+
+class SpanTracer:
+    """Bounded in-memory trace_event recorder.
+
+    Args:
+      cap: max events retained (ring; oldest dropped, ``dropped``
+        counts the loss so a truncated export is never silent).
+      enabled: the global on/off switch -- when off, ``span()`` returns
+        a shared no-op context.
+    """
+
+    def __init__(self, cap: int = 65536, enabled: bool = True):
+        self.enabled = enabled
+        self.cap = int(cap)
+        self.dropped = 0
+        self.pid = os.getpid()
+        self._events: Deque[Dict[str, Any]] = deque()
+        self._lock = threading.Lock()
+        # a stable epoch keeps ts small + monotone across the process
+        self._epoch_us = time.perf_counter_ns() // 1000
+
+    def span(self, name: str, cat: str = "engine", **attrs):
+        """Context manager timing one span; ``attrs`` become the event's
+        ``args``.  Nest freely -- containment on the thread track is the
+        nesting the trace viewer renders."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, attrs)
+
+    def instant(self, name: str, cat: str = "engine", **attrs) -> None:
+        """A zero-duration marker (rendered as an arrow/tick)."""
+        if not self.enabled:
+            return
+        self._emit({"name": name, "ph": "i", "cat": cat,
+                    "ts": time.perf_counter_ns() // 1000 - self._epoch_us,
+                    "pid": self.pid, "tid": threading.get_ident(),
+                    "s": "t", "args": attrs})
+
+    def _emit(self, ev: Dict[str, Any]) -> None:
+        with self._lock:
+            if len(self._events) >= self.cap:
+                self._events.popleft()
+                self.dropped += 1
+            self._events.append(ev)
+
+    # ------------------------------------------------------------- exports
+
+    def events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._events)
+
+    def span_names(self) -> set:
+        return {e["name"] for e in self.events()}
+
+    def to_trace_events(self, process_name: str = "repro-engine"
+                        ) -> Dict[str, Any]:
+        """The Chrome/Perfetto ``trace_event`` JSON object format:
+        ``{"traceEvents": [...], "displayTimeUnit": "ms"}`` -- loadable
+        as-is in ui.perfetto.dev or chrome://tracing."""
+        meta = [{"name": "process_name", "ph": "M", "pid": self.pid,
+                 "tid": 0, "args": {"name": process_name}}]
+        return {"traceEvents": meta + self.events(),
+                "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def write(self, path: os.PathLike,
+              process_name: str = "repro-engine") -> None:
+        """Serialize the trace to ``path`` (JSON object format)."""
+        with open(path, "w") as f:
+            json.dump(self.to_trace_events(process_name), f,
+                      default=_scrub)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self.dropped = 0
+
+
+def _scrub(v):
+    """JSON fallback for numpy scalars riding in span args."""
+    try:
+        return v.item()
+    except AttributeError:
+        return str(v)

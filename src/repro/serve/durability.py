@@ -66,6 +66,7 @@ import os
 import re
 import shutil
 import struct
+import time
 import zlib
 from collections import deque
 from pathlib import Path
@@ -147,12 +148,32 @@ class WriteAheadLog:
     are always readable.  ``sync=True`` fsyncs every record (machine-
     crash durability); the default flushes to the OS (process-crash
     durability) and keeps append cost to one buffered write.
+
+    ``obs=`` (an ``repro.obs.Observability``) instruments the log:
+    ``wal.append`` spans, ``wal_records_total{type}`` /
+    ``wal_bytes_total`` counters and the ``wal_append_ms`` /
+    ``wal_fsync_ms`` histograms (fsync timing only with ``sync=True``,
+    where fsync IS the append cost).  ``obs=None`` keeps the log
+    entirely uninstrumented (the standalone/replay uses).
     """
 
-    def __init__(self, directory: os.PathLike, *, sync: bool = False):
+    def __init__(self, directory: os.PathLike, *, sync: bool = False,
+                 obs=None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.sync = sync
+        self.obs = obs
+        if obs is not None:
+            reg = obs.registry
+            self._m_records = reg.counter(
+                "wal_records_total", "WAL records appended, by record type",
+                labels=("type",))
+            self._m_bytes = reg.counter(
+                "wal_bytes_total", "framed bytes appended to the WAL")
+            self._m_append = reg.histogram(
+                "wal_append_ms", "wall-clock per WAL record append")
+            self._m_fsync = reg.histogram(
+                "wal_fsync_ms", "wall-clock per WAL fsync (sync=True)")
         self._files: Dict[Path, Any] = {}     # path -> open append handle
         self.seq = 1
         for p in sorted(self.dir.glob("*.wal")):
@@ -187,15 +208,31 @@ class WriteAheadLog:
         f.write(frame)
         f.flush()
         if self.sync:
-            os.fsync(f.fileno())
+            if self.obs is not None and self.obs.enabled:
+                t0 = time.perf_counter()
+                os.fsync(f.fileno())
+                self._m_fsync.observe((time.perf_counter() - t0) * 1e3)
+            else:
+                os.fsync(f.fileno())
 
     def log(self, tenant: str, meta: Dict[str, Any],
             payload: bytes = b"") -> int:
         """Append one record to ``tenant``'s log; returns its seq."""
         meta = dict(meta, seq=self.seq)
         self.seq += 1
-        self._write(self._handle(self._tenant_path(tenant)),
-                    _encode_record(meta, payload))
+        frame = _encode_record(meta, payload)
+        f = self._handle(self._tenant_path(tenant))
+        if self.obs is not None and self.obs.enabled:
+            t0 = time.perf_counter()
+            with self.obs.span("wal.append", cat="wal",
+                               type=str(meta.get("t")),
+                               n_bytes=len(frame)):
+                self._write(f, frame)
+            self._m_append.observe((time.perf_counter() - t0) * 1e3)
+            self._m_records.inc(type=str(meta.get("t")))
+            self._m_bytes.inc(len(frame))
+        else:
+            self._write(f, frame)
         return meta["seq"]
 
     def watermark(self, step: int, upto: int) -> None:
@@ -268,7 +305,7 @@ _TELEMETRY_KEEP = 256    # per-flush telemetry rows carried per checkpoint
 # only; spec and mesh are live objects the recover() caller supplies).
 _CFG_ENGINE_KW = ("kernel_backend", "lanes_axis", "profile_chunks",
                   "threshold", "mem_width_tuples", "static_plan",
-                  "aot_buckets")
+                  "aot_buckets", "telemetry_cap")
 
 
 class DurableSessionEngine(SessionEngine):
@@ -322,8 +359,22 @@ class DurableSessionEngine(SessionEngine):
             if stale:
                 shutil.rmtree(wal_dir, ignore_errors=True)
                 shutil.rmtree(ckpt_dir, ignore_errors=True)
-        self._wal = WriteAheadLog(wal_dir, sync=wal_sync)
+        self._wal = WriteAheadLog(wal_dir, sync=wal_sync, obs=self.obs)
         self._mgr = CheckpointManager(ckpt_dir, keep=keep)
+        reg = self.obs.registry
+        self._dx_ckpts = reg.counter("checkpoints_total",
+                                     "checkpoints taken")
+        self._dx_ckpt_ms = reg.histogram(
+            "checkpoint_save_ms", "host-side checkpoint capture + "
+            "enqueue wall-clock (async write excluded unless block=True)")
+        self._dx_step = reg.gauge("checkpoint_step",
+                                  "latest checkpoint step taken")
+        self._dx_replayed = reg.counter(
+            "recovery_replay_records_total",
+            "WAL tail records replayed during recovery")
+        self._dx_replayed_tuples = reg.counter(
+            "recovery_replay_tuples_total",
+            "tuples re-appended from the WAL tail during recovery")
         self.checkpoint_every = max(0, int(checkpoint_every))
         self._guard = guard
         self.drained = False
@@ -412,19 +463,27 @@ class DurableSessionEngine(SessionEngine):
         side before this returns; serialization runs async unless
         ``block``.  A blocking checkpoint also GCs WAL records every
         kept checkpoint already covers."""
-        upto = self._wal.seq - 1        # every record logged so far
-        idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
-        lanes = jax.tree.map(np.asarray,
-                             self._take_lanes(self._states, idx))
-        step = self._ckpt_step
-        self._ckpt_step += 1
-        meta = self._capture_meta(upto, step)
-        blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
-        self._mgr.save(step, {"lanes": lanes, "meta": blob}, block=block)
-        self._wal.watermark(step, upto)
+        t0 = time.perf_counter()
+        with self.obs.span("ckpt.save", cat="ckpt",
+                           block=bool(block)) as sp:
+            upto = self._wal.seq - 1    # every record logged so far
+            idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
+            lanes = jax.tree.map(np.asarray,
+                                 self._take_lanes(self._states, idx))
+            step = self._ckpt_step
+            self._ckpt_step += 1
+            meta = self._capture_meta(upto, step)
+            blob = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+            self._mgr.save(step, {"lanes": lanes, "meta": blob},
+                           block=block)
+            self._wal.watermark(step, upto)
+            sp.set(step=step, wal_upto=upto)
         self._wm_seq_by_step[step] = upto
         self._flushes_since_ckpt = 0
         self._gc_wal()
+        self._dx_ckpts.inc()
+        self._dx_step.set(step)
+        self._dx_ckpt_ms.observe((time.perf_counter() - t0) * 1e3)
         return step
 
     def _gc_wal(self) -> None:
@@ -470,8 +529,9 @@ class DurableSessionEngine(SessionEngine):
                       if self._dtype is not None else None),
             # telemetry is observability, not recovery state: persist a
             # bounded tail so checkpoint size tracks the engine shape,
-            # not its uptime (one row accrues per flush, forever)
-            "telemetry": self._telemetry[-_TELEMETRY_KEEP:],
+            # not its uptime (the in-memory store is a ring deque --
+            # listify before slicing)
+            "telemetry": list(self._telemetry)[-_TELEMETRY_KEEP:],
             "sessions": sessions,
         }
 
@@ -491,7 +551,15 @@ class DurableSessionEngine(SessionEngine):
         self._feat_shape = (tuple(meta["feat_shape"])
                             if meta["feat_shape"] is not None else None)
         self._dtype = np.dtype(meta["dtype"]) if meta["dtype"] else None
-        self._telemetry = list(meta["telemetry"])
+        # rebuild the telemetry ring with THIS engine's cap (the
+        # checkpointed tail is at most _TELEMETRY_KEEP rows; a smaller
+        # cap keeps the newest).  Ring accounting restarts: rows_total /
+        # dropped_rows describe the live process, not its ancestors.
+        self._telemetry = deque(meta["telemetry"],
+                                maxlen=self.telemetry_cap)
+        self._telemetry_total = len(self._telemetry)
+        self._telemetry_dropped = 0
+        self._rows_validated = 0
         self.sessions = {}
         for sid_s, ent in meta["sessions"].items():
             backlog, n = deque(), 0
@@ -508,63 +576,81 @@ class DurableSessionEngine(SessionEngine):
 
     # -------------------------------------------------------------- recovery
     def _recover(self) -> None:
-        template = {"lanes": core_executor.stack_states(
-            self._res.init_state(), self.num_lanes),
-            "meta": np.zeros(0, np.uint8)}
-        try:
-            ck = self._mgr.restore(template)
-        except RuntimeError as e:
-            # checkpoints exist but none restored cleanly (all corrupt,
-            # or the caller's overrides changed the engine shape so the
-            # template no longer matches).  A silent WAL-only recovery
-            # here would be WRONG whenever GC dropped records those
-            # checkpoints cover -- refuse instead of answering short.
-            raise RuntimeError(
-                f"{self.dir}: no checkpoint restored cleanly; refusing "
-                "WAL-only recovery (the WAL may have been GC'd past "
-                "their watermarks).  Repair or remove ckpt/, or recover "
-                "with the original engine shape.") from e
-        wal_seq, ck_step = 0, None
-        if ck is not None:
-            meta = json.loads(bytes(np.asarray(ck["meta"])).decode())
-            self._restore_meta(meta)
-            wal_seq, ck_step = int(meta["wal_seq"]), int(meta["step"])
-            idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
-            lanes = jax.tree.map(jnp.asarray, ck["lanes"])
-            states = self._put_lanes(self._states, idx, lanes)
-            self._states = (states if self._sharded is None
-                            else self._sharded.shard_states(states))
-        if self._aot_widths and self._dtype is not None:
-            # land the restored engine in the same buckets BEFORE the WAL
-            # tail replays: replayed appends/flushes must not retrace
-            self.warmup()
-        recs = self._wal.replay(after_seq=wal_seq)
-        replayed_tuples, anomalies = 0, 0
-        self._replaying = True
-        try:
-            for meta_r, payload in recs:
-                t = meta_r["t"]
+        with self.obs.span("recover", cat="recover") as rsp:
+            with self.obs.span("ckpt.restore", cat="recover"):
+                template = {"lanes": core_executor.stack_states(
+                    self._res.init_state(), self.num_lanes),
+                    "meta": np.zeros(0, np.uint8)}
                 try:
-                    if t == "open":
-                        got = self.open(meta_r["tenant"])
-                        if got != meta_r["sid"]:
-                            raise RuntimeError(
-                                f"replayed open produced sid {got}, WAL "
-                                f"says {meta_r['sid']}: the WAL and "
-                                "checkpoint disagree")
-                    elif t == "app":
-                        arr = np.frombuffer(
-                            payload, dtype=np.dtype(meta_r["dtype"]))
-                        arr = arr.reshape(meta_r["shape"])
-                        self.append(meta_r["sid"], arr)
-                        shp = meta_r["shape"]
-                        replayed_tuples += int(shp[0]) if shp else 0
-                    elif t == "close":
-                        self.close(meta_r["sid"])
-                except (ValueError, KeyError):
-                    anomalies += 1   # the original call failed identically
-        finally:
-            self._replaying = False
+                    ck = self._mgr.restore(template)
+                except RuntimeError as e:
+                    # checkpoints exist but none restored cleanly (all
+                    # corrupt, or the caller's overrides changed the
+                    # engine shape so the template no longer matches).
+                    # A silent WAL-only recovery here would be WRONG
+                    # whenever GC dropped records those checkpoints
+                    # cover -- refuse instead of answering short.
+                    raise RuntimeError(
+                        f"{self.dir}: no checkpoint restored cleanly; "
+                        "refusing WAL-only recovery (the WAL may have "
+                        "been GC'd past their watermarks).  Repair or "
+                        "remove ckpt/, or recover with the original "
+                        "engine shape.") from e
+                wal_seq, ck_step = 0, None
+                if ck is not None:
+                    meta = json.loads(
+                        bytes(np.asarray(ck["meta"])).decode())
+                    self._restore_meta(meta)
+                    wal_seq = int(meta["wal_seq"])
+                    ck_step = int(meta["step"])
+                    idx = jnp.arange(self.num_lanes, dtype=jnp.int32)
+                    lanes = jax.tree.map(jnp.asarray, ck["lanes"])
+                    states = self._put_lanes(self._states, idx, lanes)
+                    self._states = (states if self._sharded is None
+                                    else self._sharded.shard_states(states))
+            if self._aot_widths and self._dtype is not None:
+                # land the restored engine in the same buckets BEFORE the
+                # WAL tail replays: replayed appends/flushes must not
+                # retrace
+                with self.obs.span("recover.warmup", cat="recover"):
+                    self.warmup()
+            recs = self._wal.replay(after_seq=wal_seq)
+            replayed_tuples, anomalies = 0, 0
+            self._replaying = True
+            try:
+                with self.obs.span("recover.replay", cat="recover",
+                                   records=len(recs)):
+                    for meta_r, payload in recs:
+                        t = meta_r["t"]
+                        try:
+                            if t == "open":
+                                got = self.open(meta_r["tenant"])
+                                if got != meta_r["sid"]:
+                                    raise RuntimeError(
+                                        f"replayed open produced sid "
+                                        f"{got}, WAL says "
+                                        f"{meta_r['sid']}: the WAL and "
+                                        "checkpoint disagree")
+                            elif t == "app":
+                                arr = np.frombuffer(
+                                    payload,
+                                    dtype=np.dtype(meta_r["dtype"]))
+                                arr = arr.reshape(meta_r["shape"])
+                                self.append(meta_r["sid"], arr)
+                                shp = meta_r["shape"]
+                                replayed_tuples += (int(shp[0]) if shp
+                                                    else 0)
+                            elif t == "close":
+                                self.close(meta_r["sid"])
+                        except (ValueError, KeyError):
+                            anomalies += 1   # the original call failed
+                            #                  identically
+            finally:
+                self._replaying = False
+            rsp.set(checkpoint_step=ck_step, wal_watermark=wal_seq,
+                    replayed_records=len(recs))
+        self._dx_replayed.inc(len(recs))
+        self._dx_replayed_tuples.inc(replayed_tuples)
         self.recovery_info = {
             "checkpoint_step": ck_step,
             "wal_watermark": wal_seq,
@@ -595,12 +681,13 @@ class DurableSessionEngine(SessionEngine):
         work raises ``EnginePreempted`` while ``query()`` still answers."""
         if self.drained:
             return
-        SessionEngine.flush(self)       # bypass the checkpoint-every hook
-        self.checkpoint(block=True)
-        self._wal.close()
-        if self._guard is not None:
-            self._guard.uninstall()
-        self.drained = True
+        with self.obs.span("engine.drain", cat="ckpt"):
+            SessionEngine.flush(self)   # bypass the checkpoint-every hook
+            self.checkpoint(block=True)
+            self._wal.close()
+            if self._guard is not None:
+                self._guard.uninstall()
+            self.drained = True
 
     def shutdown(self) -> None:
         """Release background resources (checkpoint thread, WAL handles)

@@ -200,8 +200,18 @@ class StreamEngine:
                  num_sec: Optional[int] = None,
                  chunk_size: Optional[int] = None, tuned=None,
                  max_streams: int = 8, kernel_backend: Optional[str] = None,
-                 **executor_kw):
+                 obs=None, **executor_kw):
         from repro.core import executor as core_executor
+        from repro import obs as obs_lib
+        self.obs = obs_lib.resolve(obs)
+        reg = self.obs.registry
+        self._m_submits = reg.counter("stream_requests_total",
+                                      "streams submitted")
+        self._m_batches = reg.counter("stream_batches_total",
+                                      "compatible batches run per flush")
+        self._m_flush_ms = reg.histogram(
+            "flush_latency_ms", "wall-clock per flush, by flush tier",
+            labels=("scope",))
         if tuned is not None:
             kw = tuned.executor_kwargs()
             num_pri = kw["num_pri"] if num_pri is None else num_pri
@@ -247,6 +257,7 @@ class StreamEngine:
         self._next_rid += 1
         self.pending.append(StreamRequest(
             rid, ts.body, plan, mask=ts.mask if ragged else None))
+        self._m_submits.inc()
         return rid
 
     def _next_batch(self) -> List[StreamRequest]:
@@ -268,34 +279,52 @@ class StreamEngine:
 
     def flush(self) -> Dict[int, tuple]:
         """Run every pending request; returns {rid: (merged, stats)}."""
+        import time
         from repro.core.executor import stack_plans
         out: Dict[int, tuple] = {}
-        while self.pending:
-            batch = self._next_batch()
-            planned = batch[0].plan is not None
-            stack = np.stack([r.chunks for r in batch])
-            pad = self.max_streams - len(batch)
-            masked = pad > 0 or any(r.mask is not None for r in batch)
-            if pad > 0:
-                # pad lanes: all-masked zero chunks, never tenant data
-                stack = np.concatenate(
-                    [stack, np.zeros((pad, *stack.shape[1:]), stack.dtype)])
-            args = [jnp.asarray(stack)]
-            plans = None
-            if planned:
-                plans = stack_plans([r.plan for r in batch]
-                                    + [batch[0].plan] * pad)
-            if masked:
-                mask = np.stack(
-                    [r.mask if r.mask is not None
-                     else np.ones(r.chunks.shape[:2], bool) for r in batch]
-                    + [np.zeros(batch[0].chunks.shape[:2], bool)] * pad)
-                merged, stats = self._run_streams(
-                    jnp.asarray(stack), plans, mask=jnp.asarray(mask))
-            else:
-                merged, stats = self._run_streams(jnp.asarray(stack), plans)
-            for i, req in enumerate(batch):
-                out[req.rid] = (
-                    jax.tree.map(lambda a, i=i: np.asarray(a[i]), merged),
-                    jax.tree.map(lambda a, i=i: np.asarray(a[i]), stats))
+        t0 = time.perf_counter()
+        with self.obs.span("stream.flush", cat="stream",
+                           pending=len(self.pending)):
+            while self.pending:
+                batch = self._next_batch()
+                with self.obs.span("stream.batch", cat="stream",
+                                   size=len(batch),
+                                   chunks=int(batch[0].chunks.shape[0])):
+                    planned = batch[0].plan is not None
+                    stack = np.stack([r.chunks for r in batch])
+                    pad = self.max_streams - len(batch)
+                    masked = pad > 0 or any(r.mask is not None
+                                            for r in batch)
+                    if pad > 0:
+                        # pad lanes: all-masked zero chunks, never tenant
+                        # data
+                        stack = np.concatenate(
+                            [stack, np.zeros((pad, *stack.shape[1:]),
+                                             stack.dtype)])
+                    plans = None
+                    if planned:
+                        plans = stack_plans([r.plan for r in batch]
+                                            + [batch[0].plan] * pad)
+                    if masked:
+                        mask = np.stack(
+                            [r.mask if r.mask is not None
+                             else np.ones(r.chunks.shape[:2], bool)
+                             for r in batch]
+                            + [np.zeros(batch[0].chunks.shape[:2],
+                                        bool)] * pad)
+                        merged, stats = self._run_streams(
+                            jnp.asarray(stack), plans,
+                            mask=jnp.asarray(mask))
+                    else:
+                        merged, stats = self._run_streams(
+                            jnp.asarray(stack), plans)
+                    for i, req in enumerate(batch):
+                        out[req.rid] = (
+                            jax.tree.map(lambda a, i=i: np.asarray(a[i]),
+                                         merged),
+                            jax.tree.map(lambda a, i=i: np.asarray(a[i]),
+                                         stats))
+                self._m_batches.inc()
+        self._m_flush_ms.observe((time.perf_counter() - t0) * 1e3,
+                                 scope="stream")
         return out

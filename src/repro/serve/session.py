@@ -88,13 +88,28 @@ Batched admission (session storms)
   FIFO: tenants past ``primary_slots`` queue in ``open_batch`` call
   order and admit deterministically as slots free.
 
-Telemetry
+Telemetry + observability (DESIGN.md §11, docs/observability.md)
   Per-flush counters (tuples, chunks, lane width, secondary grants,
   slot re-schedules, backlog, occupancy, modeled cycles -- plus
   ``n_retraces`` / ``compile_stall_ms`` observed during the flush, via
   ``core.compilemon``'s jax.monitoring listener) accumulate into a
   schema-v1 benchmark record (``telemetry_record``), the same shape
-  ``benchmarks.common`` validates and ``benchmarks.run`` reports.
+  ``benchmarks.common`` validates and ``benchmarks.run`` reports.  The
+  row store is a RING (``telemetry_cap=`` rows, oldest dropped first,
+  drops counted under ``extra['telemetry']``), so a long-running engine
+  holds a bounded tail instead of leaking memory, and
+  ``telemetry_record(validate=True)`` validates only the rows appended
+  since the previous call (O(new), not O(history)).
+
+  The same rows feed the engine's ``obs=`` bundle (``repro.obs``): a
+  metrics registry (``flush_latency_ms{scope}``, ``lane_occupancy
+  {lane}``, ``secondary_grants_total{tenant}``, ``backlog_depth
+  {tenant}``, retrace counters -- Prometheus-exportable) and a span
+  tracer (``engine.flush`` / ``scan.segment`` / ``engine.admit_storm``
+  / ``merge.snapshot`` ... as Perfetto ``trace_event`` JSON).  Pass one
+  ``Observability`` to share a registry across engines, ``obs=False``
+  to disable (every op an early return -- the serving bench asserts
+  the enabled overhead stays under its bound).
 
 Durability (DESIGN.md §10, docs/durability.md)
   ``serve.durability`` wraps this engine in a per-tenant write-ahead
@@ -120,6 +135,7 @@ from repro.core import compilemon
 from repro.core import executor as core_executor
 from repro.core import scheduler
 from repro.data.pipeline import pad_tail_chunk
+from repro import obs as obs_lib
 
 TELEMETRY_SCHEMA_VERSION = 1   # mirrors benchmarks.common.SCHEMA_VERSION
 
@@ -162,6 +178,75 @@ class _Session:
         return [head, *list(self.backlog)[1:]]
 
 
+class _EngineMetrics:
+    """The engine's metric family handles, resolved once against one
+    ``obs.MetricsRegistry`` (re-requesting a family is idempotent, so
+    engines sharing a registry share series).  The full catalog with
+    semantics lives in docs/observability.md."""
+
+    # bounded label cardinality: past these, per-lane / per-tenant gauge
+    # series collapse to the aggregate (a 1024-slot storm engine should
+    # not mint 1024 Prometheus series per flush)
+    MAX_LANE_SERIES = 128
+    MAX_TENANT_SERIES = 32
+
+    def __init__(self, reg):
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        self.flush_ms = h("flush_latency_ms",
+                          "wall-clock per flush, by flush tier",
+                          labels=("scope",))
+        self.admit_ms = h("admit_latency_ms",
+                          "wall-clock per open_batch admission storm")
+        self.flushes = c("flushes_total", "flushes run, by tier",
+                         labels=("scope",))
+        self.tuples = c("tuples_flushed_total",
+                        "real tuples through the lanes")
+        self.chunks = c("chunks_flushed_total",
+                        "chunks through the lanes (padding excluded)")
+        self.retraces = c("retraces_total",
+                          "jit compiles observed on the flush path "
+                          "(compilemon delta per flush)")
+        self.stall = c("compile_stall_ms_total",
+                       "compile stall milliseconds on the flush path")
+        self.opened = c("sessions_opened_total", "sessions opened")
+        self.closed = c("sessions_closed_total", "sessions closed")
+        self.appends = c("appends_total", "append() calls accepted")
+        self.app_tuples = c("appended_tuples_total",
+                            "tuples accepted by append()")
+        self.queries = c("queries_total", "query() calls, by flush tier",
+                         labels=("scope",))
+        self.storms = c("storms_total", "open_batch admission storms")
+        self.admitted = c("storm_admitted_total",
+                          "sessions admitted via open_batch")
+        self.grants = c("secondary_grants_total",
+                        "secondary-lane grants, by receiving tenant",
+                        labels=("tenant",))
+        self.active = g("active_sessions", "sessions holding a slot")
+        self.queued = g("queued_sessions", "sessions waiting for a slot")
+        self.slot_occ = g("slot_occupancy",
+                          "active / primary_slots fraction")
+        self.lanes_busy = g("lanes_busy", "lanes owned by some session")
+        self.occupancy = g("lane_occupancy",
+                           "1 when the lane is owned by a session "
+                           "(omitted past MAX_LANE_SERIES lanes)",
+                           labels=("lane",))
+        self.backlog_tot = g("backlog_tuples",
+                             "host-buffered tuples across open sessions")
+        self.backlog = g("backlog_depth",
+                         "host-buffered tuples by tenant (top "
+                         "MAX_TENANT_SERIES by depth)",
+                         labels=("tenant",))
+        self.sec_granted = g("secondary_lanes_granted",
+                             "secondary lanes currently granted")
+        self.sched_granted = g("sched_n_granted",
+                               "grants in the last scheduling plan")
+        self.sched_load = g("sched_post_plan_max_load",
+                            "max per-slot load after the last plan "
+                            "(the paper's post-plan balance metric)")
+        self.tele_dropped = c("telemetry_dropped_rows_total",
+                              "telemetry rows lost to the ring cap")
+
+
 class SessionEngine:
     """Slot-managed multi-tenant sessions over one vmapped executor.
 
@@ -197,6 +282,16 @@ class SessionEngine:
         current device; a mesh of size 1 is bit-exact vs ``mesh=None``.
       lanes_axis: the mesh axis name holding the lanes (default
         ``"lanes"``).
+      obs: observability wiring (``repro.obs``): ``None`` -> a fresh
+        enabled ``Observability`` bundle on ``self.obs``; ``False`` ->
+        a disabled bundle (every metric op / span an early return); an
+        ``Observability`` instance is shared as-is (one registry +
+        tracer scraped across engines).
+      telemetry_cap: ring size for the per-flush telemetry rows
+        (default 4096; ``None`` = unbounded, the pre-ring behavior).
+        Overflowed rows drop oldest-first and are counted under
+        ``telemetry_record()['extra']['telemetry']['dropped_rows']`` --
+        lifetime ``totals`` are unaffected by drops.
       aot_buckets: enable the AOT shape-bucketed flush path.  An int is
         the max scan width per flush segment (rounded up to a power of
         two); an iterable of widths uses its max.  ``warmup()``
@@ -215,7 +310,8 @@ class SessionEngine:
                  primary_slots: int = 4, secondary_slots: int = 2,
                  min_grant_chunks: int = 2, mesh=None,
                  lanes_axis: str = "lanes", aot_buckets=None,
-                 kernel_backend: Optional[str] = None, **executor_kw):
+                 kernel_backend: Optional[str] = None, obs=None,
+                 telemetry_cap: Optional[int] = 4096, **executor_kw):
         if tuned is not None:
             if num_pri is not None and num_pri != tuned.num_pri:
                 raise ValueError(f"num_pri={num_pri} conflicts with the "
@@ -324,6 +420,8 @@ class SessionEngine:
                 min_load=float(self.min_grant_chunks)))
 
         compilemon.install()
+        self.obs = obs_lib.resolve(obs)
+        self._mx = _EngineMetrics(self.obs.registry)
         self._n_retraces = 0
         self._compile_stall_ms = 0.0
         self._storms = 0                   # open_batch calls
@@ -341,7 +439,17 @@ class SessionEngine:
         self._dtype = None
         self._flush_no = 0
         self._slot_reschedules = 0
-        self._telemetry: List[Dict[str, Any]] = []
+        if telemetry_cap is not None and int(telemetry_cap) < 1:
+            raise ValueError(f"telemetry_cap={telemetry_cap}: need >= 1 "
+                             "rows, or None for unbounded")
+        self.telemetry_cap = (None if telemetry_cap is None
+                              else int(telemetry_cap))
+        self._telemetry: Deque[Dict[str, Any]] = \
+            deque(maxlen=self.telemetry_cap)
+        self._telemetry_total = 0      # rows ever recorded (ring-proof)
+        self._telemetry_dropped = 0    # rows lost to the ring cap
+        self._rows_validated = 0       # high-water mark for incremental
+                                       # telemetry_record(validate=True)
 
     # ------------------------------------------------------------- lifecycle
 
@@ -355,6 +463,7 @@ class SessionEngine:
                                       backlog=deque())
         self._queue.append(sid)
         self._admit()
+        self._mx.opened.inc()
         return sid
 
     def open_batch(self, tenants: Iterable[str],
@@ -391,24 +500,31 @@ class SessionEngine:
                     "first-append entries (pass one per tenant, or None)")
         snap = compilemon.snapshot()
         t0 = time.perf_counter()
-        sids: List[int] = []
-        for i, tenant in enumerate(tenants):
-            sid = self.open(tenant)     # virtual dispatch: the durable
-            sids.append(sid)            # engine WAL-logs each open/append
-            if first is not None and first[i] is not None:
-                self.append(sid, first[i])
-        admitted = [sid for sid in sids
-                    if self.sessions[sid].slot is not None]
-        group_chunks, width, flushed, n_disp = \
-            self._flush_admission(admitted)
+        with self.obs.span("engine.admit_storm", cat="admit",
+                           n_tenants=len(tenants)) as sp:
+            sids: List[int] = []
+            for i, tenant in enumerate(tenants):
+                sid = self.open(tenant)     # virtual dispatch: the durable
+                sids.append(sid)            # engine WAL-logs each open/append
+                if first is not None and first[i] is not None:
+                    self.append(sid, first[i])
+            admitted = [sid for sid in sids
+                        if self.sessions[sid].slot is not None]
+            group_chunks, width, flushed, n_disp = \
+                self._flush_admission(admitted)
+            sp.set(n_admitted=len(admitted),
+                   n_scan_dispatches=int(n_disp))
         ms = (time.perf_counter() - t0) * 1e3
         delta = compilemon.since(snap)
         self._storms += 1
         self._n_admitted_batch += len(admitted)
         self._admit_stall_ms += ms
         self._n_retraces_admit += delta.n_compiles
+        self._mx.storms.inc()
+        self._mx.admitted.inc(len(admitted))
+        self._mx.admit_ms.observe(ms)
         self._record_flush(flushed, group_chunks, width, scope="admit",
-                           snap=snap,
+                           snap=snap, ms=ms,
                            extra={"n_admitted": len(admitted),
                                   "n_queued_batch": len(sids) - len(admitted),
                                   "n_scan_dispatches": int(n_disp),
@@ -432,9 +548,13 @@ class SessionEngine:
             raise ValueError(f"append shape {data.shape[1:]} != engine tuple "
                              f"shape {self._feat_shape}")
         if len(data):
-            s.backlog.append(data)
-            s.backlog_tuples += len(data)
-            s.stats.tuples_appended += len(data)
+            with self.obs.span("engine.append", cat="session",
+                               sid=sid, n=len(data)):
+                s.backlog.append(data)
+                s.backlog_tuples += len(data)
+                s.stats.tuples_appended += len(data)
+            self._mx.appends.inc()
+            self._mx.app_tuples.inc(len(data))
 
     def query(self, sid: int, *, scope: str = "session"):
         """Merged-buffer snapshot of everything appended so far.
@@ -465,6 +585,7 @@ class SessionEngine:
             raise ValueError(f"query scope {scope!r} not in "
                              "('session', 'engine')")
         s.stats.queries += 1
+        self._mx.queries.inc(scope=scope)
         return self._snapshot(s)
 
     def close(self, sid: int):
@@ -499,6 +620,7 @@ class SessionEngine:
             self._queue.remove(sid)
         s.closed = True
         self._admit()
+        self._mx.closed.inc()
         return merged, s.stats.as_dict()
 
     # ----------------------------------------------------------------- flush
@@ -519,44 +641,53 @@ class SessionEngine:
            ``aot_buckets=`` is enabled.
         """
         snap = compilemon.snapshot()
-        force = set(force)
-        self._admit()
-        self._reschedule_secondary()
+        t0 = time.perf_counter()
+        with self.obs.span("engine.flush", scope="engine") as sp:
+            force = set(force)
+            self._admit()
+            with self.obs.span("sched.regrant", cat="sched"):
+                self._reschedule_secondary()
 
-        lane_chunks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
-        lane_masks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
-        lane_sid: List[Optional[int]] = [None] * self.num_lanes
-        flushed_tuples = 0
-        for slot, sid in enumerate(self._slot_sid):
-            if sid is None:
-                continue
-            s = self.sessions[sid]
-            lanes = self._lane_group(slot)
-            for ln in lanes:
-                lane_sid[ln] = sid
-            gc, gm, n_real = self._take_striped(
-                s, lanes, flush_tail=sid in force)
-            for g, ln in enumerate(lanes):
-                lane_chunks[ln].extend(gc[g])
-                lane_masks[ln].extend(gm[g])
-            flushed_tuples += n_real
+            lane_chunks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
+            lane_masks: List[List[np.ndarray]] = [[] for _ in range(self.num_lanes)]
+            lane_sid: List[Optional[int]] = [None] * self.num_lanes
+            flushed_tuples = 0
+            for slot, sid in enumerate(self._slot_sid):
+                if sid is None:
+                    continue
+                s = self.sessions[sid]
+                lanes = self._lane_group(slot)
+                for ln in lanes:
+                    lane_sid[ln] = sid
+                gc, gm, n_real = self._take_striped(
+                    s, lanes, flush_tail=sid in force)
+                for g, ln in enumerate(lanes):
+                    lane_chunks[ln].extend(gc[g])
+                    lane_masks[ln].extend(gm[g])
+                flushed_tuples += n_real
 
-        row_sessions = [None if sid is None else self.sessions[sid]
-                        for sid in lane_sid]
-        width = 0
-        for off, w in self._segments(lane_chunks):
-            chunks, mask = self._pack_chunks(lane_chunks, lane_masks, w,
-                                             offset=off)
-            if self._sharded is not None:    # split the batch over the mesh
-                chunks = jax.device_put(chunks, self._sharded.lane_sharding)
-                mask = jax.device_put(mask, self._sharded.lane_sharding)
-            run = self._aot.get(("eng", w), self._run_lanes)
-            self._states, stats = run(self._states, chunks, mask)
-            self._apply_exec_stats(
-                stats, row_sessions,
-                [min(max(len(c) - off, 0), w) for c in lane_chunks])
-            width += w
-        self._record_flush(flushed_tuples, lane_chunks, width, snap=snap)
+            row_sessions = [None if sid is None else self.sessions[sid]
+                            for sid in lane_sid]
+            width = 0
+            for off, w in self._segments(lane_chunks):
+                with self.obs.span("scan.segment", cat="scan",
+                                   scope="engine", offset=off, width=w):
+                    chunks, mask = self._pack_chunks(lane_chunks, lane_masks,
+                                                     w, offset=off)
+                    if self._sharded is not None:  # split over the mesh
+                        chunks = jax.device_put(
+                            chunks, self._sharded.lane_sharding)
+                        mask = jax.device_put(
+                            mask, self._sharded.lane_sharding)
+                    run = self._aot.get(("eng", w), self._run_lanes)
+                    self._states, stats = run(self._states, chunks, mask)
+                    self._apply_exec_stats(
+                        stats, row_sessions,
+                        [min(max(len(c) - off, 0), w) for c in lane_chunks])
+                width += w
+            sp.set(tuples=flushed_tuples, width=width)
+        self._record_flush(flushed_tuples, lane_chunks, width, snap=snap,
+                           ms=(time.perf_counter() - t0) * 1e3)
         self._flush_no += 1
 
     def flush_session(self, sid: int) -> None:
@@ -580,45 +711,54 @@ class SessionEngine:
         no-op), so the padded lanes are written back unchanged and the
         scan hits a pre-compiled bucket instead of retracing."""
         snap = compilemon.snapshot()
+        t0 = time.perf_counter()
         s = self._session(sid)
         if s.slot is None:
             raise RuntimeError(
                 f"session {sid} is queued (all {self.primary_slots} primary "
                 "slots busy); nothing has run yet -- close another session "
                 "to admit it first")
-        lanes = self._lane_group(s.slot)
-        group_chunks, group_masks, n_real = self._take_striped(
-            s, lanes, flush_tail=True)
-        width = 0
-        if any(group_chunks):
-            n_real_lanes = len(lanes)
-            if self._aot_widths:
-                bucket = self._group_bucket(n_real_lanes)
-                if bucket > n_real_lanes:
-                    in_group = set(lanes)
-                    pads = [ln for ln in range(self.num_lanes)
-                            if ln not in in_group][:bucket - n_real_lanes]
-                    lanes = lanes + pads
-                    group_chunks = group_chunks + [[] for _ in pads]
-                    group_masks = group_masks + [[] for _ in pads]
-            row_sessions = [s] * n_real_lanes + \
-                [None] * (len(lanes) - n_real_lanes)
-            idx = np.asarray(lanes, np.int32)
-            sub = self._take_lanes(self._states, idx)
-            for off, w in self._segments(group_chunks):
-                arr, msk = self._pack_chunks(group_chunks, group_masks, w,
-                                             offset=off)
-                run = self._aot.get(("grp", len(lanes), w), self._run_group)
-                sub, stats = run(sub, arr, msk)
-                self._apply_exec_stats(
-                    stats, row_sessions,
-                    [min(max(len(c) - off, 0), w) for c in group_chunks])
-                width += w
-            states = self._put_lanes(self._states, idx, sub)
-            self._states = (states if self._sharded is None
-                            else self._sharded.shard_states(states))
+        with self.obs.span("engine.flush_session", scope="session",
+                           sid=sid, tenant=s.tenant) as sp:
+            lanes = self._lane_group(s.slot)
+            group_chunks, group_masks, n_real = self._take_striped(
+                s, lanes, flush_tail=True)
+            width = 0
+            if any(group_chunks):
+                n_real_lanes = len(lanes)
+                if self._aot_widths:
+                    bucket = self._group_bucket(n_real_lanes)
+                    if bucket > n_real_lanes:
+                        in_group = set(lanes)
+                        pads = [ln for ln in range(self.num_lanes)
+                                if ln not in in_group][:bucket - n_real_lanes]
+                        lanes = lanes + pads
+                        group_chunks = group_chunks + [[] for _ in pads]
+                        group_masks = group_masks + [[] for _ in pads]
+                row_sessions = [s] * n_real_lanes + \
+                    [None] * (len(lanes) - n_real_lanes)
+                idx = np.asarray(lanes, np.int32)
+                sub = self._take_lanes(self._states, idx)
+                for off, w in self._segments(group_chunks):
+                    with self.obs.span("scan.segment", cat="scan",
+                                       scope="session", offset=off, width=w):
+                        arr, msk = self._pack_chunks(group_chunks,
+                                                     group_masks, w,
+                                                     offset=off)
+                        run = self._aot.get(("grp", len(lanes), w),
+                                            self._run_group)
+                        sub, stats = run(sub, arr, msk)
+                        self._apply_exec_stats(
+                            stats, row_sessions,
+                            [min(max(len(c) - off, 0), w)
+                             for c in group_chunks])
+                    width += w
+                states = self._put_lanes(self._states, idx, sub)
+                self._states = (states if self._sharded is None
+                                else self._sharded.shard_states(states))
+            sp.set(tuples=n_real, width=width)
         self._record_flush(n_real, group_chunks, width, scope="session",
-                           snap=snap)
+                           snap=snap, ms=(time.perf_counter() - t0) * 1e3)
         self._flush_no += 1
 
     def _flush_admission(self, sids: List[int]):
@@ -650,10 +790,12 @@ class SessionEngine:
         bucket = (self._admit_bucket(n_real_lanes) if self._aot_widths
                   else n_real_lanes)
         init_idx = lanes + [lanes[0]] * (bucket - n_real_lanes)
-        states = self._reset_lanes(self._states,
-                                   np.asarray(init_idx, np.int32))
-        self._states = (states if self._sharded is None
-                        else self._sharded.shard_states(states))
+        with self.obs.span("admit.lane_init", cat="admit",
+                           n_lanes=n_real_lanes, bucket=bucket):
+            states = self._reset_lanes(self._states,
+                                       np.asarray(init_idx, np.int32))
+            self._states = (states if self._sharded is None
+                            else self._sharded.shard_states(states))
         group_chunks: List[List[np.ndarray]] = []
         group_masks: List[List[np.ndarray]] = []
         flushed = 0
@@ -675,13 +817,15 @@ class SessionEngine:
         sub = self._take_lanes(self._states, idx)
         width = n_disp = 0
         for off, w in self._segments(group_chunks):
-            arr, msk = self._pack_chunks(group_chunks, group_masks, w,
-                                         offset=off)
-            run = self._aot.get(("grp", len(lanes), w), self._run_group)
-            sub, stats = run(sub, arr, msk)
-            self._apply_exec_stats(
-                stats, row_sessions,
-                [min(max(len(c) - off, 0), w) for c in group_chunks])
+            with self.obs.span("scan.segment", cat="scan", scope="admit",
+                               offset=off, width=w):
+                arr, msk = self._pack_chunks(group_chunks, group_masks, w,
+                                             offset=off)
+                run = self._aot.get(("grp", len(lanes), w), self._run_group)
+                sub, stats = run(sub, arr, msk)
+                self._apply_exec_stats(
+                    stats, row_sessions,
+                    [min(max(len(c) - off, 0), w) for c in group_chunks])
             width += w
             n_disp += 1
         states = self._put_lanes(self._states, idx, sub)
@@ -981,7 +1125,8 @@ class SessionEngine:
             jnp.asarray(backlog_chunks, jnp.float32))).astype(np.int64)
 
     def _reschedule_secondary(self) -> None:
-        new = self.plan_secondary(self._backlog_chunks())
+        backlog = self._backlog_chunks()
+        new = self.plan_secondary(backlog)
         for j in range(self.secondary_slots):
             old = int(self._sec_assign[j])
             if old == int(new[j]):
@@ -993,6 +1138,14 @@ class SessionEngine:
                     self._states, self.primary_slots + j, old)
                 self._slot_reschedules += 1
             self._sec_assign[j] = new[j]
+            if self.obs.enabled and int(new[j]) >= 0:
+                sid = self._slot_sid[int(new[j])]
+                if sid is not None:
+                    self._mx.grants.inc(tenant=self.sessions[sid].tenant)
+        if self.obs.enabled and self.secondary_slots:
+            summary = scheduler.plan_summary(backlog, new)
+            self._mx.sched_granted.set(summary["n_granted"])
+            self._mx.sched_load.set(summary["max_load_after"])
 
     def _fold_lane_impl(self, states, src, dst):
         contrib = self._res.merge_state(
@@ -1014,21 +1167,25 @@ class SessionEngine:
             # with data refuse above): nothing ran, buffers are pristine
             return jax.tree.map(np.asarray,
                                 self._res.merge_state(self._fresh))
-        merged = jax.tree.map(np.asarray,
-                              self._merge_lane(self._states, s.slot))
-        for j in range(self.secondary_slots):
-            if self._sec_assign[j] == s.slot:
-                contrib = jax.tree.map(np.asarray, self._merge_lane(
-                    self._states, self.primary_slots + j))
-                combine = np.add if self.spec.combine == "add" else np.maximum
-                merged = jax.tree.map(combine, merged, contrib)
+        with self.obs.span("merge.snapshot", cat="merge", sid=s.sid,
+                           tenant=s.tenant):
+            merged = jax.tree.map(np.asarray,
+                                  self._merge_lane(self._states, s.slot))
+            for j in range(self.secondary_slots):
+                if self._sec_assign[j] == s.slot:
+                    contrib = jax.tree.map(np.asarray, self._merge_lane(
+                        self._states, self.primary_slots + j))
+                    combine = (np.add if self.spec.combine == "add"
+                               else np.maximum)
+                    merged = jax.tree.map(combine, merged, contrib)
         return merged
 
     # ------------------------------------------------------------- telemetry
 
     def _record_flush(self, tuples: int, lane_chunks, width: int,
                       scope: str = "engine", snap=None,
-                      extra: Optional[Dict[str, Any]] = None) -> None:
+                      extra: Optional[Dict[str, Any]] = None,
+                      ms: Optional[float] = None) -> None:
         delta = compilemon.since(snap) if snap is not None else None
         if delta is not None:
             self._n_retraces += delta.n_compiles
@@ -1051,15 +1208,75 @@ class SessionEngine:
             "n_retraces": 0 if delta is None else int(delta.n_compiles),
             "compile_stall_ms": (0.0 if delta is None
                                  else float(delta.stall_ms)),
+            "flush_ms": None if ms is None else round(ms, 3),
         }
         if extra:
             row.update(extra)
+        if (self._telemetry.maxlen is not None
+                and len(self._telemetry) == self._telemetry.maxlen):
+            self._telemetry_dropped += 1
+            self._mx.tele_dropped.inc()
         self._telemetry.append(row)
+        self._telemetry_total += 1
+        if self.obs.enabled:
+            self._emit_flush_metrics(row, ms)
+
+    def _emit_flush_metrics(self, row: Dict[str, Any],
+                            ms: Optional[float]) -> None:
+        """Mirror one telemetry row into the metrics registry (counters
+        add the per-flush deltas, gauges track the latest state).  Only
+        called with ``obs.enabled``; per-lane / per-tenant series are
+        capped (``_EngineMetrics.MAX_*_SERIES``)."""
+        m, scope = self._mx, row["scope"]
+        m.flushes.inc(scope=scope)
+        m.tuples.inc(row["tuples"])
+        m.chunks.inc(row["chunks"])
+        m.retraces.inc(row["n_retraces"])
+        m.stall.inc(row["compile_stall_ms"])
+        if ms is not None:
+            m.flush_ms.observe(ms, scope=scope)
+        m.active.set(row["active_sessions"])
+        m.queued.set(row["queued_sessions"])
+        m.slot_occ.set(row["slot_occupancy"])
+        m.backlog_tot.set(row["backlog_tuples"])
+        m.sec_granted.set(row["sec_granted"])
+        if row["n_retraces"]:
+            self.obs.tracer.instant(
+                "compile.retrace", cat="compile", scope=scope,
+                n=row["n_retraces"], stall_ms=row["compile_stall_ms"])
+        if scope == "session":
+            return      # lane/tenant gauges reflect ENGINE-wide state;
+                        # the per-session tier does not rescan it
+        busy = {slot for slot, sid in enumerate(self._slot_sid)
+                if sid is not None}
+        busy |= {self.primary_slots + j
+                 for j in range(self.secondary_slots)
+                 if self._sec_assign[j] >= 0}
+        m.lanes_busy.set(len(busy))
+        if self.num_lanes <= m.MAX_LANE_SERIES:
+            for ln in range(self.num_lanes):
+                m.occupancy.set(1.0 if ln in busy else 0.0, lane=str(ln))
+        depth: Dict[str, int] = {}
+        for sid in self._slot_sid:
+            if sid is not None:
+                s = self.sessions[sid]
+                depth[s.tenant] = depth.get(s.tenant, 0) + s.backlog_tuples
+        tenants = sorted(depth, key=lambda t: (-depth[t], t))
+        for tenant in tenants[:m.MAX_TENANT_SERIES]:
+            m.backlog.set(depth[tenant], tenant=tenant)
 
     def telemetry_record(self, validate: bool = True) -> Dict[str, Any]:
         """Per-flush telemetry as a schema-v1 benchmark record (the shape
         ``benchmarks.common.validate_record`` accepts): rows = one dict
-        per flush, extra = engine config + lifetime totals."""
+        per flush (the ring tail -- up to ``telemetry_cap`` newest rows),
+        extra = engine config + lifetime totals + ring accounting
+        (``extra['telemetry']``: cap / rows_total / dropped_rows).
+
+        ``validate=True`` validates INCREMENTALLY: only rows appended
+        since the last validated call are re-checked (plus the O(1)
+        envelope), so polling telemetry every flush costs O(new rows)
+        per call instead of O(full history) -- the lifetime cost is
+        linear in rows recorded."""
         totals = {
             "sessions_opened": self._next_sid,
             "flushes": self._flush_no,
@@ -1075,13 +1292,14 @@ class SessionEngine:
             "n_retraces_admit": int(self._n_retraces_admit),
             "admit_stall_ms": round(self._admit_stall_ms, 3),
         }
+        rows = list(self._telemetry)
         rec = {
             "schema_version": TELEMETRY_SCHEMA_VERSION,
             "bench": "session_engine",
             "title": (f"SessionEngine telemetry ({self.spec.name}, "
                       f"{self.primary_slots}P+{self.secondary_slots}S slots)"),
             "status": "ok",
-            "rows": list(self._telemetry),
+            "rows": rows,
             "extra": {
                 "config": {
                     "app": self.spec.name,
@@ -1098,6 +1316,11 @@ class SessionEngine:
                 },
                 "aot": self._aot_info,
                 "totals": totals,
+                "telemetry": {
+                    "cap": self.telemetry_cap,
+                    "rows_total": int(self._telemetry_total),
+                    "dropped_rows": int(self._telemetry_dropped),
+                },
             },
         }
         if validate:
@@ -1106,7 +1329,17 @@ class SessionEngine:
             except ImportError:          # src-only install: shape documented
                 pass                     # above; benchmarks validate in CI
             else:
-                validate_record(rec)
+                # incremental: the first _rows_validated rows ever
+                # recorded passed a prior call, and ring drops come off
+                # the OLD end -- so in the retained window the
+                # unvalidated suffix starts at validated-count minus
+                # total drops (clamped: a drop of never-validated rows
+                # just means the whole window is unvalidated)
+                new_from = max(
+                    self._rows_validated
+                    - (self._telemetry_total - len(rows)), 0)
+                validate_record({**rec, "rows": rows[new_from:]})
+                self._rows_validated = self._telemetry_total
         return rec
 
     # ------------------------------------------------------------ durability

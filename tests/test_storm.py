@@ -324,8 +324,9 @@ class DifferentialHarness:
             assert es.backlog_tuples == sum(
                 len(a) for a in es.pending_arrays())
         # bucket-table hit: once warm, NOTHING on any flush path (storm
-        # admissions included) may retrace
-        rows = eng._telemetry
+        # admissions included) may retrace (listify: the telemetry
+        # store is a ring deque, which does not slice)
+        rows = list(eng._telemetry)
         if self.warmed_at is None and eng._aot:
             self.warmed_at = len(rows)
         if self.warmed_at is not None:
