@@ -20,8 +20,8 @@ import traceback
 
 from benchmarks import (backend_sweep, common, fig2_skew, fig7_secpe_sweep,
                         fig8_pagerank, fig9_evolving, moe_balance, recovery,
-                        roofline, serving_session, table2_sota,
-                        table3_resources)
+                        roofline, serving_service, serving_session,
+                        table2_sota, table3_resources)
 
 BENCHES = {
     "fig2": fig2_skew.run,
@@ -34,6 +34,7 @@ BENCHES = {
     "backend_sweep": backend_sweep.run,
     "roofline": roofline.run,
     "serving_session": serving_session.run,
+    "serving_service": serving_service.run,
     "recovery": recovery.run,
 }
 
@@ -51,6 +52,9 @@ FAST_KW = {
     "backend_sweep": dict(t=1024, iters=1),
     "serving_session": dict(n_tuples=1 << 13, rounds=5, chunk=1024,
                             storm_sessions=64, storms=2, storm_chunk=128),
+    # the acceptance floor: even the smoke run pushes >= 1k concurrent
+    # tenants through the network front door
+    "serving_service": dict(tenants=1024, appends_per_tenant=2),
     # fast sizes make the WAL/checkpoint I/O a large share of a tiny
     # compute budget, so the overhead bound is looser than the full
     # run's (it is still published + asserted via the headline)

@@ -1,0 +1,311 @@
+"""Open-loop load test of the network front door (DESIGN.md §12).
+
+Where ``benchmarks/serving_session.py`` measures the ENGINE (in-process
+flush latency), this bench measures the SERVICE: thousands of tenants
+connect to a live ``serve.SessionService`` TCP endpoint and run their
+whole lifecycle -- ``open``, ragged Zipf ``append`` s, ``query``,
+``close`` -- over the CRC-framed wire protocol, multiplexed over a
+fixed pool of pipelined connections.
+
+The arrival process is **open-loop and deterministic**: every request
+gets a seeded scheduled send time inside phase windows (opens, then
+appends, then queries, then closes), and end-to-end latency is measured
+from the SCHEDULED arrival to the response -- queueing delay counts, so
+saturation shows up in p99 instead of silently throttling the offered
+load.  The phase layout guarantees a plateau where every tenant is open
+at once; the bench asserts the engine really held ``tenants``
+concurrent sessions (the acceptance bar is >= 1k in ``--fast``).
+
+Tenant key streams come from a FILE-BACKED corpus
+(``data.pipeline.write_corpus`` / ``ArrayRecordCorpus`` -- the
+array_record contract), one record per tenant with mixed Zipf skews, so
+real key distributions drive the skew path end to end; every query and
+close answer is verified bit-exact against the numpy oracle over the
+tenant's corpus record.
+
+In-bench asserts (the acceptance criteria, CI-checked on 1 and 4
+devices):
+
+* zero steady-state retraces through the NETWORK path
+  (``core.compilemon`` around the traffic window, plus the engine's own
+  ``n_retraces`` total read back over the wire via the ``stats`` op);
+* every request answered ``OK`` -- no taxonomy errors under the
+  plateau load;
+* plateau concurrency equals the tenant count;
+* every tenant's answers bit-exact vs the oracle.
+
+Headline: sustained QPS over the whole run, end-to-end p50/p99 across
+ops, plateau concurrency, ``n_retraces_steady``.  Exports the service
+Prometheus exposition next to the record.
+
+    PYTHONPATH=src python -m benchmarks.serving_service
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import (RESULTS_DIR, bench_record, print_table,
+                               save_record)
+from repro import obs as obs_lib
+from repro.apps import histo
+from repro.core import compilemon
+from repro.data.pipeline import ArrayRecordCorpus, write_corpus
+from repro.data.zipf import zipf_tuples
+from repro.serve import SessionEngine, SessionService, ServiceConfig
+from repro.serve.service import AsyncServiceClient, ServiceClient
+
+ALPHAS = (0.0, 0.8, 1.5, 2.0)
+BINS, DOMAIN = 32, 1 << 12
+
+
+def _phase_windows(tenants: int, appends_per_tenant: int):
+    """Deterministic phase layout (seconds): opens, appends, queries,
+    closes.  Scaled to the tenant count so the offered arrival rate
+    stays roughly constant as the fleet grows."""
+    w_open = max(0.5, tenants / 1500.0)
+    w_app = max(0.75, appends_per_tenant * tenants / 1500.0)
+    w_query = max(0.5, tenants / 1500.0)
+    w_close = max(0.5, tenants / 1500.0)
+    t1 = w_open
+    t2 = t1 + w_app
+    t3 = t2 + w_query
+    return t1, t2, t3, t3 + w_close
+
+
+def run(tenants: int = 2048, appends_per_tenant: int = 2, chunk: int = 64,
+        num_pri: int = 8, conns: int = 64, mesh="auto", aot_buckets: int = 2,
+        coalesce_max: int = 256, corpus_path: Optional[str] = None,
+        export_dir: Optional[str] = None, seed: int = 23):
+    import jax
+    if mesh == "auto":
+        mesh = (jax.make_mesh((len(jax.devices()),), ("lanes",))
+                if len(jax.devices()) > 1 else None)
+    primary_slots = tenants
+    if mesh is not None:
+        num_dev = dict(mesh.shape)["lanes"]
+        primary_slots += -primary_slots % num_dev
+    spec = histo.make_spec(BINS, DOMAIN, num_pri)
+    obs = obs_lib.Observability()
+    eng = SessionEngine(spec, num_pri=num_pri, num_sec=2, chunk_size=chunk,
+                        primary_slots=primary_slots, secondary_slots=0,
+                        mesh=mesh, aot_buckets=aot_buckets, obs=obs)
+    aot_info = eng.warmup(dtype=np.int32, feat_shape=(2,))
+    devices = eng.num_lanes // eng.lanes_per_device
+
+    # ------------------------------------------------ file-backed corpus
+    # one record per tenant, skew cycling through ALPHAS; sizes ragged on
+    # purpose (chunk-straddling appends exercise the pow2 segment path)
+    rng = np.random.default_rng(seed)
+    out_dir = Path(export_dir) if export_dir is not None else RESULTS_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if corpus_path is None:
+        corpus_path = Path(tempfile.mkdtemp(
+            prefix="serving_service_")) / "corpus.arc"
+    corpus_path = Path(corpus_path)
+    sizes = [appends_per_tenant * chunk + int(rng.integers(1, 2 * chunk))
+             for _ in range(tenants)]
+    write_corpus(corpus_path, (
+        zipf_tuples(sizes[t], DOMAIN, ALPHAS[t % len(ALPHAS)],
+                    seed=seed + t)
+        for t in range(tenants)))
+    corpus = ArrayRecordCorpus(corpus_path)
+    assert len(corpus) == tenants
+
+    svc = SessionService(
+        eng, ServiceConfig(admission="scored", coalesce_max=coalesce_max),
+        obs=obs)
+    host, port = svc.start()
+
+    # prime the full wire lifecycle once, then pin the steady window:
+    # everything after this snapshot must never hit the compiler
+    ctl = ServiceClient(host, port)
+    psid = ctl.open("_prime")
+    ctl.append(psid, corpus[0][: chunk + 3])
+    ctl.query(psid)
+    ctl.close(psid)
+    pre = compilemon.snapshot()
+    retraces_before = int(ctl.stats()["totals"]["n_retraces"])
+
+    t1, t2, t3, t4 = _phase_windows(tenants, appends_per_tenant)
+    lat_ms: Dict[str, List[float]] = {
+        "open": [], "append": [], "query": [], "close": []}
+    errors: List[str] = []
+    plateau: Dict[str, int] = {}
+    answers: Dict[int, np.ndarray] = {}
+
+    def _want(t: int) -> np.ndarray:
+        return histo.oracle(corpus[t][:, 0].astype(np.int64),
+                            BINS, DOMAIN, num_pri)
+
+    async def tenant_task(t: int, cli: AsyncServiceClient, base: float):
+        u = (t + 0.5) / tenants
+        tr = np.random.default_rng([seed, t])
+        data = corpus[t]
+        cuts = np.sort(tr.integers(1, len(data),
+                                   size=appends_per_tenant - 1)) \
+            if appends_per_tenant > 1 else np.zeros(0, np.int64)
+        parts = np.split(data, cuts)
+        # scheduled send times: opens in [0,t1), appends in [t1,t2),
+        # query in [t2,t3), close in [t3,t4) -- plus seeded jitter
+        sched = [u * t1 * 0.95]
+        for k in range(len(parts)):
+            span = (t2 - t1) / len(parts)
+            sched.append(t1 + k * span + u * span * 0.95)
+        sched.append(t2 + u * (t3 - t2) * 0.95)
+        sched.append(t3 + u * (t4 - t3) * 0.95)
+
+        async def timed(op, coro_f, at):
+            delay = base + at - time.perf_counter()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            t0 = base + at               # latency from SCHEDULED arrival
+            out = await coro_f()
+            lat_ms[op].append((time.perf_counter() - t0) * 1e3)
+            return out
+
+        try:
+            sid = await timed("open", lambda: cli.open(f"t{t}"), sched[0])
+            for k, part in enumerate(parts):
+                await timed("append", lambda p=part: cli.append(sid, p),
+                            sched[1 + k])
+            got = await timed("query", lambda: cli.query(sid),
+                              sched[1 + len(parts)])
+            answers[t] = got
+            merged = await timed("close", lambda: cli.close(sid),
+                                 sched[2 + len(parts)])
+            np.testing.assert_array_equal(np.asarray(merged), _want(t))
+        except Exception as e:           # taxonomy or transport failure
+            errors.append(f"tenant {t}: {type(e).__name__}: {e}")
+
+    async def plateau_probe(base: float):
+        cli = await AsyncServiceClient.connect(host, port)
+        # sample at the end of the query window: every open landed, no
+        # close was scheduled yet -- the full fleet must be resident
+        delay = base + t3 - 0.05 - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        st = await cli.stats()
+        plateau.update(open_sessions=int(st["open_sessions"]),
+                       held_opens=int(st["held_opens"]))
+        await cli.aclose()
+
+    async def drive():
+        pool = [await AsyncServiceClient.connect(host, port)
+                for _ in range(min(conns, tenants))]
+        base = time.perf_counter()
+        tasks = [tenant_task(t, pool[t % len(pool)], base)
+                 for t in range(tenants)]
+        await asyncio.gather(*tasks, plateau_probe(base))
+        for cli in pool:
+            await cli.aclose()
+        return time.perf_counter() - base
+
+    makespan = asyncio.run(drive())
+    steady = compilemon.since(pre)
+    retraces_after = int(ctl.stats()["totals"]["n_retraces"])
+    n_requests = sum(len(v) for v in lat_ms.values())
+    qps = n_requests / makespan
+
+    # ------------------------------------------------------- acceptance
+    assert not errors, f"{len(errors)} failed requests; first 5: " \
+        + "; ".join(errors[:5])
+    assert plateau.get("open_sessions") == tenants, (
+        f"plateau held {plateau} open sessions, wanted all {tenants} "
+        "concurrent")
+    assert steady.n_compiles == 0, (
+        f"{steady.n_compiles} retrace(s) ({steady.stall_ms:.1f} ms) "
+        "inside the network traffic window despite "
+        f"aot_buckets={aot_buckets}")
+    n_retraces_steady = retraces_after - retraces_before
+    assert n_retraces_steady == 0, (
+        f"engine telemetry (read over the wire) reports "
+        f"{n_retraces_steady} retraces during traffic")
+    for t in range(0, tenants, max(1, tenants // 64)):
+        np.testing.assert_array_equal(np.asarray(answers[t]), _want(t))
+
+    def pct(v, q):
+        return round(float(np.percentile(v, q)), 2) if len(v) else None
+
+    all_lat = np.concatenate([np.asarray(v) for v in lat_ms.values()
+                              if len(v)])
+    rows = [{
+        "op": op,
+        "requests": len(v),
+        "p50_ms": pct(v, 50),
+        "p99_ms": pct(v, 99),
+    } for op, v in lat_ms.items()]
+    svc_stats = ctl.stats()
+    ctl.close_conn()
+    svc.stop()
+    prom_text = obs.registry.prometheus_text()
+    (out_dir / "serving_service.prom").write_text(prom_text)
+    corpus.close()
+
+    title = (f"Network serving: {tenants} tenants over {min(conns, tenants)} "
+             f"conns -> {devices} device(s) x {eng.lanes_per_device} lanes "
+             f"({num_pri}P PEs, chunk {chunk}, scored admission)")
+    print_table(title, rows)
+    print(f"sustained {qps:,.0f} req/s over {makespan:.2f}s; e2e p50 "
+          f"{pct(all_lat, 50)} ms / p99 {pct(all_lat, 99)} ms; plateau "
+          f"{plateau['open_sessions']} concurrent sessions; "
+          f"{n_retraces_steady} steady retraces through the wire")
+    return bench_record(
+        "serving_service", title, rows,
+        extra={
+            "headline": {
+                "qps": round(qps, 1),
+                "e2e_p50_ms": pct(all_lat, 50),
+                "e2e_p99_ms": pct(all_lat, 99),
+                "tenants": tenants,
+                "peak_concurrent": int(plateau["open_sessions"]),
+                "n_retraces_steady": int(n_retraces_steady),
+                "devices": devices,
+            },
+            "config": {
+                "devices": devices,
+                "lanes_per_device": eng.lanes_per_device,
+                "primary_slots": eng.primary_slots,
+                "appends_per_tenant": appends_per_tenant,
+                "chunk": chunk,
+                "conns": min(conns, tenants),
+                "coalesce_max": coalesce_max,
+                "aot_buckets": aot_buckets,
+                "admission": "scored",
+                "corpus_path": str(corpus_path),
+                "corpus_records": tenants,
+                "corpus_tuples": int(sum(sizes)),
+                "phase_windows_s": [round(x, 3) for x in (t1, t2, t3, t4)],
+            },
+            "latency_ms": {
+                op: {"p50": pct(v, 50), "p90": pct(v, 90),
+                     "p99": pct(v, 99), "max": (round(float(np.max(v)), 2)
+                                                if len(v) else None)}
+                for op, v in lat_ms.items()
+            },
+            "service_stats": svc_stats,
+            "aot": aot_info,
+            "makespan_s": round(makespan, 3),
+            "n_requests": n_requests,
+        })
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: 1024 tenants, short windows")
+    ap.add_argument("--tenants", type=int, default=None)
+    args = ap.parse_args()
+    kw = {}
+    if args.fast:
+        kw.update(tenants=1024, appends_per_tenant=2)
+    if args.tenants is not None:
+        kw.update(tenants=args.tenants)
+    save_record(run(**kw))

@@ -93,3 +93,87 @@ def plan_summary(workload, assignment) -> dict:
         "max_load_before": float(w.max()) if len(w) else 0.0,
         "max_load_after": float((w / shares).max()) if len(w) else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 lifted to admission time (PR 9, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def admission_score(backlog, occupancy) -> np.ndarray:
+    """Per-tenant Eq. 2 effective load at admission time.
+
+    ``schedule_secpes`` is the paper's balancing move inside the engine:
+    the hottest PriPE gets the next helper, with effective load
+    ``workload / (1 + shares)``.  The admission controller is the same
+    move pointed the other way -- the next free primary slot goes to the
+    COLDEST tenant, where a tenant's effective load is the work it has
+    already parked on the engine:
+
+        eff_t = occupancy_t + backlog_t / (1 + occupancy_t)
+
+    ``occupancy_t`` (slots the tenant already holds) dominates so one
+    tenant's storm cannot FIFO-hog the slot table, and the queued
+    backlog is divided across the tenant's resident slots exactly like
+    Eq. 2 divides a PriPE's workload across its attached SecPEs.
+
+    Args:
+      backlog:   int/float[T] per-tenant queued tuples (or any work
+        proxy) not yet resident in a slot.
+      occupancy: int/float[T] per-tenant primary slots currently held.
+
+    Returns:
+      float64[T] scores; LOWER admits first.  Pure numpy -- admission
+      runs on the request path of the network service, so it must never
+      trace or touch the device.
+    """
+    b = np.asarray(backlog, np.float64)
+    o = np.asarray(occupancy, np.float64)
+    if b.shape != o.shape:
+        raise ValueError(f"backlog shape {b.shape} != occupancy "
+                         f"shape {o.shape}")
+    return o + b / (1.0 + o)
+
+
+def plan_admission(backlog, occupancy, free_slots: int,
+                   pending) -> np.ndarray:
+    """Greedy Eq. 2 admission plan: which pending opens get the free
+    slots, and in what order.
+
+    Mirrors the serial greedy of ``schedule_secpes``: each round picks
+    the argmin of ``admission_score`` among tenants with a pending open
+    (first-arrived wins ties, preserving FIFO among equals), charges
+    that tenant one slot of occupancy, and recomputes.  Never admits
+    more than ``free_slots`` (capacity is a hard bound).
+
+    Args:
+      backlog:    int/float[T] per-tenant queued work (see
+        ``admission_score``).
+      occupancy:  int/float[T] per-tenant slots held; mutated copies are
+        used internally, the input is untouched.
+      free_slots: number of primary slots currently free.
+      pending:    int[K] tenant index of each queued open request, in
+        arrival order.
+
+    Returns:
+      int64[A] indices into ``pending`` in admission order, A =
+      min(K, free_slots).
+    """
+    occ = np.asarray(occupancy, np.float64).copy()
+    b = np.asarray(backlog, np.float64)
+    pend = np.asarray(pending, np.int64)
+    if len(pend) and (pend.min() < 0 or pend.max() >= len(occ)):
+        raise ValueError(f"pending tenant ids must be in [0, {len(occ)}); "
+                         f"got range [{pend.min()}, {pend.max()}]")
+    todo = list(range(len(pend)))
+    admitted: list = []
+    for _ in range(max(0, int(free_slots))):
+        if not todo:
+            break
+        scores = admission_score(b, occ)
+        # argmin over the still-pending entries; np.argmin returns the
+        # FIRST minimum, i.e. the earliest arrival among score ties.
+        k = int(np.argmin(scores[pend[todo]]))
+        i = todo.pop(k)
+        occ[pend[i]] += 1.0
+        admitted.append(i)
+    return np.asarray(admitted, np.int64)

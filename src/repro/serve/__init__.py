@@ -2,8 +2,11 @@ from repro.serve.durability import (DurableSessionEngine, EnginePreempted,
                                     WriteAheadLog)
 from repro.serve.engine import (DecodeEngine, StreamEngine, greedy_generate,
                                 prefill_cache)
+from repro.serve.errors import SessionError
 from repro.serve.session import SessionEngine, SessionStats
+from repro.serve.service import ServiceClient, ServiceConfig, SessionService
 
 __all__ = ["DecodeEngine", "DurableSessionEngine", "EnginePreempted",
-           "SessionEngine", "SessionStats", "StreamEngine", "WriteAheadLog",
+           "ServiceClient", "ServiceConfig", "SessionEngine", "SessionError",
+           "SessionService", "SessionStats", "StreamEngine", "WriteAheadLog",
            "greedy_generate", "prefill_cache"]

@@ -78,16 +78,12 @@ import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.core import executor as core_executor
+from repro.serve.errors import EnginePreempted       # canonical home: PR 9
 from repro.serve.session import SessionEngine, SessionStats, _Session
 
 _WAL_MAGIC = b"DWAL\x01\x00\x00\x00"      # 8-byte file header: magic + v1
 _FRAME = struct.Struct("<II")             # body length, crc32(body)
 _HEAD = struct.Struct("<I")               # json header length
-
-
-class EnginePreempted(RuntimeError):
-    """The engine drained after a preemption signal: open sessions are
-    flushed and checkpointed on disk; ``recover()`` resumes them."""
 
 
 # ---------------------------------------------------------------------------

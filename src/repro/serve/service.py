@@ -1,0 +1,998 @@
+"""Network front door for the session engine (DESIGN.md §12).
+
+``SessionService`` puts an asyncio TCP endpoint on one
+``SessionEngine`` / ``DurableSessionEngine`` so concurrent clients can
+``open / open_batch / append / query / close`` over the wire -- the
+ROADMAP's "network-attached service front-end" rung, patterned on the
+HLS memcached case study: a stateful accelerator service lives or dies
+by its request path.
+
+Wire protocol v1 (docs/serving.md has the operator-facing table):
+
+* Both sides open with the 8-byte magic ``DSRV\\x01\\x00\\x00\\x00``
+  (client first; the server answers with its own before any frame).
+* Every message is one frame reusing the WAL framing discipline of
+  ``serve/durability.py``::
+
+      [u32 body_len][u32 crc32(body)]
+      body = [u32 header_len][JSON header][payload bytes]
+
+  Arrays travel as raw C-order bytes in the payload, described by a
+  ``{"dtype", "shape"}`` entry in the header.  A frame that fails any
+  check -- oversized or undersized length prefix, CRC mismatch,
+  truncated or undecodable header -- raises ``ProtocolError`` in the
+  incremental ``FrameDecoder`` BEFORE any engine state is touched; the
+  server answers with ``ERR_MALFORMED`` and drops the connection
+  (corrupt byte streams have no reliable resync point).
+
+Request path (socket to lane):
+
+* Connection handlers only parse frames and enforce ingress policy
+  (per-tenant token-bucket rate limits -> ``ERR_RATELIMIT`` with a
+  RETRY-AFTER hint; bounded request queue -> ``ERR_BACKPRESSURE``
+  instead of unbounded buffering).
+* All engine mutations run on ONE single-writer worker thread: the
+  event loop drains the bounded request queue in batches and ships each
+  batch to a 1-thread executor, which coalesces work -- contiguous
+  ``open`` runs become one ``open_batch`` storm, and >= 2 queries in a
+  batch share one engine-wide forced flush before their per-session
+  snapshots.  The engine itself is never touched concurrently.
+* Admission is the paper's Eq. 2 balancing move lifted to the service
+  layer (``core.scheduler.admission_score`` / ``plan_admission``):
+  with ``admission="scored"`` (default), an ``open`` that cannot get a
+  slot parks in a bounded service-side queue, and every freed slot goes
+  to the COLDEST tenant rather than strict FIFO -- one tenant's storm
+  cannot monopolize the slot table.  ``admission="fifo"`` passes opens
+  straight through to the engine's documented FIFO overflow contract
+  (what the differential storm harness models).  The bulk
+  ``open_batch`` op always uses the engine FIFO path.
+
+Failures map onto the one error taxonomy of ``serve/errors.py``: the
+server writes ``status_of(exc)`` into the response, the clients below
+re-raise ``error_for_status`` -- remote callers catch exactly the
+classes in-process callers catch.
+
+Everything is instrumented through the PR-8 ``Observability`` bundle
+(defaulting to the ENGINE's bundle, so service and engine series share
+one registry): ``service_requests_total{op,status}``, queue-depth
+gauges, per-connection and per-batch spans.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import socket
+import struct
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import scheduler
+from repro.serve import errors as err
+from repro.serve.errors import (BackpressureError, ProtocolError,
+                                RateLimitedError, SessionError,
+                                UnknownOpError, status_of)
+from repro import obs as obs_lib
+
+MAGIC = b"DSRV\x01\x00\x00\x00"           # 8-byte hello: magic + proto v1
+_FRAME = struct.Struct("<II")             # body length, crc32(body)
+_HEAD = struct.Struct("<I")               # json header length
+DEFAULT_MAX_FRAME = 8 << 20               # oversize length prefixes rejected
+
+OPS = ("open", "open_batch", "append", "query", "close", "ping", "stats")
+
+
+# ---------------------------------------------------------------------------
+# Wire codec
+# ---------------------------------------------------------------------------
+
+def encode_frame(meta: Dict[str, Any], payload: bytes = b"") -> bytes:
+    """One wire frame: the WAL record layout pointed at a socket."""
+    head = json.dumps(meta, separators=(",", ":"),
+                      sort_keys=True).encode("utf-8")
+    body = _HEAD.pack(len(head)) + head + payload
+    return _FRAME.pack(len(body), zlib.crc32(body)) + body
+
+
+def _arr_meta(a: np.ndarray) -> Dict[str, Any]:
+    return {"dtype": a.dtype.str, "shape": list(a.shape)}
+
+
+def _arr_from(meta: Dict[str, Any], payload: bytes) -> np.ndarray:
+    try:
+        dt = np.dtype(meta["dtype"])
+        shape = tuple(int(d) for d in meta["shape"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"bad array header {meta!r}: {e}") from None
+    want = dt.itemsize * int(np.prod(shape, dtype=np.int64)) if shape \
+        else dt.itemsize
+    if want != len(payload):
+        raise ProtocolError(
+            f"array payload is {len(payload)} bytes, header "
+            f"{meta!r} needs {want}")
+    return np.frombuffer(payload, dtype=dt).reshape(shape).copy()
+
+
+class FrameDecoder:
+    """Incremental frame parser: feed arbitrary byte splits (half-frames
+    across packets are the normal case), get whole (meta, payload)
+    messages out.  Any malformed frame raises ``ProtocolError`` and
+    poisons the decoder -- after corruption the stream has no frame
+    boundary to recover to."""
+
+    def __init__(self, max_frame: int = DEFAULT_MAX_FRAME):
+        self.max_frame = int(max_frame)
+        self._buf = bytearray()
+        self._dead = False
+
+    @property
+    def buffered(self) -> int:
+        return len(self._buf)
+
+    def feed(self, data: bytes) -> None:
+        if self._dead:
+            raise ProtocolError("decoder poisoned by an earlier bad frame")
+        self._buf.extend(data)
+
+    def _die(self, msg: str) -> ProtocolError:
+        self._dead = True
+        return ProtocolError(msg)
+
+    def next(self) -> Optional[Tuple[Dict[str, Any], bytes]]:
+        """The next complete message, or None until more bytes arrive."""
+        if self._dead:
+            raise ProtocolError("decoder poisoned by an earlier bad frame")
+        if len(self._buf) < _FRAME.size:
+            return None
+        blen, crc = _FRAME.unpack_from(self._buf, 0)
+        if blen < _HEAD.size:
+            raise self._die(f"frame body length {blen} is shorter than a "
+                            f"header length prefix ({_HEAD.size} bytes)")
+        if blen > self.max_frame:
+            raise self._die(f"frame body length {blen} exceeds the "
+                            f"{self.max_frame}-byte frame cap")
+        if len(self._buf) < _FRAME.size + blen:
+            return None
+        body = bytes(self._buf[_FRAME.size:_FRAME.size + blen])
+        if zlib.crc32(body) != crc:
+            raise self._die("frame CRC mismatch (corrupt body)")
+        (hlen,) = _HEAD.unpack_from(body, 0)
+        if _HEAD.size + hlen > blen:
+            raise self._die(f"header length {hlen} overruns the "
+                            f"{blen}-byte frame body")
+        try:
+            meta = json.loads(body[_HEAD.size:_HEAD.size + hlen])
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise self._die(f"undecodable frame header: {e}") from None
+        if not isinstance(meta, dict):
+            raise self._die(f"frame header is {type(meta).__name__}, "
+                            "not an object")
+        del self._buf[:_FRAME.size + blen]
+        return meta, body[_HEAD.size + hlen:]
+
+
+# ---------------------------------------------------------------------------
+# Ingress policy
+# ---------------------------------------------------------------------------
+
+class TokenBucket:
+    """Per-tenant token bucket: ``rate`` tokens/s up to ``burst``.
+    ``take`` returns 0.0 on success or the RETRY-AFTER hint in ms."""
+
+    def __init__(self, rate: float, burst: float, clock=time.monotonic):
+        self.rate, self.burst, self._clock = float(rate), float(burst), clock
+        self.tokens = float(burst)
+        self._t = clock()
+
+    def take(self, cost: float = 1.0) -> float:
+        now = self._clock()
+        self.tokens = min(self.burst, self.tokens + (now - self._t) * self.rate)
+        self._t = now
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return 0.0
+        return (cost - self.tokens) / self.rate * 1000.0
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Knobs of the front door (defaults serve the common case).
+
+    Attributes:
+      host/port: bind address; port 0 picks a free port (``start()``
+        returns the resolved address).
+      admission: ``"scored"`` (Eq. 2 admission controller, default) or
+        ``"fifo"`` (engine FIFO pass-through).
+      admit_queue_cap: max opens parked in the scored admission queue;
+        beyond it opens are rejected with ``ERR_BACKPRESSURE``.
+      max_pending: bound on the request queue between the event loop and
+        the engine worker; full -> ``ERR_BACKPRESSURE``.
+      coalesce_max: max requests the worker drains into one batch.
+      rate_limit/rate_burst: per-tenant token bucket (tokens/s, cap);
+        ``rate_limit=None`` disables rate limiting.
+      max_frame: wire frame cap (oversized length prefixes rejected).
+      retry_after_ms: RETRY-AFTER hint attached to backpressure
+        rejections (rate-limit rejections compute their own).
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 0
+    admission: str = "scored"
+    admit_queue_cap: int = 1024
+    max_pending: int = 4096
+    coalesce_max: int = 256
+    rate_limit: Optional[float] = None
+    rate_burst: float = 64.0
+    max_frame: int = DEFAULT_MAX_FRAME
+    retry_after_ms: float = 50.0
+
+    def __post_init__(self):
+        if self.admission not in ("scored", "fifo"):
+            raise ValueError(f"admission {self.admission!r} not in "
+                             "('scored', 'fifo')")
+
+
+class _ServiceMetrics:
+    """Service metric families (same idempotent-registration idiom as
+    the engine's ``_EngineMetrics``; catalog in docs/observability.md)."""
+
+    def __init__(self, reg):
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        self.requests = c("service_requests_total",
+                          "wire requests by op and response status",
+                          labels=("op", "status"))
+        self.request_ms = h("service_request_ms",
+                            "server-side latency, ingress to response",
+                            labels=("op",))
+        self.queue_depth = g("service_queue_depth",
+                             "requests waiting for the engine worker")
+        self.admit_depth = g("service_admission_queue_depth",
+                             "opens parked by the scored admission "
+                             "controller")
+        self.conns = g("service_connections", "open client connections")
+        self.batch_ops = h("service_batch_ops",
+                           "requests coalesced per engine-worker batch")
+        self.bad_frames = c("service_bad_frames_total",
+                            "malformed frames rejected by the codec")
+        self.truncated = c("service_truncated_conns_total",
+                           "connections that vanished mid-frame")
+
+
+class _Stop:
+    pass
+
+
+_STOP = _Stop()
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+class SessionService:
+    """One engine behind an asyncio TCP front door.
+
+    The server runs on a dedicated thread (own event loop), so tests
+    and benchmarks drive it from ordinary synchronous code::
+
+        with SessionService(engine) as svc:
+            c = ServiceClient(*svc.address)
+            sid = c.open("tenant-a")
+            c.append(sid, data)
+            hist = c.query(sid)
+
+    ``obs=None`` shares the ENGINE's observability bundle so service
+    and engine metrics land in one registry.
+    """
+
+    def __init__(self, engine, config: Optional[ServiceConfig] = None, *,
+                 obs=None, clock=time.monotonic):
+        self.engine = engine
+        self.cfg = config or ServiceConfig()
+        self.obs = engine.obs if obs is None else obs_lib.resolve(obs)
+        self._mx = _ServiceMetrics(self.obs.registry) \
+            if self.obs.enabled else None
+        self._clock = clock
+        self._buckets: Dict[str, TokenBucket] = {}
+        self._sid_tenant: Dict[int, str] = {}
+        # (meta, future, t0) of opens parked by the scored controller
+        self._held: List[Tuple[Dict[str, Any], asyncio.Future, float]] = []
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional[asyncio.Queue] = None
+        self._worker_task: Optional[asyncio.Task] = None
+        # the single writer: every engine touch goes through this thread
+        self._eng_exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="svc-engine")
+        self._addr: Optional[Tuple[str, int]] = None
+        self._conn_seq = 0
+        self._n_conns = 0
+        self._started = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        if self._addr is None:
+            raise RuntimeError("service not started; call start() first")
+        return self._addr
+
+    def start(self) -> Tuple[str, int]:
+        if self._started:
+            return self.address
+        ready: "threading.Event" = threading.Event()
+        boot: Dict[str, Any] = {}
+
+        def _run():
+            loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(loop)
+            self._loop = loop
+            try:
+                boot["addr"] = loop.run_until_complete(self._boot())
+            except Exception as e:             # pragma: no cover - bind error
+                boot["exc"] = e
+                ready.set()
+                return
+            ready.set()
+            loop.run_forever()
+            # drain cancelled tasks so the loop closes clean
+            pending = asyncio.all_tasks(loop)
+            for t in pending:
+                t.cancel()
+            if pending:
+                loop.run_until_complete(
+                    asyncio.gather(*pending, return_exceptions=True))
+            loop.close()
+
+        self._thread = threading.Thread(target=_run, name="svc-loop",
+                                        daemon=True)
+        self._thread.start()
+        ready.wait()
+        if "exc" in boot:
+            raise boot["exc"]
+        self._addr = boot["addr"]
+        self._started = True
+        return self._addr
+
+    async def _boot(self) -> Tuple[str, int]:
+        self._queue = asyncio.Queue(maxsize=0)   # bounded by max_pending
+        self._worker_task = asyncio.get_running_loop().create_task(
+            self._worker())
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.cfg.host, self.cfg.port)
+        host, port = self._server.sockets[0].getsockname()[:2]
+        return host, port
+
+    def stop(self) -> None:
+        """Graceful stop: drain queued requests through the engine,
+        reject still-parked opens with ``ERR_BACKPRESSURE``, close the
+        listener, stop the loop."""
+        if not self._started or self._loop is None:
+            return
+        fut = asyncio.run_coroutine_threadsafe(self._shutdown(), self._loop)
+        fut.result(timeout=60)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        if self._thread is not None:
+            self._thread.join(timeout=60)
+        self._eng_exec.shutdown(wait=True)
+        self._started = False
+
+    async def _shutdown(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        await self._queue.put((_STOP, None, None))
+        if self._worker_task is not None:
+            await self._worker_task
+        held, self._held = self._held, []
+        for meta, fut, _t0 in held:
+            if not fut.done():
+                fut.set_result(self._err_response(
+                    meta, BackpressureError(
+                        "service shutting down with the open still parked "
+                        "in the admission queue",
+                        retry_after_ms=self.cfg.retry_after_ms)))
+        if held:
+            # give the dispatchers one breath to flush the rejection
+            # frames out before the loop stops and cancels them
+            await asyncio.sleep(0.05)
+
+    def __enter__(self) -> "SessionService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- ingress -----------------------------------------------------------
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        self._conn_seq += 1
+        cid = self._conn_seq
+        self._n_conns += 1
+        if self._mx:
+            self._mx.conns.set(float(self._n_conns))
+        wlock = asyncio.Lock()
+        decoder = FrameDecoder(self.cfg.max_frame)
+        tasks: List[asyncio.Task] = []
+        try:
+            with self.obs.span("svc.conn", cat="service", conn=cid):
+                try:
+                    hello = await reader.readexactly(len(MAGIC))
+                except (asyncio.IncompleteReadError, ConnectionError):
+                    return
+                if hello != MAGIC:
+                    await self._write(writer, wlock, self._err_response(
+                        {}, ProtocolError("bad connection magic")))
+                    if self._mx:
+                        self._mx.bad_frames.inc()
+                    return
+                async with wlock:
+                    writer.write(MAGIC)
+                    await writer.drain()
+                while True:
+                    data = await reader.read(1 << 16)
+                    if not data:
+                        if decoder.buffered and self._mx:
+                            self._mx.truncated.inc()   # died mid-frame
+                        return
+                    try:
+                        decoder.feed(data)
+                        while True:
+                            msg = decoder.next()
+                            if msg is None:
+                                break
+                            t = asyncio.get_running_loop().create_task(
+                                self._dispatch(msg[0], msg[1], writer, wlock))
+                            tasks.append(t)
+                            tasks = [x for x in tasks if not x.done()]
+                    except ProtocolError as e:
+                        if self._mx:
+                            self._mx.bad_frames.inc()
+                        await self._write(writer, wlock,
+                                          self._err_response({}, e))
+                        return        # no resync point after corruption
+        except ConnectionError:       # client vanished; nothing to answer
+            return
+        finally:
+            for t in tasks:
+                if not t.done():
+                    t.cancel()
+            self._n_conns -= 1
+            if self._mx:
+                self._mx.conns.set(float(self._n_conns))
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):   # pragma: no cover
+                pass
+
+    async def _write(self, writer, wlock, resp) -> None:
+        meta, payload = resp
+        try:
+            async with wlock:
+                writer.write(encode_frame(meta, payload))
+                await writer.drain()
+        except (ConnectionError, OSError):
+            pass      # the op already ran; the client just never hears
+
+    def _tenant_of(self, meta: Dict[str, Any]) -> Optional[str]:
+        if "tenant" in meta:
+            return meta["tenant"]
+        if "sid" in meta:
+            try:
+                return self._sid_tenant.get(int(meta["sid"]))
+            except (TypeError, ValueError):
+                return None
+        return None
+
+    def _rate_check(self, meta: Dict[str, Any]) -> float:
+        """RETRY-AFTER ms if the tenant's bucket is empty, else 0."""
+        if self.cfg.rate_limit is None:
+            return 0.0
+        tenant = self._tenant_of(meta)
+        if tenant is None and meta.get("op") == "open_batch":
+            tenants = meta.get("tenants") or []
+            tenant = tenants[0] if tenants else None
+        if tenant is None:
+            return 0.0
+        b = self._buckets.get(tenant)
+        if b is None:
+            b = self._buckets[tenant] = TokenBucket(
+                self.cfg.rate_limit, self.cfg.rate_burst, self._clock)
+        cost = (len(meta.get("tenants") or ())
+                if meta.get("op") == "open_batch" else 1.0) or 1.0
+        return b.take(cost)
+
+    async def _dispatch(self, meta: Dict[str, Any], payload: bytes,
+                        writer, wlock) -> None:
+        t0 = time.perf_counter()
+        op = meta.get("op")
+        if op not in OPS:
+            await self._finish(writer, wlock, meta, t0, self._err_response(
+                meta, UnknownOpError(f"unknown op {op!r}; this service "
+                                     f"serves {OPS}")))
+            return
+        retry = self._rate_check(meta)
+        if retry > 0.0:
+            await self._finish(writer, wlock, meta, t0, self._err_response(
+                meta, RateLimitedError(
+                    f"tenant {self._tenant_of(meta)!r} is over its "
+                    f"{self.cfg.rate_limit}/s rate limit",
+                    retry_after_ms=retry)))
+            return
+        if self._queue.qsize() >= self.cfg.max_pending:
+            await self._finish(writer, wlock, meta, t0, self._err_response(
+                meta, BackpressureError(
+                    f"service request queue at max_pending="
+                    f"{self.cfg.max_pending}",
+                    retry_after_ms=self.cfg.retry_after_ms)))
+            return
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        await self._queue.put((meta, payload, fut))
+        try:
+            resp = await fut
+        except asyncio.CancelledError:
+            return          # connection died; the op may still run
+        await self._finish(writer, wlock, meta, t0, resp)
+
+    async def _finish(self, writer, wlock, meta, t0, resp) -> None:
+        rmeta, _ = resp
+        if self._mx:
+            op = meta.get("op") or "_frame"
+            code = err.EXC_BY_STATUS.get(rmeta.get("status", 0))
+            self._mx.requests.inc(op=op,
+                                  status=code.code if code else "OK")
+            self._mx.request_ms.observe(
+                (time.perf_counter() - t0) * 1e3, op=op)
+        await self._write(writer, wlock, resp)
+
+    # -- the single-writer worker -----------------------------------------
+
+    async def _worker(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = await self._queue.get()
+            batch = [item]
+            while len(batch) < self.cfg.coalesce_max:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except asyncio.QueueEmpty:
+                    break
+            stop = any(x[0] is _STOP for x in batch)
+            batch = [x for x in batch if x[0] is not _STOP]
+            if self._mx:
+                self._mx.queue_depth.set(float(self._queue.qsize()))
+                if batch:
+                    self._mx.batch_ops.observe(float(len(batch)))
+            if batch:
+                done = await loop.run_in_executor(
+                    self._eng_exec, self._run_batch, batch)
+                for fut, resp in done:
+                    if not fut.done():
+                        fut.set_result(resp)
+            if stop:
+                return
+
+    def _err_response(self, meta: Dict[str, Any],
+                      e: BaseException) -> Tuple[Dict[str, Any], bytes]:
+        code = err.EXC_BY_STATUS.get(status_of(e))
+        resp: Dict[str, Any] = {
+            "id": meta.get("id"), "status": status_of(e),
+            "code": code.code if code else "ERR_INTERNAL", "error": str(e)}
+        if isinstance(e, err.RetryableError):
+            resp["retry_after_ms"] = round(e.retry_after_ms, 3)
+        return resp, b""
+
+    def _ok(self, meta: Dict[str, Any], extra: Dict[str, Any],
+            payload: bytes = b"") -> Tuple[Dict[str, Any], bytes]:
+        out = {"id": meta.get("id"), "status": err.OK, "code": "OK"}
+        out.update(extra)
+        return out, payload
+
+    def _run_batch(self, batch):
+        """Engine-thread entry: apply one coalesced batch in arrival
+        order, then let the admission controller hand freed slots to
+        parked opens.  Returns [(future, response)] resolved by the
+        event loop."""
+        out = []
+        with self.obs.span("svc.batch", cat="service", n=len(batch)):
+            # batched flush coalescing: >= 2 queries in one batch share a
+            # single engine-wide forced flush; each query's own
+            # per-session flush then only covers appends later in the
+            # batch (answers are unchanged -- chunking invariance).
+            qsids = set()
+            for meta, _p, _f in batch:
+                if meta.get("op") == "query":
+                    s = self.engine.sessions.get(meta.get("sid"))
+                    if s is not None and not s.closed and s.slot is not None:
+                        qsids.add(int(meta["sid"]))
+            if len(qsids) > 1:
+                try:
+                    self.engine.flush(force=tuple(sorted(qsids)))
+                except Exception:       # per-request handling reports it
+                    pass
+            i = 0
+            while i < len(batch):
+                meta, payload, fut = batch[i]
+                # contiguous FIFO-mode open runs coalesce into ONE
+                # admission storm (the PR-7 batched path), sids in
+                # arrival order; a lone open stays on the plain path
+                if (meta.get("op") == "open"
+                        and self.cfg.admission == "fifo"):
+                    j = i
+                    while (j < len(batch)
+                           and batch[j][0].get("op") == "open"):
+                        j += 1
+                    if j - i < 2:
+                        out.extend(self._apply(meta, payload, fut))
+                        i += 1
+                        continue
+                    run = batch[i:j]
+                    try:
+                        sids = self.engine.open_batch(
+                            [m.get("tenant") for m, _p, _f in run])
+                        for (m, _p, f), sid in zip(run, sids):
+                            self._sid_tenant[sid] = m.get("tenant")
+                            out.append((f, self._ok(m, {"sid": sid})))
+                    except Exception as e:
+                        for m, _p, f in run:
+                            out.append((f, self._err_response(m, e)))
+                    i = j
+                    continue
+                out.extend(self._apply(meta, payload, fut))
+                i += 1
+            out.extend(self._admit_held())
+            if self._mx:
+                self._mx.admit_depth.set(float(len(self._held)))
+        return out
+
+    def _apply(self, meta, payload, fut):
+        """One request against the engine; returns [(future, response)]
+        (possibly empty while a scored open stays parked)."""
+        op = meta.get("op")
+        try:
+            if op == "ping":
+                return [(fut, self._ok(meta, {"pong": True}))]
+            if op == "stats":
+                return [(fut, self._ok(meta, {"stats": self._stats()}))]
+            if op == "open":
+                if self.cfg.admission == "fifo":
+                    sid = self.engine.open(meta.get("tenant"))
+                    self._sid_tenant[sid] = meta.get("tenant")
+                    return [(fut, self._ok(meta, {"sid": sid}))]
+                if not isinstance(meta.get("tenant"), str):
+                    raise UnknownOpError(
+                        f"open needs a string tenant, got "
+                        f"{meta.get('tenant')!r}")
+                if len(self._held) >= self.cfg.admit_queue_cap:
+                    raise BackpressureError(
+                        f"admission queue at admit_queue_cap="
+                        f"{self.cfg.admit_queue_cap}",
+                        retry_after_ms=self.cfg.retry_after_ms)
+                self._held.append((meta, fut, time.perf_counter()))
+                return []           # resolved by _admit_held
+            if op == "open_batch":
+                tenants = meta.get("tenants") or []
+                first = None
+                if meta.get("first") is not None:
+                    first, off = [], 0
+                    for am in meta["first"]:
+                        if am is None:
+                            first.append(None)
+                            continue
+                        n = (np.dtype(am["dtype"]).itemsize
+                             * int(np.prod([int(d) for d in am["shape"]],
+                                           dtype=np.int64)))
+                        first.append(_arr_from(am, payload[off:off + n]))
+                        off += n
+                sids = self.engine.open_batch(tenants, first=first)
+                for sid, tenant in zip(sids, tenants):
+                    self._sid_tenant[sid] = tenant
+                return [(fut, self._ok(meta, {"sids": list(sids)}))]
+            if op == "append":
+                arr = _arr_from(meta.get("array") or {}, payload)
+                self.engine.append(int(meta["sid"]), arr)
+                return [(fut, self._ok(meta, {"n": int(len(arr))}))]
+            if op == "query":
+                got = self.engine.query(int(meta["sid"]),
+                                        scope=meta.get("scope", "session"))
+                a = np.asarray(got)
+                return [(fut, self._ok(meta, {"array": _arr_meta(a)},
+                                       a.tobytes()))]
+            if op == "close":
+                merged, stats = self.engine.close(int(meta["sid"]))
+                a = np.asarray(merged)
+                return [(fut, self._ok(
+                    meta, {"array": _arr_meta(a), "session_stats": stats},
+                    a.tobytes()))]
+            raise UnknownOpError(f"unknown op {op!r}")   # pragma: no cover
+        except Exception as e:
+            return [(fut, self._err_response(meta, e))]
+
+    # -- Eq. 2 admission controller ---------------------------------------
+
+    def _tenant_load(self) -> Tuple[Dict[str, int], Dict[str, int]]:
+        occ: Dict[str, int] = {}
+        bl: Dict[str, int] = {}
+        for s in self.engine.sessions.values():
+            if s.closed:
+                continue
+            occ[s.tenant] = occ.get(s.tenant, 0) + 1   # slot held OR queued
+            bl[s.tenant] = bl.get(s.tenant, 0) + int(s.backlog_tuples)
+        return occ, bl
+
+    def _admit_held(self):
+        """Hand free slots to parked opens by Eq. 2 score (engine
+        thread).  Never overfills: engine-queued sessions (the bulk
+        ``open_batch`` FIFO path) count against free capacity."""
+        if not self._held:
+            return []
+        free = len(self.engine._free_slots) - len(self.engine._queue)
+        if free <= 0:
+            return []
+        occ_map, bl_map = self._tenant_load()
+        tenants: List[str] = []
+        tidx: Dict[str, int] = {}
+        pend = []
+        for meta, _fut, _t0 in self._held:
+            t = meta["tenant"]
+            if t not in tidx:
+                tidx[t] = len(tenants)
+                tenants.append(t)
+            pend.append(tidx[t])
+        order = scheduler.plan_admission(
+            [bl_map.get(t, 0) for t in tenants],
+            [occ_map.get(t, 0) for t in tenants], free, pend)
+        out, taken = [], set(int(i) for i in order)
+        winners = [self._held[int(i)] for i in order]
+        try:
+            if len(winners) >= 2:
+                # a storm admitting together rides the PR-7 batched
+                # lane-init path, in the plan's order (capacity was
+                # checked, so none of these queue in-engine)
+                sids = self.engine.open_batch(
+                    [m["tenant"] for m, _f, _t in winners])
+            else:
+                sids = [self.engine.open(m["tenant"])
+                        for m, _f, _t in winners]
+            for (meta, fut, _t0), sid in zip(winners, sids):
+                self._sid_tenant[sid] = meta["tenant"]
+                out.append((fut, self._ok(meta, {"sid": sid})))
+        except Exception as e:         # pragma: no cover - capacity raced
+            for meta, fut, _t0 in winners:
+                out.append((fut, self._err_response(meta, e)))
+        self._held = [h for j, h in enumerate(self._held) if j not in taken]
+        return out
+
+    def _stats(self) -> Dict[str, Any]:
+        eng = self.engine
+        totals = eng.telemetry_record(validate=False)["extra"]["totals"]
+        return {
+            "open_sessions": sum(not s.closed
+                                 for s in eng.sessions.values()),
+            "free_slots": len(eng._free_slots),
+            "engine_queue": len(eng._queue),
+            "held_opens": len(self._held),
+            "admission": self.cfg.admission,
+            "totals": totals,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Clients
+# ---------------------------------------------------------------------------
+
+def _raise_for(meta: Dict[str, Any]) -> None:
+    status = int(meta.get("status", err.ERR_INTERNAL))
+    if status != err.OK:
+        raise err.error_for_status(status, meta.get("error", "remote error"),
+                                   meta.get("retry_after_ms"))
+
+
+class ServiceClient:
+    """Blocking wire client (tests, tooling): one request in flight at a
+    time, taxonomy errors re-raised exactly as the engine raises them."""
+
+    def __init__(self, host: str, port: int, *, timeout: float = 60.0,
+                 max_frame: int = DEFAULT_MAX_FRAME):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._decoder = FrameDecoder(max_frame)
+        self._seq = 0
+        self._sock.sendall(MAGIC)
+        banner = self._recv_exact(len(MAGIC))
+        if banner != MAGIC:
+            raise ProtocolError(f"bad server banner {banner!r}")
+
+    def _recv_exact(self, n: int) -> bytes:
+        buf = b""
+        while len(buf) < n:
+            got = self._sock.recv(n - len(buf))
+            if not got:
+                raise ConnectionError("server closed the connection")
+            buf += got
+        return buf
+
+    def send_raw(self, data: bytes) -> None:
+        """Escape hatch for the protocol-fuzz tests: ship raw bytes."""
+        self._sock.sendall(data)
+
+    def read_response(self) -> Tuple[Dict[str, Any], bytes]:
+        """The next whole response frame (fuzz tests read rejections)."""
+        while True:
+            msg = self._decoder.next()
+            if msg is not None:
+                return msg
+            got = self._sock.recv(1 << 16)
+            if not got:
+                raise ConnectionError("server closed the connection")
+            self._decoder.feed(got)
+
+    def request(self, meta: Dict[str, Any],
+                payload: bytes = b"") -> Tuple[Dict[str, Any], bytes]:
+        self._seq += 1
+        meta = dict(meta, id=self._seq)
+        self._sock.sendall(encode_frame(meta, payload))
+        rmeta, rpayload = self.read_response()
+        _raise_for(rmeta)
+        return rmeta, rpayload
+
+    # -- ops
+    def ping(self) -> bool:
+        return bool(self.request({"op": "ping"})[0].get("pong"))
+
+    def stats(self) -> Dict[str, Any]:
+        return self.request({"op": "stats"})[0]["stats"]
+
+    def open(self, tenant: str) -> int:
+        return int(self.request({"op": "open", "tenant": tenant})[0]["sid"])
+
+    def open_batch(self, tenants: List[str],
+                   first: Optional[List[Optional[np.ndarray]]] = None
+                   ) -> List[int]:
+        meta: Dict[str, Any] = {"op": "open_batch", "tenants": list(tenants)}
+        payload = b""
+        if first is not None:
+            metas: List[Optional[Dict[str, Any]]] = []
+            for a in first:
+                if a is None:
+                    metas.append(None)
+                else:
+                    a = np.ascontiguousarray(a)
+                    metas.append(_arr_meta(a))
+                    payload += a.tobytes()
+            meta["first"] = metas
+        return [int(s) for s in self.request(meta, payload)[0]["sids"]]
+
+    def append(self, sid: int, data: np.ndarray) -> int:
+        a = np.ascontiguousarray(data)
+        rmeta, _ = self.request(
+            {"op": "append", "sid": int(sid), "array": _arr_meta(a)},
+            a.tobytes())
+        return int(rmeta["n"])
+
+    def query(self, sid: int, scope: str = "session") -> np.ndarray:
+        rmeta, payload = self.request(
+            {"op": "query", "sid": int(sid), "scope": scope})
+        return _arr_from(rmeta["array"], payload)
+
+    def close(self, sid: int) -> Tuple[np.ndarray, Dict[str, Any]]:
+        rmeta, payload = self.request({"op": "close", "sid": int(sid)})
+        return _arr_from(rmeta["array"], payload), rmeta["session_stats"]
+
+    def close_conn(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:    # pragma: no cover
+            pass
+
+    def __enter__(self) -> "ServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close_conn()
+
+
+class AsyncServiceClient:
+    """Pipelining asyncio client (the open-loop load generator): many
+    requests in flight per connection, responses matched by id."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter,
+                 max_frame: int = DEFAULT_MAX_FRAME):
+        self._reader, self._writer = reader, writer
+        self._decoder = FrameDecoder(max_frame)
+        self._seq = 0
+        self._pending: Dict[int, asyncio.Future] = {}
+        self._pump: Optional[asyncio.Task] = None
+
+    @classmethod
+    async def connect(cls, host: str, port: int,
+                      max_frame: int = DEFAULT_MAX_FRAME
+                      ) -> "AsyncServiceClient":
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(MAGIC)
+        await writer.drain()
+        banner = await reader.readexactly(len(MAGIC))
+        if banner != MAGIC:
+            raise ProtocolError(f"bad server banner {banner!r}")
+        self = cls(reader, writer, max_frame)
+        self._pump = asyncio.get_running_loop().create_task(self._read_loop())
+        return self
+
+    async def _read_loop(self) -> None:
+        try:
+            while True:
+                data = await self._reader.read(1 << 16)
+                if not data:
+                    raise ConnectionError("server closed the connection")
+                self._decoder.feed(data)
+                while True:
+                    msg = self._decoder.next()
+                    if msg is None:
+                        break
+                    rid = msg[0].get("id")
+                    fut = self._pending.pop(rid, None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(msg)
+        except (ConnectionError, ProtocolError, asyncio.CancelledError) as e:
+            for fut in self._pending.values():
+                if not fut.done():
+                    fut.set_exception(
+                        e if not isinstance(e, asyncio.CancelledError)
+                        else ConnectionError("client closed"))
+            self._pending.clear()
+
+    async def request(self, meta: Dict[str, Any], payload: bytes = b""
+                      ) -> Tuple[Dict[str, Any], bytes]:
+        self._seq += 1
+        rid = self._seq
+        meta = dict(meta, id=rid)
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        self._pending[rid] = fut
+        self._writer.write(encode_frame(meta, payload))
+        await self._writer.drain()
+        rmeta, rpayload = await fut
+        _raise_for(rmeta)
+        return rmeta, rpayload
+
+    # -- ops
+    async def open(self, tenant: str) -> int:
+        rmeta, _ = await self.request({"op": "open", "tenant": tenant})
+        return int(rmeta["sid"])
+
+    async def append(self, sid: int, data: np.ndarray) -> int:
+        a = np.ascontiguousarray(data)
+        rmeta, _ = await self.request(
+            {"op": "append", "sid": int(sid), "array": _arr_meta(a)},
+            a.tobytes())
+        return int(rmeta["n"])
+
+    async def query(self, sid: int, scope: str = "session") -> np.ndarray:
+        rmeta, payload = await self.request(
+            {"op": "query", "sid": int(sid), "scope": scope})
+        return _arr_from(rmeta["array"], payload)
+
+    async def close(self, sid: int) -> np.ndarray:
+        rmeta, payload = await self.request({"op": "close", "sid": int(sid)})
+        return _arr_from(rmeta["array"], payload)
+
+    async def stats(self) -> Dict[str, Any]:
+        rmeta, _ = await self.request({"op": "stats"})
+        return rmeta["stats"]
+
+    async def aclose(self) -> None:
+        if self._pump is not None:
+            self._pump.cancel()
+        try:
+            self._writer.close()
+            await self._writer.wait_closed()
+        except (ConnectionError, OSError):    # pragma: no cover
+            pass

@@ -135,6 +135,8 @@ from repro.core import compilemon
 from repro.core import executor as core_executor
 from repro.core import scheduler
 from repro.data.pipeline import pad_tail_chunk
+from repro.serve.errors import (ClosedSessionError, QueuedSessionError,
+                                ShapeMismatchError, UnknownSessionError)
 from repro import obs as obs_lib
 
 TELEMETRY_SCHEMA_VERSION = 1   # mirrors benchmarks.common.SCHEMA_VERSION
@@ -545,8 +547,9 @@ class SessionEngine:
                 self.warmup()        # deferred startup warmup: the tuple
                                      # shape is now known
         elif data.shape[1:] != self._feat_shape:
-            raise ValueError(f"append shape {data.shape[1:]} != engine tuple "
-                             f"shape {self._feat_shape}")
+            raise ShapeMismatchError(
+                f"append shape {data.shape[1:]} != engine tuple "
+                f"shape {self._feat_shape}")
         if len(data):
             with self.obs.span("engine.append", cat="session",
                                sid=sid, n=len(data)):
@@ -573,7 +576,7 @@ class SessionEngine:
         pre-latency-tiering behavior."""
         s = self._session(sid)
         if s.slot is None:
-            raise RuntimeError(
+            raise QueuedSessionError(
                 f"session {sid} is queued (all {self.primary_slots} primary "
                 "slots busy); nothing has run yet -- close another session "
                 "to admit it before querying")
@@ -595,7 +598,7 @@ class SessionEngine:
         buffered data unseen would silently discard it)."""
         s = self._session(sid)
         if s.slot is None and s.backlog_tuples:
-            raise RuntimeError(
+            raise QueuedSessionError(
                 f"session {sid} is queued with {s.backlog_tuples} buffered "
                 "tuples; close another session to admit it first (refusing "
                 "to discard data)")
@@ -714,7 +717,7 @@ class SessionEngine:
         t0 = time.perf_counter()
         s = self._session(sid)
         if s.slot is None:
-            raise RuntimeError(
+            raise QueuedSessionError(
                 f"session {sid} is queued (all {self.primary_slots} primary "
                 "slots busy); nothing has run yet -- close another session "
                 "to admit it first")
@@ -1010,7 +1013,14 @@ class SessionEngine:
         [lanes, width, chunk, feat] batch the vmapped scan takes --
         ``offset`` selects the chunk window ``[offset, offset+width)``
         of each lane (the AOT segment loop); unfilled rows stay
-        all-masked zero padding (exact no-ops)."""
+        all-masked zero padding (exact no-ops).
+
+        Returns HOST (numpy) arrays on purpose: jit and AOT executables
+        take them directly, and the distributed flush path device_puts
+        host memory straight to each shard -- resharding an
+        already-device-resident array instead goes through jax's
+        jit(_multi_slice), which compiles once per (shape, width) and
+        would show up as steady-state retraces."""
         c = self.chunk_size
         feat = self._feat_shape or (1,)
         chunks = np.zeros((len(lane_chunks), width, c, *feat),
@@ -1022,7 +1032,7 @@ class SessionEngine:
             for k, (ch, m) in enumerate(zip(row_c, row_m)):
                 chunks[ln, k] = ch
                 mask[ln, k] = m
-        return jnp.asarray(chunks), jnp.asarray(mask)
+        return chunks, mask
 
     def _apply_exec_stats(self, stats, row_sessions, row_counts):
         """Fold the scan's per-(lane, chunk) ExecStats into each row's
@@ -1365,13 +1375,13 @@ class SessionEngine:
         s = self.sessions.get(sid)
         if s is None:
             n_open = sum(not x.closed for x in self.sessions.values())
-            raise ValueError(
+            raise UnknownSessionError(
                 f"unknown session id {sid}: this engine has issued "
                 f"{self._next_sid} sid(s), {n_open} open "
                 f"({len(self._queue)} of them queued) -- append/query/"
                 "close need a sid returned by open()/open_batch()")
         if s.closed and not allow_closed:
-            raise ValueError(
+            raise ClosedSessionError(
                 f"session {sid} (tenant {s.tenant!r}) is closed; a "
                 "closed sid cannot be reused -- open() a new session")
         return s

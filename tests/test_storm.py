@@ -54,6 +54,10 @@ if str(REPO) not in sys.path:
 from repro.apps import histo
 from repro.serve import SessionEngine
 from repro.serve.durability import DurableSessionEngine
+from repro.serve.errors import (ClosedSessionError, QueuedSessionError,
+                                UnknownSessionError)
+from repro.serve.service import (ServiceClient, ServiceConfig,
+                                 SessionService, encode_frame)
 
 BINS, DOMAIN, M, CHUNK = 32, 1 << 12, 4, 64
 PRIMARY, SECONDARY, AOT = 2, 1, 2
@@ -105,9 +109,9 @@ class OracleModel:
     def _get(self, sid: int, allow_closed: bool = False) -> Dict[str, Any]:
         s = self.sessions.get(sid)
         if s is None:
-            raise ValueError(f"unknown session id {sid}")
+            raise UnknownSessionError(f"unknown session id {sid}")
         if s["closed"] and not allow_closed:
-            raise ValueError(f"session {sid} is closed")
+            raise ClosedSessionError(f"session {sid} is closed")
         return s
 
     # -- ops (mirror the engine API)
@@ -152,13 +156,13 @@ class OracleModel:
     def flush_session(self, sid: int) -> None:
         s = self._get(sid)
         if s["slot"] is None:
-            raise RuntimeError(f"session {sid} is queued")
+            raise QueuedSessionError(f"session {sid} is queued")
         s["pending"] = 0
 
     def query(self, sid: int, scope: str = "session") -> np.ndarray:
         s = self._get(sid)
         if s["slot"] is None:
-            raise RuntimeError(f"session {sid} is queued")
+            raise QueuedSessionError(f"session {sid} is queued")
         if scope == "engine":
             self.flush(force=(sid,))
         else:
@@ -168,7 +172,7 @@ class OracleModel:
     def close(self, sid: int) -> np.ndarray:
         s = self._get(sid)
         if s["slot"] is None and s["pending"]:
-            raise RuntimeError(f"session {sid} is queued with data")
+            raise QueuedSessionError(f"session {sid} is queued with data")
         out = _oracle(s["keys"])
         s["pending"] = 0
         if s["slot"] is not None:
@@ -187,13 +191,27 @@ class OracleModel:
 # ---------------------------------------------------------------------------
 
 class DifferentialHarness:
-    """One op stream, two implementations, invariants after every op."""
+    """One op stream, two implementations, invariants after every op.
+
+    With ``network=True`` (ISSUE 9) every session op travels through a
+    LIVE in-process ``SessionService`` endpoint instead of calling the
+    engine directly: two concurrent client connections alternate
+    request-for-request, the wire clients re-raise the exact taxonomy
+    classes the engine raises (so ``_both``'s error parity holds
+    unchanged), and ``op_net_drop`` injects a forced disconnect
+    mid-append -- a half-frame then a dead socket, which must never
+    touch engine state.  The service runs ``admission="fifo"`` so the
+    oracle's FIFO slot model stays exact.  ``flush``/``flush_session``
+    are engine-side maintenance (not wire ops) and keep calling the
+    engine directly -- safe, because the blocking clients return only
+    after the service's single-writer worker went idle."""
 
     def __init__(self, *, mesh1: bool = False, durable: bool = False,
-                 workdir=None):
+                 workdir=None, network: bool = False):
         self.spec = _spec()
         self.durable = durable
         self.workdir = workdir
+        self.network = network
         mesh = jax.make_mesh((1,), ("lanes",)) if mesh1 else None
         self.mesh = mesh
         kw = dict(num_pri=M, num_sec=2, chunk_size=CHUNK,
@@ -205,11 +223,39 @@ class DifferentialHarness:
                                             checkpoint_every=2, keep=2, **kw)
         else:
             self.eng = SessionEngine(self.spec, **kw)
+        self.svc = None
+        self.clients: List[ServiceClient] = []
+        self._op_i = 0
+        if network:
+            self._start_service()
         self.model = OracleModel(PRIMARY, CHUNK)
         self.warmed_at: Optional[int] = None   # telemetry row index where
         self.n_recovers = 0                    # the AOT table became warm
 
+    def _start_service(self) -> None:
+        self.svc = SessionService(self.eng, ServiceConfig(admission="fifo"))
+        self.svc.start()
+        self.clients = [ServiceClient(*self.svc.address) for _ in range(2)]
+
+    def _stop_service(self) -> None:
+        if self.svc is None:
+            return
+        for c in self.clients:
+            c.close_conn()
+        self.clients = []
+        self.svc.stop()
+        self.svc = None
+
+    def _ep(self):
+        """The endpoint under test: the engine, or (network mode) one of
+        two concurrent wire clients, alternating per op."""
+        if not self.network:
+            return self.eng
+        self._op_i += 1
+        return self.clients[self._op_i % len(self.clients)]
+
     def shutdown(self) -> None:
+        self._stop_service()
         if isinstance(self.eng, DurableSessionEngine):
             self.eng.shutdown()
 
@@ -231,15 +277,17 @@ class DifferentialHarness:
 
     # -- ops
     def op_open(self, tenant: str) -> Optional[int]:
-        got, want = self._both(lambda: self.eng.open(tenant),
+        ep = self._ep()
+        got, want = self._both(lambda: ep.open(tenant),
                                lambda: self.model.open(tenant))
         assert got == want
         return got
 
     def op_open_batch(self, tenants: List[str],
                       first: Optional[List[Optional[np.ndarray]]]):
+        ep = self._ep()
         got, want = self._both(
-            lambda: self.eng.open_batch(tenants, first=first),
+            lambda: ep.open_batch(tenants, first=first),
             lambda: self.model.open_batch(list(tenants), first))
         assert got == want
         row = self.eng._telemetry[-1]
@@ -252,20 +300,39 @@ class DifferentialHarness:
         return got
 
     def op_append(self, sid: int, data: np.ndarray) -> None:
-        self._both(lambda: self.eng.append(sid, data),
+        ep = self._ep()
+        self._both(lambda: ep.append(sid, data),
                    lambda: self.model.append(sid, data))
 
     def op_query(self, sid: int, scope: str = "session") -> None:
-        got, want = self._both(lambda: self.eng.query(sid, scope=scope),
+        ep = self._ep()
+        got, want = self._both(lambda: ep.query(sid, scope=scope),
                                lambda: self.model.query(sid, scope))
         if want is not None:
             np.testing.assert_array_equal(np.asarray(got), want)
 
     def op_close(self, sid: int) -> None:
-        got, want = self._both(lambda: self.eng.close(sid),
+        ep = self._ep()
+        got, want = self._both(lambda: ep.close(sid),
                                lambda: self.model.close(sid))
         if want is not None:
             np.testing.assert_array_equal(np.asarray(got[0]), want)
+
+    def op_net_drop(self, sid: int, data: np.ndarray) -> None:
+        """Forced disconnect mid-append: a raw connection ships HALF of
+        a well-formed append frame and dies.  No complete frame ever
+        reached the codec, so neither implementation moves -- the next
+        ``check()`` proves the engine bit-identical to the model."""
+        assert self.network
+        a = np.ascontiguousarray(data)
+        frame = encode_frame(
+            {"op": "append", "sid": int(sid), "id": 1,
+             "array": {"dtype": a.dtype.str, "shape": list(a.shape)}},
+            a.tobytes())
+        raw = ServiceClient(*self.svc.address)
+        raw.send_raw(frame[:max(9, len(frame) // 2)])
+        raw.close_conn()
+        self.check()
 
     def op_flush(self) -> None:
         self._both(lambda: self.eng.flush(), lambda: self.model.flush())
@@ -280,9 +347,12 @@ class DifferentialHarness:
         disk; the model keeps running untouched -- a recovered engine
         must be indistinguishable from one that never crashed."""
         assert self.durable
-        self.eng.shutdown()
+        self._stop_service()           # network mode: the front door dies
+        self.eng.shutdown()            # with the process it fronted
         self.eng = SessionEngine.recover(self.spec, self.workdir,
                                          mesh=self.mesh)
+        if self.network:               # ...and a NEW service fronts the
+            self._start_service()      # recovered engine
         assert self.eng.recovery_info["replay_anomalies"] == 0, \
             self.eng.recovery_info
         self.n_recovers += 1
@@ -354,6 +424,8 @@ def _random_walk(h: DifferentialHarness, seed: int, n_ops: int,
            "flush", "flush_session"]
     if h.durable:
         ops.append("recover")
+    if h.network:
+        ops.append("net_drop")
     counts = {op: 0 for op in ops}
     for step in range(n_ops):
         op = ops[rng.integers(len(ops))]
@@ -390,23 +462,83 @@ def _random_walk(h: DifferentialHarness, seed: int, n_ops: int,
             h.op_flush_session(_known_sid(rng, h))
         elif op == "recover":
             h.op_recover()
+        elif op == "net_drop":
+            h.op_net_drop(_known_sid(rng, h),
+                          _mk_data(int(rng.integers(1 << 30)),
+                                   int(rng.integers(1, 2 * CHUNK))))
     return counts
 
 
-@pytest.mark.parametrize("mode", ["local_durable", "mesh1"])
+@pytest.mark.parametrize("mode", ["local_durable", "mesh1", "service"])
 def test_random_walk_differential(mode, tmp_path):
     """100 random ops against the numpy oracle, invariants after every
     one -- the hypothesis-free differential net (local+durable engine
-    with mid-walk recoveries, and the mesh-of-1 engine)."""
-    durable = mode == "local_durable"
+    with mid-walk recoveries, the mesh-of-1 engine, and the network
+    service endpoint with forced mid-append disconnects and recovery
+    ACROSS a service restart)."""
+    durable = mode in ("local_durable", "service")
     h = DifferentialHarness(mesh1=mode == "mesh1", durable=durable,
-                            workdir=tmp_path / "d" if durable else None)
+                            workdir=tmp_path / "d" if durable else None,
+                            network=mode == "service")
     try:
         counts = _random_walk(h, seed=20260808, n_ops=100)
         # the walk must actually exercise the storm + recovery paths
         assert counts["open_batch"] >= 5
         if durable:
             assert counts["recover"] >= 1 and h.n_recovers >= 1
+        if mode == "service":
+            # ...and the wire-specific rules: forced disconnects landed,
+            # and both client connections carried traffic
+            assert counts["net_drop"] >= 1
+            assert h._op_i > 2
+    finally:
+        h.shutdown()
+
+
+def test_service_concurrent_clients_bit_exact():
+    """TRUE concurrency through the front door: two clients fire
+    appends/queries at two sessions simultaneously from two threads.
+    The single-writer worker serializes them; appends commute, so the
+    engine must land bit-exact on the oracle regardless of arrival
+    order."""
+    import threading
+
+    h = DifferentialHarness(network=True)
+    try:
+        sid_a = h.op_open("a")
+        sid_b = h.op_open("b")
+        parts = {sid_a: [], sid_b: []}
+        errs = []
+
+        def _pump(cli, sid, seed):
+            try:
+                for i in range(8):
+                    d = _mk_data(seed + i, int(17 + 13 * i) % (2 * CHUNK))
+                    cli.append(sid, d)
+                    parts[sid].append(d[:, 0])
+                    cli.query(sid)     # interleaved reads race the peer
+            except Exception as e:     # pragma: no cover - must not happen
+                errs.append(e)
+
+        t1 = threading.Thread(target=_pump,
+                              args=(h.clients[0], sid_a, 1000))
+        t2 = threading.Thread(target=_pump,
+                              args=(h.clients[1], sid_b, 2000))
+        t1.start(); t2.start()
+        t1.join(timeout=120); t2.join(timeout=120)
+        assert not t1.is_alive() and not t2.is_alive()
+        assert errs == []
+        # sync the model with what the threads appended, then the full
+        # invariant sweep + oracle-exact answers
+        for sid in (sid_a, sid_b):
+            s = h.model.sessions[sid]
+            s["keys"].extend(parts[sid])
+            s["pending"] = 0           # each thread's last op is a query
+        h.check()
+        h.op_query(sid_a)
+        h.op_query(sid_b)
+        h.op_close(sid_a)
+        h.op_close(sid_b)
     finally:
         h.shutdown()
 
@@ -459,6 +591,7 @@ if HAVE_HYPOTHESIS:
 
         mesh1 = False
         durable = False
+        network = False
 
         def __init__(self):
             super().__init__()
@@ -466,7 +599,8 @@ if HAVE_HYPOTHESIS:
                 else None
             self.h = DifferentialHarness(
                 mesh1=self.mesh1, durable=self.durable,
-                workdir=self._tmp.name if self._tmp else None)
+                workdir=self._tmp.name if self._tmp else None,
+                network=self.network)
 
         def teardown(self):
             self.h.shutdown()
@@ -521,14 +655,27 @@ if HAVE_HYPOTHESIS:
         def recover(self):
             self.h.op_recover()
 
+        @precondition(lambda self: self.network)
+        @rule(pick=st.integers(0, 63), seed=st.integers(0, 2**31 - 1),
+              n=st.integers(1, 2 * CHUNK))
+        def net_drop(self, pick, seed, n):
+            self.h.op_net_drop(self._sid(pick), _mk_data(seed, n))
+
     class _LocalDurableStorm(_StormMachine):
         durable = True
 
     class _Mesh1Storm(_StormMachine):
         mesh1 = True
 
+    class _ServiceStorm(_StormMachine):
+        # every op through the live wire endpoint, recoveries restart
+        # the service, forced disconnects sprinkled in
+        durable = True
+        network = True
+
     TestStormStatefulLocalDurable = _LocalDurableStorm.TestCase
     TestStormStatefulMesh1 = _Mesh1Storm.TestCase
+    TestStormStatefulService = _ServiceStorm.TestCase
 else:                                    # tier-1 without hypothesis: the
     @pytest.mark.skip(reason="stateful machine needs hypothesis "
                       "(pip install -r requirements-dev.txt); the "
