@@ -1,0 +1,146 @@
+"""Perf-regression detector over two aggregate bench reports.
+
+Diffs the ``summary`` headline blocks of two ``BENCH_results.json``
+files (the shape ``benchmarks.common.write_report`` writes and
+``validate_report`` pins)::
+
+    python benchmarks/compare.py BENCH_baseline.json BENCH_results.json
+    python benchmarks/compare.py old.json new.json --threshold 15
+
+Per bench, per headline key, the change is classified by a direction
+heuristic on the key name (latency-ish keys are lower-better,
+throughput-ish keys higher-better, config-ish keys informational) and
+a worsening beyond ``--threshold`` percent (default 10) is a
+REGRESSION: the exit code is nonzero so a CI step can gate -- or
+soft-warn with ``continue-on-error`` -- on the bench trajectory.  A
+bench that flipped to ``status != ok`` is always a regression; benches
+present on only one side are reported but never fail the diff (smoke
+runs cover a subset).
+
+Zero baselines get the counter rule: for a lower-better key, going
+from 0 to anything positive is a regression regardless of percentage
+(0 -> 2 retraces is infinitely worse, not un-diffable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+# direction heuristics over headline key names, first match wins:
+#   +1 higher is better, -1 lower is better, 0 informational
+_RULES: Tuple[Tuple[Tuple[str, ...], int], ...] = (
+    # config / shape keys: changes are worth seeing, never a regression
+    (("devices", "tenants", "sessions", "peak_concurrent", "seconds",
+      "status", "lanes", "slots", "appends"), 0),
+    # throughput-ish
+    (("qps", "per_s", "per_sec", "throughput", "speedup", "tuples_s",
+      "ops_s"), +1),
+    # latency / overhead / failure-ish
+    (("_ms", "_pct", "stall", "retrace", "dropped", "latency", "_p50",
+      "_p99", "violations", "errors"), -1),
+)
+
+
+def direction(key: str) -> int:
+    k = key.lower()
+    for needles, d in _RULES:
+        if any(n in k for n in needles):
+            return d
+    return 0
+
+
+def _summary(path: Path) -> Dict[str, Dict[str, Any]]:
+    payload = json.loads(path.read_text())
+    if "summary" in payload:
+        return payload["summary"]
+    if "benches" in payload:            # report without a summary block
+        from benchmarks.common import make_summary
+        return make_summary(payload["benches"])
+    raise ValueError(f"{path}: not an aggregate bench report "
+                     "(no 'summary'/'benches' key)")
+
+
+def compare(base: Dict[str, Dict[str, Any]],
+            cur: Dict[str, Dict[str, Any]],
+            threshold_pct: float = 10.0
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) as printable lines."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            notes.append(f"{name}: only in baseline (skipped)")
+            continue
+        if name not in base:
+            notes.append(f"{name}: new bench, no baseline")
+            continue
+        b, c = base[name], cur[name]
+        if c.get("status") != "ok" and b.get("status") == "ok":
+            regressions.append(
+                f"{name}: status {b.get('status')!r} -> "
+                f"{c.get('status')!r}")
+            continue
+        for key in sorted(set(b) & set(c)):
+            bv, cv = b[key], c[key]
+            if (not isinstance(bv, (int, float))
+                    or not isinstance(cv, (int, float))
+                    or isinstance(bv, bool) or isinstance(cv, bool)):
+                continue
+            d = direction(key)
+            if d == 0:
+                if bv != cv:
+                    notes.append(f"{name}.{key}: {bv:g} -> {cv:g} (info)")
+                continue
+            if bv == 0:
+                if d < 0 and cv > 0:
+                    regressions.append(
+                        f"{name}.{key}: 0 -> {cv:g} (lower-better key "
+                        "left zero)")
+                continue
+            pct = (cv - bv) / abs(bv) * 100.0
+            worse = -pct if d > 0 else pct
+            line = (f"{name}.{key}: {bv:g} -> {cv:g} "
+                    f"({pct:+.1f}%, {'higher' if d > 0 else 'lower'}"
+                    "-better)")
+            if worse > threshold_pct:
+                regressions.append(line)
+            elif abs(pct) > threshold_pct:
+                notes.append(line + " [improved]")
+    return regressions, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/compare.py",
+        description="Diff two aggregate bench reports on headline keys; "
+                    "exit 1 on any >threshold%% regression.")
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("current", type=Path)
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="regression threshold in percent (default 10)")
+    args = ap.parse_args(argv)
+    try:
+        base = _summary(args.baseline)
+        cur = _summary(args.current)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare: {e}", file=sys.stderr)
+        return 2
+    regressions, notes = compare(base, cur, args.threshold)
+    for line in notes:
+        print(f"  note  {line}")
+    for line in regressions:
+        print(f"  REGRESSION  {line}")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{args.threshold:g}% (baseline {args.baseline})")
+        return 1
+    print(f"\nno regressions beyond {args.threshold:g}% "
+          f"({len(notes)} note(s), baseline {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

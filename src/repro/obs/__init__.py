@@ -11,7 +11,22 @@ Three pillars, one bundle:
     recovery replay), exported as Chrome/Perfetto ``trace_event`` JSON
     (``SpanTracer``);
   * ``obs.report``   -- ``python -m repro.obs.report`` renders an engine
-    health report from a live engine or an exported snapshot.
+    health report from a live engine, an exported snapshot, or (with
+    ``--url``) a running service's scrape endpoints.
+
+Two service-facing extensions ride on the pillars:
+
+  * ``obs.scrape``   -- ``ScrapeServer``, the stdlib-HTTP sidecar
+    serving ``/metrics`` (Prometheus text), ``/healthz`` and
+    ``/statusz`` from a live process;
+  * ``obs.skew``     -- ``SkewMonitor``, rolling lane-imbalance /
+    Eq.-2 score-spread / grant-churn gauges plus per-tenant e2e latency
+    histograms with SLO-burn counters;
+
+and ``obs.trace`` additionally owns the WIRE trace context
+(``new_trace_context`` / ``adopt_trace``): the ids clients mint into
+the protocol-v1 header's ``trace`` field and servers adopt, so one
+Perfetto timeline follows a request across the socket.
 
 ``Observability`` is the bundle the serving/durability layers thread
 through: one registry + one tracer + one switch.  ``enabled=False``
@@ -44,11 +59,13 @@ from repro.core import compilemon
 from repro.core.compilemon import CompileDelta
 from repro.obs.metrics import (DEFAULT_MS_BUCKETS, Counter, Gauge, Histogram,
                                MetricsRegistry, parse_prometheus)
-from repro.obs.trace import SpanTracer
+from repro.obs.trace import (SpanTracer, adopt_trace, mint_span_id,
+                             mint_trace_id, new_trace_context)
 
 __all__ = ["Counter", "DEFAULT_MS_BUCKETS", "Gauge", "Histogram",
            "MetricsRegistry", "Observability", "Region", "SpanTracer",
-           "get_default", "parse_prometheus", "region"]
+           "adopt_trace", "get_default", "mint_span_id", "mint_trace_id",
+           "new_trace_context", "parse_prometheus", "region"]
 
 
 class Observability:

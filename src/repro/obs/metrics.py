@@ -40,6 +40,7 @@ the single-writer engines here).  Cross-thread exactness is not a goal
 """
 from __future__ import annotations
 
+import bisect
 import re
 import threading
 from typing import Any, Dict, Iterable, List, Optional, Tuple
@@ -81,11 +82,20 @@ class _Family:
         self.samples: Dict[Tuple[str, ...], Any] = {}
 
     def _key(self, kw: Dict[str, Any]) -> Tuple[str, ...]:
-        if tuple(sorted(kw)) != tuple(sorted(self.labels)):
-            raise ValueError(
-                f"{self.name}: got labels {tuple(sorted(kw))}, family "
-                f"declares {tuple(sorted(self.labels))}")
-        return tuple(str(kw[k]) for k in self.labels)
+        # hot path: the engine emits tens of ops per flush, so the
+        # common cases (no labels; exactly the declared labels) must
+        # not pay the sorted-tuple comparison every call
+        if not kw:
+            if not self.labels:
+                return ()
+        elif len(kw) == len(self.labels):
+            try:
+                return tuple(str(kw[k]) for k in self.labels)
+            except KeyError:
+                pass
+        raise ValueError(
+            f"{self.name}: got labels {tuple(sorted(kw))}, family "
+            f"declares {tuple(sorted(self.labels))}")
 
 
 class Counter(_Family):
@@ -148,12 +158,9 @@ class Histogram(_Family):
             st = self.samples[k] = {"counts": [0] * (len(self.buckets) + 1),
                                     "sum": 0.0, "count": 0}
         v = float(v)
-        i = 0
-        for b in self.buckets:          # buckets are few; linear is fine
-            if v <= b:
-                break
-            i += 1
-        st["counts"][i] += 1
+        # first bucket with bound >= v (same containment as the
+        # linear "v <= b" walk, at C speed)
+        st["counts"][bisect.bisect_left(self.buckets, v)] += 1
         st["sum"] += v
         st["count"] += 1
 
@@ -331,3 +338,86 @@ def parse_prometheus(text: str) -> List[Tuple[str, Dict[str, str], float]]:
                              f"{m.group('value')!r}") from e
         samples.append((m.group("name"), labels, value))
     return samples
+
+
+_TYPE_RE = re.compile(r"^#\s*TYPE\s+([a-zA-Z_:][a-zA-Z0-9_:]*)\s+(\w+)")
+
+
+def snapshot_from_prometheus(text: str) -> Dict[str, Any]:
+    """Rebuild a ``MetricsRegistry.snapshot()``-shaped record from
+    scraped Prometheus text -- the inverse direction the live-scrape
+    report path needs (``python -m repro.obs.report --url`` renders a
+    remote registry it never held in-process).  Histogram families are
+    re-assembled from their ``_bucket``/``_sum``/``_count`` expansion
+    (cumulative bucket counts de-cumulated back to per-bucket counts);
+    counters and gauges map straight to rows.  Strict: inherits
+    ``parse_prometheus``'s ValueError on any malformed sample line."""
+    kinds: Dict[str, str] = {}
+    for line in text.splitlines():
+        m = _TYPE_RE.match(line.strip())
+        if m:
+            kinds[m.group(1)] = m.group(2)
+    hist_names = {n for n, k in kinds.items() if k == "histogram"}
+
+    def _base(name: str) -> Optional[Tuple[str, str]]:
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in hist_names:
+                return name[:-len(suffix)], suffix
+        return None
+
+    rows: List[Dict[str, Any]] = []
+    # {base: {"buckets": {le,...}, "series": {lbl: {le: cum}},
+    #         "sum": {lbl: v}, "count": {lbl: v}}}
+    hist: Dict[str, Dict[str, Any]] = {}
+    for name, labels, value in parse_prometheus(text):
+        split = _base(name)
+        if split is None:
+            lbl = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+            rows.append({"metric": name,
+                         "type": kinds.get(name, "untyped"),
+                         "labels": lbl, "value": float(value)})
+            continue
+        base, suffix = split
+        h = hist.setdefault(base, {"buckets": set(), "series": {},
+                                   "sum": {}, "count": {}})
+        bare = {k: v for k, v in labels.items() if k != "le"}
+        lbl = ",".join(f"{k}={bare[k]}" for k in sorted(bare))
+        if suffix == "_bucket":
+            le = labels.get("le", "+Inf")
+            if le != "+Inf":
+                h["buckets"].add(float(le))
+            h["series"].setdefault(lbl, {})[le] = float(value)
+        elif suffix == "_sum":
+            h["sum"][lbl] = float(value)
+        else:
+            h["count"][lbl] = float(value)
+
+    hists: Dict[str, Any] = {}
+    for base in sorted(hist):
+        h = hist[base]
+        buckets = sorted(h["buckets"])
+        series: Dict[str, List[int]] = {}
+        for lbl, cums in sorted(h["series"].items()):
+            counts, prev = [], 0.0
+            for b in buckets:
+                cum = cums.get(repr(b), cums.get(f"{b:g}", prev))
+                counts.append(int(cum - prev))
+                prev = cum
+            total = cums.get("+Inf", h["count"].get(lbl, prev))
+            counts.append(int(total - prev))        # the +Inf bucket
+            series[lbl] = counts
+            rows.append({"metric": base + "_sum", "type": "histogram",
+                         "labels": lbl,
+                         "value": float(h["sum"].get(lbl, 0.0))})
+            rows.append({"metric": base + "_count", "type": "histogram",
+                         "labels": lbl, "value": float(total)})
+        hists[base] = {"buckets": buckets, "series": series}
+
+    return {
+        "schema_version": 1,
+        "bench": "obs_metrics",
+        "title": f"scraped metrics snapshot ({len(rows)} samples)",
+        "status": "ok",
+        "rows": rows,
+        "extra": {"histograms": hists, "families": dict(kinds)},
+    }

@@ -1,7 +1,8 @@
 """Engine health report: render metrics + telemetry as an operator-
 facing text dashboard (DESIGN.md §11, docs/observability.md).
 
-Works from a LIVE engine or from an exported snapshot file::
+Works from a LIVE engine, an exported snapshot file, or a running
+service's scrape endpoints::
 
     # live (in-process)
     from repro.obs import report
@@ -9,6 +10,10 @@ Works from a LIVE engine or from an exported snapshot file::
 
     # exported (what benchmarks/serving_session.py writes)
     python -m repro.obs.report experiments/bench/serving_session_obs.json
+
+    # live over HTTP (a SessionService with scrape_port set, or any
+    # obs.scrape.ScrapeServer): /metrics + /statusz, re-rendered
+    python -m repro.obs.report --url http://127.0.0.1:9464
 
 The snapshot file is either a bare ``MetricsRegistry.snapshot()`` record
 or the combined ``{"metrics": <snapshot>, "telemetry":
@@ -22,7 +27,10 @@ or the combined ``{"metrics": <snapshot>, "telemetry":
     (the serving layer's workload histogram: sessions are the tuples,
     slots the PEs);
   * grant history  -- per-flush secondary grants / re-schedules /
-    retraces from the telemetry tail.
+    retraces from the telemetry tail;
+  * skew / SLO     -- the ``obs.skew.SkewMonitor`` gauges (imbalance
+    factor, Eq. 2 score spread, grant churn, SLO burn) plus per-tenant
+    violation counts, when the registry carries them.
 """
 from __future__ import annotations
 
@@ -64,14 +72,43 @@ def render_engine(engine) -> str:
     return render(export_engine(engine))
 
 
+def fetch_url(base: str, timeout: float = 10.0) -> Dict[str, Any]:
+    """Scrape a live ``obs.scrape.ScrapeServer`` into the combined
+    snapshot object ``render`` accepts: ``/metrics`` re-assembled
+    through ``metrics.snapshot_from_prometheus`` (strict parse), plus
+    the ``/statusz`` body under ``"status"`` (best-effort -- a sidecar
+    without a status_fn still renders its metrics)."""
+    import urllib.request
+
+    from repro.obs import metrics as metrics_lib
+    base = base.rstrip("/")
+    if "://" not in base:
+        base = "http://" + base
+    with urllib.request.urlopen(base + "/metrics", timeout=timeout) as r:
+        snap = metrics_lib.snapshot_from_prometheus(
+            r.read().decode("utf-8"))
+    status = None
+    try:
+        with urllib.request.urlopen(base + "/statusz",
+                                    timeout=timeout) as r:
+            status = json.loads(r.read().decode("utf-8"))
+    except Exception:           # noqa: BLE001 - status page is optional
+        pass
+    out: Dict[str, Any] = {"metrics": snap}
+    if status is not None:
+        out["status"] = status
+    return out
+
+
 def render(snapshot: Dict[str, Any]) -> str:
     """Render a report from an exported snapshot (combined object or a
     bare metrics record)."""
     if "metrics" in snapshot and "rows" not in snapshot:
         metrics = snapshot["metrics"]
         telemetry = snapshot.get("telemetry")
+        status = snapshot.get("status")
     else:
-        metrics, telemetry = snapshot, None
+        metrics, telemetry, status = snapshot, None, None
     rows = metrics.get("rows", [])
     hists = metrics.get("extra", {}).get("histograms", {})
     out: List[str] = ["== engine health report =="]
@@ -84,6 +121,13 @@ def render(snapshot: Dict[str, Any]) -> str:
         if cfg:
             out.append("engine: " + ", ".join(
                 f"{k}={v}" for k, v in cfg.items() if v is not None))
+    elif status:
+        totals = (status.get("engine") or {}).get("totals", {}) or {}
+        svc = status.get("service") or {}
+        if svc:
+            out.append("service: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(svc.items())
+                if v is not None))
     counters = {(r["metric"], r["labels"]): r["value"] for r in rows
                 if r.get("type") == "counter"}
     if totals or counters:
@@ -139,6 +183,44 @@ def render(snapshot: Dict[str, Any]) -> str:
             out.append(f"  {tenant:<24} {_bar(depth[tenant] / vmax, 20)} "
                        f"{depth[tenant]:g}")
 
+    # ---------------------------------------------------------- skew / SLO
+    gauges = {(r["metric"], r["labels"]): r["value"] for r in rows
+              if r.get("type") == "gauge"}
+    skew_keys = [
+        ("skew_imbalance_factor", "imbalance (max/mean lane load)"),
+        ("skew_lane_max_load", "hottest lane backlog (chunks)"),
+        ("skew_lane_mean_load", "mean lane backlog (chunks)"),
+        ("skew_score_spread", "Eq. 2 score spread"),
+        ("skew_grant_churn_rate", "grant churn (reassign/obs)"),
+        ("skew_slo_burn_rate", "SLO burn rate (window)"),
+    ]
+    if any((k, "") in gauges for k, _ in skew_keys) or status:
+        out.append("-- skew / SLO --")
+        if status and status.get("skew"):
+            sk = status["skew"]
+            out.append(f"  slo_ms={sk.get('slo_ms')} "
+                       f"window={sk.get('window')} "
+                       f"requests_in_window={sk.get('requests_in_window')}")
+        for key, label in skew_keys:
+            if (key, "") in gauges:
+                v = gauges[(key, "")]
+                warn = ""
+                if key == "skew_imbalance_factor" and v > 2.0:
+                    warn = "  <-- one hot lane is dragging the flush"
+                if key == "skew_slo_burn_rate" and v > 0.1:
+                    warn = "  <-- burning error budget"
+                out.append(f"  {label:<32} {v:g}{warn}")
+        viol = {_labels_dict(r["labels"]).get("tenant", "?"): r["value"]
+                for r in rows if r["metric"] == "slo_violations_total"}
+        reqs = {_labels_dict(r["labels"]).get("tenant", "?"): r["value"]
+                for r in rows if r["metric"] == "slo_requests_total"}
+        if viol:
+            out.append("  slo violations by tenant:")
+            for tenant in sorted(viol, key=lambda t: -viol[t])[:16]:
+                n, d = viol[tenant], reqs.get(tenant, 0)
+                pct = f" ({n / d * 100:.1f}%)" if d else ""
+                out.append(f"    {tenant:<22} {n:g}/{d:g}{pct}")
+
     # ------------------------------------------------------ grant history
     if telemetry and telemetry.get("rows"):
         tail = telemetry["rows"][-12:]
@@ -160,11 +242,20 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
         description="Render an engine health report from an exported "
-                    "observability snapshot (see docs/observability.md).")
-    ap.add_argument("snapshot", help="path to the snapshot JSON "
-                    "(combined {metrics, telemetry} or a bare metrics "
-                    "record)")
+                    "observability snapshot or a live scrape endpoint "
+                    "(see docs/observability.md).")
+    ap.add_argument("snapshot", nargs="?", help="path to the snapshot "
+                    "JSON (combined {metrics, telemetry} or a bare "
+                    "metrics record)")
+    ap.add_argument("--url", help="scrape a live service instead: base "
+                    "URL of its obs.scrape sidecar, e.g. "
+                    "http://127.0.0.1:9464 (reads /metrics + /statusz)")
     args = ap.parse_args(argv)
+    if (args.snapshot is None) == (args.url is None):
+        ap.error("exactly one of the snapshot path or --url is required")
+    if args.url:
+        print(render(fetch_url(args.url)))
+        return 0
     with open(args.snapshot) as f:
         print(render(json.load(f)))
     return 0

@@ -78,6 +78,9 @@ from repro.serve.errors import (BackpressureError, ProtocolError,
                                 RateLimitedError, SessionError,
                                 UnknownOpError, status_of)
 from repro import obs as obs_lib
+from repro.obs.scrape import ScrapeServer
+from repro.obs.skew import SkewMonitor
+from repro.obs.trace import adopt_trace, mint_span_id, new_trace_context
 
 MAGIC = b"DSRV\x01\x00\x00\x00"           # 8-byte hello: magic + proto v1
 _FRAME = struct.Struct("<II")             # body length, crc32(body)
@@ -218,6 +221,12 @@ class ServiceConfig:
       max_frame: wire frame cap (oversized length prefixes rejected).
       retry_after_ms: RETRY-AFTER hint attached to backpressure
         rejections (rate-limit rejections compute their own).
+      scrape_port: when not None, ``start()`` also boots an
+        ``obs.scrape.ScrapeServer`` (``/metrics`` + ``/healthz`` +
+        ``/statusz``) on this port (0 picks a free one); the resolved
+        address is ``SessionService.scrape_address``.
+      slo_ms: per-request latency SLO fed to the skew monitor's burn
+        counters (``slo_violations_total``).
     """
 
     host: str = "127.0.0.1"
@@ -230,6 +239,8 @@ class ServiceConfig:
     rate_burst: float = 64.0
     max_frame: int = DEFAULT_MAX_FRAME
     retry_after_ms: float = 50.0
+    scrape_port: Optional[int] = None
+    slo_ms: float = 100.0
 
     def __post_init__(self):
         if self.admission not in ("scored", "fifo"):
@@ -270,6 +281,68 @@ class _Stop:
 _STOP = _Stop()
 
 
+@dataclasses.dataclass
+class _Req:
+    """One in-flight wire request: the queue item between the event loop
+    and the engine worker, plus the trace/timing envelope the root span
+    is assembled from.  ``trace`` is None whenever tracing is off -- the
+    request then pays zero stamping on the hot path."""
+
+    meta: Dict[str, Any]
+    payload: bytes
+    fut: asyncio.Future
+    # {"trace_id", "parent_id", "span_id"}; None = tracing disabled
+    trace: Optional[Dict[str, Optional[str]]] = None
+    t0_ns: int = 0           # ingress (dispatch entry, event loop)
+    t_enq_ns: int = 0        # request-queue put
+    t_deq_ns: int = 0        # engine-worker pickup
+    t_eng0_ns: int = 0       # engine apply start (engine thread)
+    t_eng1_ns: int = 0       # engine apply end
+    t_eng_tid: int = 0       # engine thread id (the span's track)
+    # span ids of SHARED engine spans this request rode (coalesced
+    # flush, open storm): the root links these instead of duplicating
+    links: List[str] = dataclasses.field(default_factory=list)
+
+
+def _build_request_spans(p: tuple) -> list:
+    """Materialize one request's span tree from the deferred stamp
+    record (see ``SpanTracer.defer``) into ``complete_batch`` tuples.
+
+    The tree: children (queue wait, reply write) are time-contained in
+    the root on the event-loop track, so Perfetto nests them; the
+    ``svc.engine`` span is placed on the engine thread's track, where
+    the ``engine.*`` spans it covers live, and correlates through the
+    shared ``trace_id``/``parent`` args.  Shared coalesced spans are
+    referenced through ``links`` rather than duplicated per request."""
+    (tr, op, status, t0, t_enq, t_deq, t_eng0, t_eng1, eng_tid,
+     t_w0, t_w1, loop_tid, links) = p
+    base = {"trace_id": tr["trace_id"], "parent": tr["span_id"]}
+    queue_ms = engine_ms = 0.0
+    spans = []
+    if t_deq and t_enq:
+        queue_ms = (t_deq - t_enq) / 1e6
+        spans.append(("svc.queue", "service", t_enq, t_deq,
+                      loop_tid, base))
+    if t_eng1 and t_eng0:
+        engine_ms = (t_eng1 - t_eng0) / 1e6
+        spans.append(("svc.engine", "service", t_eng0, t_eng1,
+                      eng_tid or loop_tid, dict(base, op=op)))
+    reply_ms = (t_w1 - t_w0) / 1e6
+    spans.append(("svc.reply", "service", t_w0, t_w1, loop_tid, base))
+    args: Dict[str, Any] = {
+        "op": op, "status": status,
+        "trace_id": tr["trace_id"], "span_id": tr["span_id"],
+        "parent_span": tr["parent_id"],
+        "queue_ms": round(queue_ms, 3),
+        "engine_ms": round(engine_ms, 3),
+        "reply_ms": round(reply_ms, 3),
+    }
+    if links:
+        args["links"] = list(links)
+    spans.append(("svc.request", "service", t0, t_w1, loop_tid, args))
+    return spans
+
+
 # ---------------------------------------------------------------------------
 # The service
 # ---------------------------------------------------------------------------
@@ -297,11 +370,14 @@ class SessionService:
         self.obs = engine.obs if obs is None else obs_lib.resolve(obs)
         self._mx = _ServiceMetrics(self.obs.registry) \
             if self.obs.enabled else None
+        self.skew = SkewMonitor(self.obs.registry, slo_ms=self.cfg.slo_ms) \
+            if self.obs.enabled else None
+        self._scrape: Optional[ScrapeServer] = None
         self._clock = clock
         self._buckets: Dict[str, TokenBucket] = {}
         self._sid_tenant: Dict[int, str] = {}
-        # (meta, future, t0) of opens parked by the scored controller
-        self._held: List[Tuple[Dict[str, Any], asyncio.Future, float]] = []
+        # opens parked by the scored controller, arrival order
+        self._held: List[_Req] = []
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.base_events.Server] = None
         self._thread: Optional[threading.Thread] = None
@@ -311,6 +387,7 @@ class SessionService:
         self._eng_exec = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="svc-engine")
         self._addr: Optional[Tuple[str, int]] = None
+        self._loop_tid = 0
         self._conn_seq = 0
         self._n_conns = 0
         self._started = False
@@ -358,10 +435,29 @@ class SessionService:
             raise boot["exc"]
         self._addr = boot["addr"]
         self._started = True
+        if self.cfg.scrape_port is not None:
+            self._scrape = ScrapeServer(
+                self.obs.registry, status_fn=self.status,
+                health_fn=lambda: self._started,
+                host=self.cfg.host, port=self.cfg.scrape_port)
+            self._scrape.start()
         return self._addr
+
+    @property
+    def scrape_address(self) -> Tuple[str, int]:
+        """The (host, port) of the scrape sidecar (needs
+        ``ServiceConfig.scrape_port`` set and the service started)."""
+        if self._scrape is None:
+            raise RuntimeError(
+                "no scrape sidecar: set ServiceConfig.scrape_port and "
+                "start() the service")
+        return self._scrape.address
 
     async def _boot(self) -> Tuple[str, int]:
         self._queue = asyncio.Queue(maxsize=0)   # bounded by max_pending
+        # deferred request spans carry an explicit track id (they are
+        # materialized on whatever thread reads the trace)
+        self._loop_tid = threading.get_ident()
         self._worker_task = asyncio.get_running_loop().create_task(
             self._worker())
         self._server = await asyncio.start_server(
@@ -375,26 +471,29 @@ class SessionService:
         listener, stop the loop."""
         if not self._started or self._loop is None:
             return
+        self._started = False       # healthz flips unhealthy right away
+        if self._scrape is not None:
+            self._scrape.stop()
+            self._scrape = None
         fut = asyncio.run_coroutine_threadsafe(self._shutdown(), self._loop)
         fut.result(timeout=60)
         self._loop.call_soon_threadsafe(self._loop.stop)
         if self._thread is not None:
             self._thread.join(timeout=60)
         self._eng_exec.shutdown(wait=True)
-        self._started = False
 
     async def _shutdown(self) -> None:
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
-        await self._queue.put((_STOP, None, None))
+        await self._queue.put(_STOP)
         if self._worker_task is not None:
             await self._worker_task
         held, self._held = self._held, []
-        for meta, fut, _t0 in held:
-            if not fut.done():
-                fut.set_result(self._err_response(
-                    meta, BackpressureError(
+        for req in held:
+            if not req.fut.done():
+                req.fut.set_result(self._err_response(
+                    req.meta, BackpressureError(
                         "service shutting down with the open still parked "
                         "in the admission queue",
                         retry_after_ms=self.cfg.retry_after_ms)))
@@ -511,48 +610,87 @@ class SessionService:
                 if meta.get("op") == "open_batch" else 1.0) or 1.0
         return b.take(cost)
 
+    def _adopt(self, meta: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """The request's trace context, or None when tracing is off.
+        Adoption is total (``obs.trace.adopt_trace``): an old client's
+        missing ``trace`` field or a fuzzer's garbage one degrades to a
+        freshly minted trace id, never to a wire error."""
+        if not self.obs.tracer.enabled:
+            return None
+        tr = adopt_trace(meta.get("trace"))
+        tr["span_id"] = mint_span_id()      # the root span's own id
+        return tr
+
     async def _dispatch(self, meta: Dict[str, Any], payload: bytes,
                         writer, wlock) -> None:
-        t0 = time.perf_counter()
+        req = _Req(meta, payload,
+                   asyncio.get_running_loop().create_future(),
+                   trace=self._adopt(meta),
+                   t0_ns=time.perf_counter_ns())
         op = meta.get("op")
         if op not in OPS:
-            await self._finish(writer, wlock, meta, t0, self._err_response(
+            await self._finish(writer, wlock, req, self._err_response(
                 meta, UnknownOpError(f"unknown op {op!r}; this service "
                                      f"serves {OPS}")))
             return
         retry = self._rate_check(meta)
         if retry > 0.0:
-            await self._finish(writer, wlock, meta, t0, self._err_response(
+            await self._finish(writer, wlock, req, self._err_response(
                 meta, RateLimitedError(
                     f"tenant {self._tenant_of(meta)!r} is over its "
                     f"{self.cfg.rate_limit}/s rate limit",
                     retry_after_ms=retry)))
             return
         if self._queue.qsize() >= self.cfg.max_pending:
-            await self._finish(writer, wlock, meta, t0, self._err_response(
+            await self._finish(writer, wlock, req, self._err_response(
                 meta, BackpressureError(
                     f"service request queue at max_pending="
                     f"{self.cfg.max_pending}",
                     retry_after_ms=self.cfg.retry_after_ms)))
             return
-        fut: asyncio.Future = asyncio.get_running_loop().create_future()
-        await self._queue.put((meta, payload, fut))
+        if req.trace is not None:
+            req.t_enq_ns = time.perf_counter_ns()
+        await self._queue.put(req)
         try:
-            resp = await fut
+            resp = await req.fut
         except asyncio.CancelledError:
             return          # connection died; the op may still run
-        await self._finish(writer, wlock, meta, t0, resp)
+        await self._finish(writer, wlock, req, resp)
 
-    async def _finish(self, writer, wlock, meta, t0, resp) -> None:
-        rmeta, _ = resp
+    async def _finish(self, writer, wlock, req: _Req, resp) -> None:
+        meta = req.meta
+        rmeta, rpayload = resp
+        if req.trace is not None:
+            # echo the adopted ids so the client can pair its half of
+            # the timeline with the server's (append-only: old clients
+            # never look at the field)
+            rmeta = dict(rmeta, trace={"trace_id": req.trace["trace_id"],
+                                       "span_id": req.trace["span_id"]})
+            resp = (rmeta, rpayload)
+        op = meta.get("op") or "_frame"
+        code = err.EXC_BY_STATUS.get(rmeta.get("status", 0))
         if self._mx:
-            op = meta.get("op") or "_frame"
-            code = err.EXC_BY_STATUS.get(rmeta.get("status", 0))
             self._mx.requests.inc(op=op,
                                   status=code.code if code else "OK")
             self._mx.request_ms.observe(
-                (time.perf_counter() - t0) * 1e3, op=op)
+                (time.perf_counter_ns() - req.t0_ns) / 1e6, op=op)
+        t_w0 = time.perf_counter_ns()
         await self._write(writer, wlock, resp)
+        t_w1 = time.perf_counter_ns()
+        if self.skew is not None and op in ("open", "open_batch",
+                                            "append", "query", "close"):
+            self.skew.observe_request(self._tenant_of(meta),
+                                      (t_w1 - req.t0_ns) / 1e6)
+        if req.trace is not None:
+            # the span tree is DEFERRED: the hot path pays one tuple
+            # append; _build_request_spans assembles the dicts at
+            # export time (events()/write())
+            self.obs.tracer.defer(_build_request_spans, (
+                req.trace, op, code.code if code else "OK",
+                req.t0_ns, req.t_enq_ns, req.t_deq_ns,
+                req.t_eng0_ns, req.t_eng1_ns, req.t_eng_tid,
+                t_w0, t_w1, self._loop_tid,
+                tuple(req.links) if req.links else None))
 
     # -- the single-writer worker -----------------------------------------
 
@@ -566,13 +704,17 @@ class SessionService:
                     batch.append(self._queue.get_nowait())
                 except asyncio.QueueEmpty:
                     break
-            stop = any(x[0] is _STOP for x in batch)
-            batch = [x for x in batch if x[0] is not _STOP]
+            stop = any(x is _STOP for x in batch)
+            batch = [x for x in batch if x is not _STOP]
             if self._mx:
                 self._mx.queue_depth.set(float(self._queue.qsize()))
                 if batch:
                     self._mx.batch_ops.observe(float(len(batch)))
             if batch:
+                now = time.perf_counter_ns()
+                for r in batch:
+                    if r.trace is not None:
+                        r.t_deq_ns = now     # queue wait ends here
                 done = await loop.run_in_executor(
                     self._eng_exec, self._run_batch, batch)
                 for fut, resp in done:
@@ -597,7 +739,27 @@ class SessionService:
         out.update(extra)
         return out, payload
 
-    def _run_batch(self, batch):
+    def _shared_span(self, name: str, reqs: List[_Req], **attrs):
+        """A span for engine work SHARED by several requests (coalesced
+        flush, open storm): emitted ONCE with its own minted span id,
+        which every rider's root span carries in ``links`` -- N roots
+        link one shared span instead of emitting N duplicates.  Also
+        stamps the riders' engine window.  Returns the span context."""
+        traced = [r for r in reqs if r.trace is not None]
+        if not traced:
+            return self.obs.span(name, cat="service", **attrs)
+        link = mint_span_id()
+        now = time.perf_counter_ns()
+        tid = threading.get_ident()
+        for r in traced:
+            r.links.append(link)
+            if not r.t_eng0_ns:
+                r.t_eng0_ns = now
+                r.t_eng_tid = tid
+        return self.obs.span(name, cat="service", span_id=link,
+                             n_requests=len(reqs), **attrs)
+
+    def _run_batch(self, batch: List[_Req]):
         """Engine-thread entry: apply one coalesced batch in arrival
         order, then let the admission controller hand freed slots to
         parked opens.  Returns [(future, response)] resolved by the
@@ -608,20 +770,25 @@ class SessionService:
             # single engine-wide forced flush; each query's own
             # per-session flush then only covers appends later in the
             # batch (answers are unchanged -- chunking invariance).
+            qreqs: List[_Req] = []
             qsids = set()
-            for meta, _p, _f in batch:
-                if meta.get("op") == "query":
-                    s = self.engine.sessions.get(meta.get("sid"))
+            for r in batch:
+                if r.meta.get("op") == "query":
+                    s = self.engine.sessions.get(r.meta.get("sid"))
                     if s is not None and not s.closed and s.slot is not None:
-                        qsids.add(int(meta["sid"]))
+                        qsids.add(int(r.meta["sid"]))
+                        qreqs.append(r)
             if len(qsids) > 1:
                 try:
-                    self.engine.flush(force=tuple(sorted(qsids)))
+                    with self._shared_span("svc.flush_shared", qreqs,
+                                           n_sessions=len(qsids)):
+                        self.engine.flush(force=tuple(sorted(qsids)))
                 except Exception:       # per-request handling reports it
                     pass
             i = 0
             while i < len(batch):
-                meta, payload, fut = batch[i]
+                req = batch[i]
+                meta = req.meta
                 # contiguous FIFO-mode open runs coalesce into ONE
                 # admission storm (the PR-7 batched path), sids in
                 # arrival order; a lone open stays on the plain path
@@ -629,34 +796,63 @@ class SessionService:
                         and self.cfg.admission == "fifo"):
                     j = i
                     while (j < len(batch)
-                           and batch[j][0].get("op") == "open"):
+                           and batch[j].meta.get("op") == "open"):
                         j += 1
                     if j - i < 2:
-                        out.extend(self._apply(meta, payload, fut))
+                        out.extend(self._apply(req))
                         i += 1
                         continue
                     run = batch[i:j]
                     try:
-                        sids = self.engine.open_batch(
-                            [m.get("tenant") for m, _p, _f in run])
-                        for (m, _p, f), sid in zip(run, sids):
-                            self._sid_tenant[sid] = m.get("tenant")
-                            out.append((f, self._ok(m, {"sid": sid})))
+                        with self._shared_span("svc.open_storm", run):
+                            sids = self.engine.open_batch(
+                                [r.meta.get("tenant") for r in run])
+                        for r, sid in zip(run, sids):
+                            self._sid_tenant[sid] = r.meta.get("tenant")
+                            out.append((r.fut,
+                                        self._ok(r.meta, {"sid": sid})))
                     except Exception as e:
-                        for m, _p, f in run:
-                            out.append((f, self._err_response(m, e)))
+                        for r in run:
+                            out.append((r.fut,
+                                        self._err_response(r.meta, e)))
+                    finally:
+                        now = time.perf_counter_ns()
+                        for r in run:
+                            if r.trace is not None:
+                                r.t_eng1_ns = now
                     i = j
                     continue
-                out.extend(self._apply(meta, payload, fut))
+                out.extend(self._apply(req))
                 i += 1
             out.extend(self._admit_held())
             if self._mx:
                 self._mx.admit_depth.set(float(len(self._held)))
+            if self.skew is not None:
+                self.skew.update_from_engine(self.engine)
         return out
 
-    def _apply(self, meta, payload, fut):
-        """One request against the engine; returns [(future, response)]
-        (possibly empty while a scored open stays parked)."""
+    def _apply(self, req: _Req):
+        """One request against the engine.  When tracing, it only STAMPS
+        here (start/end + the engine thread's id); the ``svc.engine``
+        span itself is emitted later from ``_emit_request_spans`` onto
+        this thread's track, so the ``engine.*`` spans the call emits
+        are time-contained in it on the same track -- which is how the
+        whole engine pipeline nests under this request in the Perfetto
+        view, at two-timestamp cost on the engine thread.  Returns
+        [(future, response)] (possibly empty while a scored open stays
+        parked)."""
+        if req.trace is None:
+            return self._apply_op(req)
+        if not req.t_eng0_ns:           # shared-flush riders keep theirs
+            req.t_eng0_ns = time.perf_counter_ns()
+        req.t_eng_tid = threading.get_ident()
+        try:
+            return self._apply_op(req)
+        finally:
+            req.t_eng1_ns = time.perf_counter_ns()
+
+    def _apply_op(self, req: _Req):
+        meta, payload, fut = req.meta, req.payload, req.fut
         op = meta.get("op")
         try:
             if op == "ping":
@@ -677,7 +873,7 @@ class SessionService:
                         f"admission queue at admit_queue_cap="
                         f"{self.cfg.admit_queue_cap}",
                         retry_after_ms=self.cfg.retry_after_ms)
-                self._held.append((meta, fut, time.perf_counter()))
+                self._held.append(req)
                 return []           # resolved by _admit_held
             if op == "open_batch":
                 tenants = meta.get("tenants") or []
@@ -719,16 +915,6 @@ class SessionService:
 
     # -- Eq. 2 admission controller ---------------------------------------
 
-    def _tenant_load(self) -> Tuple[Dict[str, int], Dict[str, int]]:
-        occ: Dict[str, int] = {}
-        bl: Dict[str, int] = {}
-        for s in self.engine.sessions.values():
-            if s.closed:
-                continue
-            occ[s.tenant] = occ.get(s.tenant, 0) + 1   # slot held OR queued
-            bl[s.tenant] = bl.get(s.tenant, 0) + int(s.backlog_tuples)
-        return occ, bl
-
     def _admit_held(self):
         """Hand free slots to parked opens by Eq. 2 score (engine
         thread).  Never overfills: engine-queued sessions (the bulk
@@ -738,12 +924,14 @@ class SessionService:
         free = len(self.engine._free_slots) - len(self.engine._queue)
         if free <= 0:
             return []
-        occ_map, bl_map = self._tenant_load()
+        # the engine's view of tenant heat (slot held OR queued), the
+        # same numbers the skew monitor's score spread reads
+        occ_map, bl_map = self.engine.tenant_loads()
         tenants: List[str] = []
         tidx: Dict[str, int] = {}
         pend = []
-        for meta, _fut, _t0 in self._held:
-            t = meta["tenant"]
+        for req in self._held:
+            t = req.meta["tenant"]
             if t not in tidx:
                 tidx[t] = len(tenants)
                 tenants.append(t)
@@ -758,32 +946,58 @@ class SessionService:
                 # a storm admitting together rides the PR-7 batched
                 # lane-init path, in the plan's order (capacity was
                 # checked, so none of these queue in-engine)
-                sids = self.engine.open_batch(
-                    [m["tenant"] for m, _f, _t in winners])
+                with self._shared_span("svc.admit_grant", winners):
+                    sids = self.engine.open_batch(
+                        [r.meta["tenant"] for r in winners])
+            elif winners:
+                with self._shared_span("svc.admit_grant", winners):
+                    sids = [self.engine.open(winners[0].meta["tenant"])]
             else:
-                sids = [self.engine.open(m["tenant"])
-                        for m, _f, _t in winners]
-            for (meta, fut, _t0), sid in zip(winners, sids):
-                self._sid_tenant[sid] = meta["tenant"]
-                out.append((fut, self._ok(meta, {"sid": sid})))
+                sids = []
+            for req, sid in zip(winners, sids):
+                self._sid_tenant[sid] = req.meta["tenant"]
+                out.append((req.fut, self._ok(req.meta, {"sid": sid})))
         except Exception as e:         # pragma: no cover - capacity raced
-            for meta, fut, _t0 in winners:
-                out.append((fut, self._err_response(meta, e)))
+            for req in winners:
+                out.append((req.fut, self._err_response(req.meta, e)))
+        finally:
+            now = time.perf_counter_ns()
+            for req in winners:
+                if req.trace is not None:
+                    req.t_eng1_ns = now
         self._held = [h for j, h in enumerate(self._held) if j not in taken]
         return out
 
     def _stats(self) -> Dict[str, Any]:
-        eng = self.engine
-        totals = eng.telemetry_record(validate=False)["extra"]["totals"]
+        st = self.engine.stats_dict()
         return {
-            "open_sessions": sum(not s.closed
-                                 for s in eng.sessions.values()),
-            "free_slots": len(eng._free_slots),
-            "engine_queue": len(eng._queue),
+            "open_sessions": st["open_sessions"],
+            "free_slots": st["free_slots"],
+            "engine_queue": st["engine_queue"],
             "held_opens": len(self._held),
             "admission": self.cfg.admission,
-            "totals": totals,
+            "totals": st["totals"],
         }
+
+    def status(self) -> Dict[str, Any]:
+        """The ``/statusz`` body: engine stats + service queue depths
+        (+ the skew monitor's summary when obs is on).  Read-only and
+        callable from any thread -- the scrape sidecar retries the rare
+        mid-mutation dict race."""
+        out: Dict[str, Any] = {
+            "engine": self.engine.stats_dict(),
+            "service": {
+                "admission": self.cfg.admission,
+                "held_opens": len(self._held),
+                "request_queue": (self._queue.qsize()
+                                  if self._queue is not None else 0),
+                "connections": self._n_conns,
+                "address": list(self._addr) if self._addr else None,
+            },
+        }
+        if self.skew is not None:
+            out["skew"] = self.skew.summary()
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -799,13 +1013,22 @@ def _raise_for(meta: Dict[str, Any]) -> None:
 
 class ServiceClient:
     """Blocking wire client (tests, tooling): one request in flight at a
-    time, taxonomy errors re-raised exactly as the engine raises them."""
+    time, taxonomy errors re-raised exactly as the engine raises them.
+
+    ``trace=True`` (default) mints a fresh trace context per request and
+    ships it in the header's ``trace`` field, so the server's root span
+    carries client-visible ids (``last_trace`` after each call); the
+    field is append-only and servers predating it ignore it."""
 
     def __init__(self, host: str, port: int, *, timeout: float = 60.0,
-                 max_frame: int = DEFAULT_MAX_FRAME):
+                 max_frame: int = DEFAULT_MAX_FRAME, trace: bool = True):
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._decoder = FrameDecoder(max_frame)
         self._seq = 0
+        self._trace = bool(trace)
+        #: the context minted for the most recent request (None before
+        #: the first, or with ``trace=False``)
+        self.last_trace: Optional[Dict[str, str]] = None
         self._sock.sendall(MAGIC)
         banner = self._recv_exact(len(MAGIC))
         if banner != MAGIC:
@@ -839,6 +1062,8 @@ class ServiceClient:
                 payload: bytes = b"") -> Tuple[Dict[str, Any], bytes]:
         self._seq += 1
         meta = dict(meta, id=self._seq)
+        if self._trace and "trace" not in meta:
+            self.last_trace = meta["trace"] = new_trace_context()
         self._sock.sendall(encode_frame(meta, payload))
         rmeta, rpayload = self.read_response()
         _raise_for(rmeta)
@@ -902,28 +1127,31 @@ class ServiceClient:
 
 class AsyncServiceClient:
     """Pipelining asyncio client (the open-loop load generator): many
-    requests in flight per connection, responses matched by id."""
+    requests in flight per connection, responses matched by id.  As with
+    ``ServiceClient``, ``trace=True`` mints a per-request trace context
+    into the header's ``trace`` field."""
 
     def __init__(self, reader: asyncio.StreamReader,
                  writer: asyncio.StreamWriter,
-                 max_frame: int = DEFAULT_MAX_FRAME):
+                 max_frame: int = DEFAULT_MAX_FRAME, trace: bool = True):
         self._reader, self._writer = reader, writer
         self._decoder = FrameDecoder(max_frame)
         self._seq = 0
+        self._trace = bool(trace)
         self._pending: Dict[int, asyncio.Future] = {}
         self._pump: Optional[asyncio.Task] = None
 
     @classmethod
     async def connect(cls, host: str, port: int,
-                      max_frame: int = DEFAULT_MAX_FRAME
-                      ) -> "AsyncServiceClient":
+                      max_frame: int = DEFAULT_MAX_FRAME, *,
+                      trace: bool = True) -> "AsyncServiceClient":
         reader, writer = await asyncio.open_connection(host, port)
         writer.write(MAGIC)
         await writer.drain()
         banner = await reader.readexactly(len(MAGIC))
         if banner != MAGIC:
             raise ProtocolError(f"bad server banner {banner!r}")
-        self = cls(reader, writer, max_frame)
+        self = cls(reader, writer, max_frame, trace=trace)
         self._pump = asyncio.get_running_loop().create_task(self._read_loop())
         return self
 
@@ -955,6 +1183,8 @@ class AsyncServiceClient:
         self._seq += 1
         rid = self._seq
         meta = dict(meta, id=rid)
+        if self._trace and "trace" not in meta:
+            meta["trace"] = new_trace_context()
         fut: asyncio.Future = asyncio.get_running_loop().create_future()
         self._pending[rid] = fut
         self._writer.write(encode_frame(meta, payload))

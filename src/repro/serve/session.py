@@ -121,6 +121,7 @@ Durability (DESIGN.md §10, docs/durability.md)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import time
@@ -441,6 +442,7 @@ class SessionEngine:
         self._dtype = None
         self._flush_no = 0
         self._slot_reschedules = 0
+        self._gauge_scan_last = 0.0     # last lane/tenant gauge rescan
         if telemetry_cap is not None and int(telemetry_cap) < 1:
             raise ValueError(f"telemetry_cap={telemetry_cap}: need >= 1 "
                              "rows, or None for unbounded")
@@ -672,22 +674,24 @@ class SessionEngine:
             row_sessions = [None if sid is None else self.sessions[sid]
                             for sid in lane_sid]
             width = 0
-            for off, w in self._segments(lane_chunks):
-                with self.obs.span("scan.segment", cat="scan",
-                                   scope="engine", offset=off, width=w):
-                    chunks, mask = self._pack_chunks(lane_chunks, lane_masks,
-                                                     w, offset=off)
-                    if self._sharded is not None:  # split over the mesh
-                        chunks = jax.device_put(
-                            chunks, self._sharded.lane_sharding)
-                        mask = jax.device_put(
-                            mask, self._sharded.lane_sharding)
-                    run = self._aot.get(("eng", w), self._run_lanes)
-                    self._states, stats = run(self._states, chunks, mask)
-                    self._apply_exec_stats(
-                        stats, row_sessions,
-                        [min(max(len(c) - off, 0), w) for c in lane_chunks])
-                width += w
+            segs = list(self._segments(lane_chunks))
+            with self._segment_loop_span(segs, "engine") as seg_span:
+                for off, w in segs:
+                    with seg_span(off, w):
+                        chunks, mask = self._pack_chunks(
+                            lane_chunks, lane_masks, w, offset=off)
+                        if self._sharded is not None:  # split over the mesh
+                            chunks = jax.device_put(
+                                chunks, self._sharded.lane_sharding)
+                            mask = jax.device_put(
+                                mask, self._sharded.lane_sharding)
+                        run = self._aot.get(("eng", w), self._run_lanes)
+                        self._states, stats = run(self._states, chunks, mask)
+                        self._apply_exec_stats(
+                            stats, row_sessions,
+                            [min(max(len(c) - off, 0), w)
+                             for c in lane_chunks])
+                    width += w
             sp.set(tuples=flushed_tuples, width=width)
         self._record_flush(flushed_tuples, lane_chunks, width, snap=snap,
                            ms=(time.perf_counter() - t0) * 1e3)
@@ -742,20 +746,21 @@ class SessionEngine:
                     [None] * (len(lanes) - n_real_lanes)
                 idx = np.asarray(lanes, np.int32)
                 sub = self._take_lanes(self._states, idx)
-                for off, w in self._segments(group_chunks):
-                    with self.obs.span("scan.segment", cat="scan",
-                                       scope="session", offset=off, width=w):
-                        arr, msk = self._pack_chunks(group_chunks,
-                                                     group_masks, w,
-                                                     offset=off)
-                        run = self._aot.get(("grp", len(lanes), w),
-                                            self._run_group)
-                        sub, stats = run(sub, arr, msk)
-                        self._apply_exec_stats(
-                            stats, row_sessions,
-                            [min(max(len(c) - off, 0), w)
-                             for c in group_chunks])
-                    width += w
+                segs = list(self._segments(group_chunks))
+                with self._segment_loop_span(segs, "session") as seg_span:
+                    for off, w in segs:
+                        with seg_span(off, w):
+                            arr, msk = self._pack_chunks(group_chunks,
+                                                         group_masks, w,
+                                                         offset=off)
+                            run = self._aot.get(("grp", len(lanes), w),
+                                                self._run_group)
+                            sub, stats = run(sub, arr, msk)
+                            self._apply_exec_stats(
+                                stats, row_sessions,
+                                [min(max(len(c) - off, 0), w)
+                                 for c in group_chunks])
+                        width += w
                 states = self._put_lanes(self._states, idx, sub)
                 self._states = (states if self._sharded is None
                                 else self._sharded.shard_states(states))
@@ -852,6 +857,30 @@ class SessionEngine:
         padding lanes always exist."""
         gmax = min(1 + self.secondary_slots, self.num_lanes)
         return min(1 << (g - 1).bit_length(), gmax)
+
+    # per-flush ceiling on individual scan.segment spans: a 256-chunk
+    # flush through width-2 AOT buckets is 128 segments, and 128 span
+    # emits per flush is pure tracer churn on the hot path -- past the
+    # cap the whole loop gets ONE aggregate ``scan.segments`` span
+    # (args: n_segments, width) instead
+    _SEGMENT_SPAN_CAP = 16
+
+    @contextlib.contextmanager
+    def _segment_loop_span(self, segs, scope: str):
+        """Context for a flush's segment loop, yielding the per-segment
+        span factory: detailed ``scan.segment`` spans up to
+        ``_SEGMENT_SPAN_CAP`` segments, ONE aggregate ``scan.segments``
+        span over the whole loop past it."""
+        if len(segs) <= self._SEGMENT_SPAN_CAP:
+            yield lambda off, w: self.obs.span(
+                "scan.segment", cat="scan", scope=scope,
+                offset=off, width=w)
+            return
+        null = contextlib.nullcontext()
+        with self.obs.span("scan.segments", cat="scan", scope=scope,
+                           n_segments=len(segs),
+                           width=sum(w for _, w in segs)):
+            yield lambda off, w: null
 
     def _segments(self, lane_chunks):
         """Yield the ``(offset, width)`` scan segments covering the
@@ -1231,6 +1260,10 @@ class SessionEngine:
         if self.obs.enabled:
             self._emit_flush_metrics(row, ms)
 
+    # floor between two lane/tenant gauge rescans in _emit_flush_metrics
+    # (class attr so a test can zero it to make every flush rescan)
+    _GAUGE_SCAN_S = 0.05
+
     def _emit_flush_metrics(self, row: Dict[str, Any],
                             ms: Optional[float]) -> None:
         """Mirror one telemetry row into the metrics registry (counters
@@ -1257,6 +1290,14 @@ class SessionEngine:
         if scope == "session":
             return      # lane/tenant gauges reflect ENGINE-wide state;
                         # the per-session tier does not rescan it
+        # the lane/tenant gauge rescan below walks every slot and sorts
+        # tenant depths -- O(slots + tenants) per flush adds up under a
+        # flush storm, and gauges only need freshness, so rescan at most
+        # every _GAUGE_SCAN_S (counters/histograms above stay exact)
+        now = time.monotonic()
+        if now - self._gauge_scan_last < self._GAUGE_SCAN_S:
+            return
+        self._gauge_scan_last = now
         busy = {slot for slot, sid in enumerate(self._slot_sid)
                 if sid is not None}
         busy |= {self.primary_slots + j
@@ -1274,6 +1315,52 @@ class SessionEngine:
         tenants = sorted(depth, key=lambda t: (-depth[t], t))
         for tenant in tenants[:m.MAX_TENANT_SERIES]:
             m.backlog.set(depth[tenant], tenant=tenant)
+
+    # ------------------------------------------------------- live load views
+
+    def lane_loads(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(loads, occupied)``: per-primary-slot backlog in CHUNKS plus
+        a boolean occupancy mask -- the live workload histogram the skew
+        monitor (``obs/skew.py``) and the ``/statusz`` endpoint read.
+        Pure host-side dict walks; no device sync."""
+        occupied = np.array([sid is not None for sid in self._slot_sid],
+                            dtype=bool)
+        return self._backlog_chunks().astype(np.float64), occupied
+
+    def tenant_loads(self) -> Tuple[Dict[str, int], Dict[str, int]]:
+        """``(occupancy, backlog_tuples)`` per tenant over non-closed
+        sessions -- slot-held AND engine-queued both count, which is the
+        Eq. 2 admission controller's definition of tenant heat (the
+        service's scored-admission path and the skew monitor's score
+        spread must agree on it, so it lives here once)."""
+        occ: Dict[str, int] = {}
+        bl: Dict[str, int] = {}
+        for s in self.sessions.values():
+            if s.closed:
+                continue
+            occ[s.tenant] = occ.get(s.tenant, 0) + 1
+            bl[s.tenant] = bl.get(s.tenant, 0) + int(s.backlog_tuples)
+        return occ, bl
+
+    @property
+    def slot_reschedules(self) -> int:
+        """Lifetime secondary-lane re-assignments (the lifted §IV-B
+        shadow-buffer merges) -- the skew monitor's grant-churn series."""
+        return self._slot_reschedules
+
+    def stats_dict(self) -> Dict[str, Any]:
+        """Occupancy, queue depths and lifetime totals as one JSON-able
+        dict (the engine half of the service's ``/statusz`` body)."""
+        return {
+            "open_sessions": sum(not s.closed
+                                 for s in self.sessions.values()),
+            "free_slots": len(self._free_slots),
+            "engine_queue": len(self._queue),
+            "primary_slots": self.primary_slots,
+            "secondary_slots": self.secondary_slots,
+            "totals": self.telemetry_record(
+                validate=False)["extra"]["totals"],
+        }
 
     def telemetry_record(self, validate: bool = True) -> Dict[str, Any]:
         """Per-flush telemetry as a schema-v1 benchmark record (the shape

@@ -1,0 +1,246 @@
+"""Live scrape endpoint tests (``obs/scrape.py``, docs/observability.md).
+
+``ScrapeServer`` is the fleet-facing surface of the metrics registry:
+``/metrics`` (Prometheus text exposition), ``/healthz`` (liveness),
+``/statusz`` (JSON status page).  The contracts pinned here:
+
+  strict parse    every 200 ``/metrics`` body round-trips through
+                  ``obs.metrics.parse_prometheus`` -- including bodies
+                  scraped WHILE other threads mutate the registry and
+                  the engine serves live wire load (the eventual-
+                  consistency retry in the handler, not luck);
+  health          ``/healthz`` follows ``health_fn`` (200/503), and a
+                  service-wired scrape goes healthy with ``start()``;
+  status          ``/statusz`` is valid JSON carrying the engine's
+                  status dict (incl. the skew summary);
+  lifecycle       ``ServiceConfig.scrape_port`` boots the sidecar on
+                  ``SessionService.start()`` and tears it down on
+                  ``stop()``; port 0 picks a free port.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro import obs as obs_lib
+from repro.apps import histo
+from repro.obs.metrics import MetricsRegistry, parse_prometheus
+from repro.obs.scrape import PROM_CONTENT_TYPE, ScrapeServer
+from repro.serve import SessionEngine
+from repro.serve.service import (ServiceClient, ServiceConfig,
+                                 SessionService)
+
+BINS, DOMAIN, M, CHUNK = 32, 1 << 12, 4, 64
+
+
+def _get(url: str, timeout: float = 10.0):
+    """(status, content_type, body_text); HTTP errors become statuses."""
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as r:
+            return r.status, r.headers.get("Content-Type"), \
+                r.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        return e.code, e.headers.get("Content-Type"), \
+            e.read().decode("utf-8")
+
+
+# ---------------------------------------------------------------------------
+# standalone sidecar
+# ---------------------------------------------------------------------------
+
+class TestScrapeServer:
+    def test_metrics_strict_parse(self):
+        reg = MetricsRegistry()
+        reg.counter("requests_total", "d", labels=("op",)).inc(op="open")
+        reg.gauge("depth", "d").set(3.5)
+        reg.histogram("lat_ms", "d").observe(12.0)
+        with ScrapeServer(reg) as srv:
+            status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200 and ctype == PROM_CONTENT_TYPE
+        samples = parse_prometheus(body)
+        by_name = {(n, tuple(sorted(lbl.items()))): v
+                   for n, lbl, v in samples}
+        assert by_name[("requests_total", (("op", "open"),))] == 1.0
+        assert by_name[("depth", ())] == 3.5
+        assert any(n == "lat_ms_count" for n, _, _ in samples)
+
+    def test_healthz_and_veto(self):
+        reg = MetricsRegistry()
+        healthy = threading.Event()
+        healthy.set()
+        with ScrapeServer(reg, health_fn=healthy.is_set) as srv:
+            assert _get(srv.url + "/healthz")[0] == 200
+            healthy.clear()
+            status, _, body = _get(srv.url + "/healthz")
+            assert status == 503 and "unhealthy" in body
+
+    def test_statusz_json(self):
+        reg = MetricsRegistry()
+        with ScrapeServer(reg, status_fn=lambda: {"queue": 7}) as srv:
+            status, ctype, body = _get(srv.url + "/statusz")
+        assert status == 200 and ctype == "application/json"
+        assert json.loads(body) == {"queue": 7}
+
+    def test_unknown_path_404(self):
+        with ScrapeServer(MetricsRegistry()) as srv:
+            status, _, body = _get(srv.url + "/nope")
+        assert status == 404 and "/metrics" in body
+
+    def test_parse_under_concurrent_mutation(self):
+        """Scrapes race a thread hammering the registry with NEW series
+        (the dict-resize case): every 200 body must still strict-parse."""
+        reg = MetricsRegistry()
+        c = reg.counter("ops_total", "d", labels=("tenant",))
+        stop = threading.Event()
+
+        def mutate():
+            i = 0
+            while not stop.is_set():
+                c.inc(tenant=f"t{i % 200}")
+                i += 1
+
+        t = threading.Thread(target=mutate, daemon=True)
+        t.start()
+        try:
+            with ScrapeServer(reg) as srv:
+                parsed = 0
+                for _ in range(50):
+                    status, _, body = _get(srv.url + "/metrics")
+                    if status == 200:           # 503 = lost the race
+                        parse_prometheus(body)  # raises on bad exposition
+                        parsed += 1
+                assert parsed >= 40
+        finally:
+            stop.set()
+            t.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# service wiring under live wire load
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def service():
+    obs = obs_lib.Observability()
+    eng = SessionEngine(histo.make_spec(BINS, DOMAIN, M), num_pri=M,
+                        num_sec=1, chunk_size=CHUNK, primary_slots=8,
+                        secondary_slots=0, aot_buckets=2, obs=obs)
+    eng.warmup(dtype=np.int32, feat_shape=(2,))
+    svc = SessionService(eng, ServiceConfig(scrape_port=0), obs=obs)
+    host, port = svc.start()
+    try:
+        yield svc, host, port, obs
+    finally:
+        svc.stop()
+
+
+class TestServiceScrape:
+    def test_sidecar_boots_with_service(self, service):
+        svc, host, port, obs = service
+        shost, sport = svc.scrape_address
+        assert sport != 0
+        assert _get(f"http://{shost}:{sport}/healthz")[0] == 200
+
+    def test_metrics_parse_under_live_wire_load(self, service):
+        """Clients storm the wire from threads while /metrics is
+        scraped in a tight loop: every body strict-parses and the
+        request counters move between scrapes."""
+        svc, host, port, obs = service
+        url = f"http://{svc.scrape_address[0]}:{svc.scrape_address[1]}"
+        rng = np.random.default_rng(5)
+        data = np.stack([rng.integers(0, DOMAIN, 2 * CHUNK),
+                         np.ones(2 * CHUNK, np.int64)], 1).astype(np.int32)
+        errors = []
+
+        def storm(w):
+            try:
+                c = ServiceClient(host, port)
+                for r in range(6):
+                    sid = c.open(f"w{w}r{r}")
+                    c.append(sid, data)
+                    c.query(sid)
+                    c.close(sid)
+                c.close_conn()
+            except Exception as e:          # surfaced after the join
+                errors.append(e)
+
+        threads = [threading.Thread(target=storm, args=(w,))
+                   for w in range(4)]
+        for t in threads:
+            t.start()
+        bodies = []
+        while any(t.is_alive() for t in threads):
+            status, _, body = _get(url + "/metrics")
+            if status == 200:
+                parse_prometheus(body)          # strict parse, mid-load
+                bodies.append(body)
+        for t in threads:
+            t.join(timeout=30)
+        assert not errors
+        status, _, body = _get(url + "/metrics")
+        assert status == 200
+        bodies.append(body)
+        assert len(bodies) >= 2
+
+        def requests_total(text):
+            return sum(v for n, _, v in parse_prometheus(text)
+                       if n == "service_requests_total")
+
+        assert requests_total(bodies[-1]) >= 4 * 6 * 4  # every op landed
+        assert requests_total(bodies[-1]) >= requests_total(bodies[0])
+
+    def test_statusz_carries_engine_and_skew(self, service):
+        svc, host, port, obs = service
+        with ServiceClient(host, port) as c:
+            sid = c.open("statz")
+            c.append(sid, np.stack(
+                [np.arange(CHUNK) % DOMAIN, np.ones(CHUNK)],
+                1).astype(np.int32))
+            url = (f"http://{svc.scrape_address[0]}:"
+                   f"{svc.scrape_address[1]}/statusz")
+            status, _, body = _get(url)
+            c.close(sid)
+        assert status == 200
+        page = json.loads(body)
+        assert "engine" in page and "skew" in page
+        assert page["skew"]["slo_ms"] > 0
+
+    def test_sidecar_stops_with_service(self):
+        obs = obs_lib.Observability()
+        eng = SessionEngine(histo.make_spec(BINS, DOMAIN, M), num_pri=M,
+                            num_sec=1, chunk_size=CHUNK, primary_slots=4,
+                            secondary_slots=0, aot_buckets=2, obs=obs)
+        eng.warmup(dtype=np.int32, feat_shape=(2,))
+        svc = SessionService(eng, ServiceConfig(scrape_port=0), obs=obs)
+        svc.start()
+        url = f"http://{svc.scrape_address[0]}:{svc.scrape_address[1]}"
+        assert _get(url + "/healthz")[0] == 200
+        svc.stop()
+        with pytest.raises((urllib.error.URLError, ConnectionError,
+                            OSError)):
+            urllib.request.urlopen(url + "/healthz", timeout=2)
+
+    def test_no_sidecar_without_port(self):
+        obs = obs_lib.Observability()
+        eng = SessionEngine(histo.make_spec(BINS, DOMAIN, M), num_pri=M,
+                            num_sec=1, chunk_size=CHUNK, primary_slots=4,
+                            secondary_slots=0, aot_buckets=2, obs=obs)
+        eng.warmup(dtype=np.int32, feat_shape=(2,))
+        svc = SessionService(eng, ServiceConfig(), obs=obs)
+        svc.start()
+        try:
+            with pytest.raises(RuntimeError, match="scrape"):
+                svc.scrape_address
+        finally:
+            svc.stop()

@@ -1,0 +1,237 @@
+"""Skew-aware SLO monitoring tests (``obs/skew.py``, docs/observability.md).
+
+``SkewMonitor`` lifts the paper's PE load-balance diagnosis to the
+serving layer: imbalance factor over slot lanes, Eq. 2 score spread
+over open tenants, SecPE grant churn, per-tenant e2e latency with SLO
+burn.  The contracts pinned here:
+
+  oracle        on a Zipf(1.5) tenant storm, ``update_from_engine``'s
+                imbalance/max/mean gauges equal ``imbalance_oracle``
+                computed by hand from the engine's own session table,
+                and the score spread equals a direct
+                ``core.scheduler.admission_score`` evaluation;
+  O(1) path     the burn-rate gauge equals the windowed quotient under
+                arbitrary observe_request sequences (running-sum
+                bookkeeping vs a recomputed reference), and the tenant
+                label space is capped (`_other` overflow);
+  throttle      rescans inside ``min_interval_s`` return the cached
+                observation without touching the engine; ``force=True``
+                and ``min_interval_s=0`` bypass.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro import obs as obs_lib
+from repro.apps import histo
+from repro.core import scheduler
+from repro.data.zipf import zipf_tuples
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.skew import (MAX_TENANT_SERIES, SkewMonitor,
+                            imbalance_oracle)
+from repro.serve import SessionEngine
+
+BINS, DOMAIN, M, CHUNK = 32, 1 << 12, 4, 64
+SLOTS = 16
+
+
+def _engine(obs=None):
+    eng = SessionEngine(histo.make_spec(BINS, DOMAIN, M), num_pri=M,
+                        num_sec=2, chunk_size=CHUNK, primary_slots=SLOTS,
+                        secondary_slots=2, aot_buckets=2,
+                        obs=obs or obs_lib.Observability())
+    eng.warmup(dtype=np.int32, feat_shape=(2,))
+    return eng
+
+
+def _monitor(**kw):
+    kw.setdefault("min_interval_s", 0.0)    # tests want every rescan
+    return SkewMonitor(MetricsRegistry(), **kw)
+
+
+def _zipf_sizes(n_tenants: int, total: int, seed: int) -> np.ndarray:
+    """Per-tenant tuple counts with a Zipf(1.5) head (the skewed fleet
+    the monitor exists for): tenant 0 is the hog."""
+    keys = zipf_tuples(total, n_tenants, 1.5, seed=seed)[:, 0]
+    counts = np.bincount(keys.astype(np.int64) % n_tenants,
+                         minlength=n_tenants)
+    return np.sort(counts)[::-1]
+
+
+def _data(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, DOMAIN, size=max(int(n), 1), dtype=np.int64)
+    return np.stack([keys, np.ones_like(keys)], axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine-path gauges vs the hand oracle
+# ---------------------------------------------------------------------------
+
+class TestEngineOracle:
+    def test_imbalance_matches_oracle_on_zipf_storm(self):
+        eng = _engine()
+        mon = _monitor()
+        sizes = _zipf_sizes(12, 6000, seed=31)
+        sids = [eng.open(f"t{i}") for i in range(len(sizes))]
+        for i, (sid, n) in enumerate(zip(sids, sizes)):
+            eng.append(sid, _data(n, seed=100 + i))
+        got = mon.update_from_engine(eng)
+        backlogs = [eng.sessions[sid].backlog_tuples
+                    for sid in eng._slot_sid if sid is not None]
+        want_imb, want_max, want_mean = imbalance_oracle(backlogs, CHUNK)
+        assert got["imbalance_factor"] == pytest.approx(want_imb)
+        assert got["lane_max_load"] == pytest.approx(want_max)
+        assert got["lane_mean_load"] == pytest.approx(want_mean)
+        # the gauges expose the same numbers the return value carries
+        assert mon.imbalance.value() == pytest.approx(want_imb)
+        assert mon.lane_max.value() == pytest.approx(want_max)
+        assert mon.lane_mean.value() == pytest.approx(want_mean)
+        # Zipf 1.5 with one hog: visibly imbalanced
+        assert got["imbalance_factor"] > 1.5
+
+    def test_imbalance_tracks_drain(self):
+        eng = _engine()
+        mon = _monitor()
+        sids = [eng.open(f"t{i}") for i in range(4)]
+        for i, sid in enumerate(sids):
+            eng.append(sid, _data((8 if i == 0 else 1) * CHUNK,
+                                  seed=50 + i))
+        hot = mon.update_from_engine(eng)["imbalance_factor"]
+        eng.flush()                          # drain the backlog
+        cold = mon.update_from_engine(eng)
+        assert cold["imbalance_factor"] < hot
+        backlogs = [eng.sessions[sid].backlog_tuples
+                    for sid in eng._slot_sid if sid is not None]
+        want_imb, _, _ = imbalance_oracle(backlogs, CHUNK)
+        assert cold["imbalance_factor"] == pytest.approx(want_imb)
+
+    def test_score_spread_matches_eq2(self):
+        eng = _engine()
+        mon = _monitor()
+        sizes = [9 * CHUNK, 4 * CHUNK, CHUNK, 0]
+        sids = [eng.open(f"t{i}") for i in range(len(sizes))]
+        for i, (sid, n) in enumerate(zip(sids, sizes)):
+            if n:
+                eng.append(sid, _data(n, seed=70 + i))
+        got = mon.update_from_engine(eng)
+        occ_map, bl_map = eng.tenant_loads()
+        tenants = sorted(occ_map)
+        scores = scheduler.admission_score(
+            [bl_map.get(t, 0) for t in tenants],
+            [occ_map[t] for t in tenants])
+        assert got["score_spread"] == pytest.approx(
+            float(scores.max() - scores.min()))
+        assert got["score_spread"] > 0.0
+
+    def test_empty_engine_is_balanced(self):
+        got = _monitor().update_from_engine(_engine())
+        assert got == {"imbalance_factor": 1.0, "lane_max_load": 0.0,
+                       "lane_mean_load": 0.0, "score_spread": 0.0,
+                       "grant_churn": 0.0, "grant_churn_rate": 0.0}
+
+    def test_grant_churn_counts_reassignments(self):
+        eng = _engine()
+        mon = _monitor()
+        mon.update_from_engine(eng)          # baseline observation
+        sids = [eng.open(f"t{i}") for i in range(6)]
+        for i, sid in enumerate(sids):
+            eng.append(sid, _data((6 - i) * CHUNK, seed=90 + i))
+        eng.flush()                          # grants + re-grants happen
+        got = mon.update_from_engine(eng)
+        want = int(eng.slot_reschedules)
+        assert mon.churn_total.value() == want
+        assert got["grant_churn"] == float(want)
+
+
+# ---------------------------------------------------------------------------
+# request path: burn window + label cap
+# ---------------------------------------------------------------------------
+
+class TestRequestPath:
+    def test_burn_rate_matches_windowed_quotient(self):
+        mon = _monitor(slo_ms=10.0, window=32)
+        rng = np.random.default_rng(3)
+        seen = []
+        for i in range(200):
+            ms = float(rng.choice([1.0, 50.0], p=[0.7, 0.3]))
+            mon.observe_request(f"t{i % 5}", ms)
+            seen.append(ms > 10.0)
+            window = seen[-32:]
+            assert mon.burn.value() == pytest.approx(
+                sum(window) / len(window))
+
+    def test_slo_counters_by_tenant(self):
+        mon = _monitor(slo_ms=10.0)
+        for _ in range(4):
+            mon.observe_request("fast", 1.0)
+        for _ in range(3):
+            mon.observe_request("slow", 99.0)
+        assert mon.slo_requests.value(tenant="fast") == 4
+        assert mon.slo_violations.value(tenant="fast") == 0
+        assert mon.slo_requests.value(tenant="slow") == 3
+        assert mon.slo_violations.value(tenant="slow") == 3
+
+    def test_tenant_label_cap_overflows_to_other(self):
+        mon = _monitor()
+        for i in range(MAX_TENANT_SERIES + 10):
+            mon.observe_request(f"t{i}", 1.0)
+        assert mon.slo_requests.value(tenant="t0") == 1
+        assert mon.slo_requests.value(tenant="_other") == 10
+        # known tenants keep their series after the cap hits
+        mon.observe_request("t0", 1.0)
+        assert mon.slo_requests.value(tenant="t0") == 2
+
+    def test_unknown_tenant_label(self):
+        mon = _monitor()
+        mon.observe_request(None, 5.0)
+        assert mon.slo_requests.value(tenant="_unknown") == 1
+
+    def test_summary_shape(self):
+        mon = _monitor(slo_ms=25.0, window=8)
+        mon.observe_request("a", 60.0)
+        s = mon.summary()
+        assert s["slo_ms"] == 25.0 and s["window"] == 8
+        assert s["slo_burn_rate"] == 1.0
+        assert s["requests_in_window"] == 1
+
+
+# ---------------------------------------------------------------------------
+# rescan throttle
+# ---------------------------------------------------------------------------
+
+class TestThrottle:
+    def test_throttled_rescan_returns_cache(self):
+        eng = _engine()
+        mon = SkewMonitor(MetricsRegistry(), min_interval_s=3600.0)
+        sid = eng.open("t0")
+        eng.append(sid, _data(4 * CHUNK, seed=1))
+        first = mon.update_from_engine(eng)
+        eng.append(sid, _data(8 * CHUNK, seed=2))
+        assert mon.update_from_engine(eng) == first       # cached
+        forced = mon.update_from_engine(eng, force=True)  # fresh scan
+        assert forced["lane_max_load"] > first["lane_max_load"]
+
+    def test_zero_interval_disables_throttle(self):
+        eng = _engine()
+        mon = SkewMonitor(MetricsRegistry(), min_interval_s=0.0)
+        sid = eng.open("t0")
+        eng.append(sid, _data(2 * CHUNK, seed=1))
+        a = mon.update_from_engine(eng)
+        eng.append(sid, _data(6 * CHUNK, seed=2))
+        b = mon.update_from_engine(eng)
+        assert b["lane_max_load"] > a["lane_max_load"]
+
+    def test_ctor_validation(self):
+        with pytest.raises(ValueError, match="slo_ms"):
+            SkewMonitor(MetricsRegistry(), slo_ms=0)
+        with pytest.raises(ValueError, match="window"):
+            SkewMonitor(MetricsRegistry(), window=0)

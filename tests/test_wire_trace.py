@@ -1,0 +1,261 @@
+"""Wire trace propagation tests (docs/observability.md, docs/serving.md).
+
+The protocol-v1 header grew an optional ``trace`` field:
+``{"trace_id": 16-hex, "span_id": 8-hex}``.  Clients mint one per
+request; the server adopts the ids, roots the request's span tree under
+them, and echoes the context in the response header.  The field is
+APPEND-ONLY, and adoption is TOTAL -- the two contracts this file pins:
+
+  old clients   a client that never sends ``trace`` (and never reads
+                the echoed one) sees byte-identical request/response
+                semantics -- correct answers, correct errors, no new
+                required fields;
+  fuzz safety   a garbage ``trace`` field (wrong type, bad hex,
+                oversized ids, nested junk) must NEVER surface as
+                ``ERR_MALFORMED`` or any other wire error: the server
+                degrades to a freshly minted trace id and serves the
+                request normally.
+
+Plus the positive paths: a well-formed context round-trips (the echoed
+ids equal the minted ones, the exported root span carries them with the
+queue/engine/reply breakdown), and ids stay correlated across the span
+tree (engine spans share the root's trace_id).
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro import obs as obs_lib
+from repro.apps import histo
+from repro.obs.trace import (adopt_trace, mint_span_id, mint_trace_id,
+                             new_trace_context)
+from repro.serve import SessionEngine
+from repro.serve.service import (ServiceClient, ServiceConfig,
+                                 SessionService, encode_frame)
+
+BINS, DOMAIN, M, CHUNK = 32, 1 << 12, 4, 64
+HEX_ID = re.compile(r"^[0-9a-f]{1,32}$")
+
+
+def _spec():
+    return histo.make_spec(BINS, DOMAIN, M)
+
+
+def _data(n: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, DOMAIN, size=n, dtype=np.int64)
+    return np.stack([keys, np.ones_like(keys)], axis=1).astype(np.int32)
+
+
+@pytest.fixture()
+def service():
+    obs = obs_lib.Observability()
+    eng = SessionEngine(_spec(), num_pri=M, num_sec=1, chunk_size=CHUNK,
+                        primary_slots=4, secondary_slots=0, aot_buckets=2,
+                        obs=obs)
+    eng.warmup(dtype=np.int32, feat_shape=(2,))
+    svc = SessionService(eng, ServiceConfig(), obs=obs)
+    host, port = svc.start()
+    try:
+        yield svc, host, port, obs
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# adopt_trace: total adoption
+# ---------------------------------------------------------------------------
+
+GARBAGE_TRACES = [
+    None,                                     # old client: field absent
+    42,                                       # wrong type
+    "deadbeef",                               # string, not an object
+    [],                                       # list, not an object
+    {},                                       # object with no ids
+    {"trace_id": 123, "span_id": 456},        # non-string ids
+    {"trace_id": "xyzzy!", "span_id": "ok"},  # non-hex
+    {"trace_id": "a" * 64},                   # oversized (> 32 hex chars)
+    {"trace_id": "", "span_id": ""},          # empty strings
+    {"trace_id": {"nested": "junk"}},         # nested junk
+    {"span_id": "0badcafe"},                  # parent without a trace id
+]
+
+
+class TestAdoptTrace:
+    def test_well_formed_context_keeps_ids(self):
+        ctx = new_trace_context()
+        got = adopt_trace(ctx)
+        assert got == {"trace_id": ctx["trace_id"],
+                       "parent_id": ctx["span_id"]}
+
+    def test_ids_are_lowercased(self):
+        got = adopt_trace({"trace_id": "DEADBEEFDEADBEEF",
+                           "span_id": "0BADCAFE"})
+        assert got == {"trace_id": "deadbeefdeadbeef",
+                       "parent_id": "0badcafe"}
+
+    @pytest.mark.parametrize("raw", GARBAGE_TRACES,
+                             ids=[repr(g)[:40] for g in GARBAGE_TRACES])
+    def test_garbage_degrades_to_fresh_id(self, raw):
+        got = adopt_trace(raw)              # never raises
+        assert HEX_ID.match(got["trace_id"])
+        assert got["parent_id"] is None or HEX_ID.match(got["parent_id"])
+
+    def test_fuzzed_adoption_never_raises(self):
+        rng = np.random.default_rng(11)
+        for _ in range(500):
+            blob = bytes(rng.integers(0, 256, size=rng.integers(0, 40),
+                                      dtype=np.uint8))
+            for raw in (blob, blob.decode("latin-1"),
+                        {"trace_id": blob.decode("latin-1")},
+                        {"trace_id": blob}):
+                got = adopt_trace(raw)
+                assert HEX_ID.match(got["trace_id"])
+
+    def test_minted_ids_are_wire_shaped(self):
+        seen = {mint_trace_id() for _ in range(256)}
+        assert len(seen) == 256             # no trivial collisions
+        assert all(len(t) == 16 and HEX_ID.match(t) for t in seen)
+        assert all(len(mint_span_id()) == 8 for _ in range(16))
+
+
+# ---------------------------------------------------------------------------
+# wire round-trip
+# ---------------------------------------------------------------------------
+
+class TestWireRoundTrip:
+    def test_response_echoes_minted_context(self, service):
+        svc, host, port, obs = service
+        with ServiceClient(host, port) as c:
+            sid = c.open("t0")
+            sent = dict(c.last_trace)
+            rmeta, _ = c.request({"op": "append", "sid": sid,
+                                  "array": {"dtype": "<i4",
+                                            "shape": [0, 2]}})
+            assert rmeta["trace"]["trace_id"] == c.last_trace["trace_id"]
+            assert sent["trace_id"] != c.last_trace["trace_id"]  # per-req
+            c.close(sid)
+
+    def test_root_span_carries_ids_and_breakdown(self, service):
+        svc, host, port, obs = service
+        with ServiceClient(host, port) as c:
+            sid = c.open("t1")
+            c.append(sid, _data(3 * CHUNK))
+            np.testing.assert_array_equal(
+                c.query(sid), histo.oracle(
+                    _data(3 * CHUNK)[:, 0].astype(np.int64),
+                    BINS, DOMAIN, M))
+            qt = dict(c.last_trace)     # the QUERY's context
+            c.close(sid)
+        # the span tree is deferred AFTER the reply hits the wire, so
+        # the last op's record can trail the client by a beat
+        deadline = time.monotonic() + 5.0
+        while True:
+            roots = [e for e in obs.tracer.events()
+                     if e["name"] == "svc.request"]
+            if len(roots) >= 4 or time.monotonic() > deadline:
+                break
+            time.sleep(0.01)
+        assert len(roots) >= 4              # open/append/query/close
+        by_trace = {e["args"]["trace_id"]: e for e in roots}
+        q = by_trace[qt["trace_id"]]        # adopted, not re-minted
+        assert q["args"]["op"] == "query"
+        assert q["args"]["status"] == "OK"
+        for k in ("queue_ms", "engine_ms", "reply_ms"):
+            assert q["args"][k] >= 0.0
+        # the engine leg nests under the same trace
+        engine_legs = [e for e in obs.tracer.events()
+                       if e["name"] == "svc.engine"
+                       and e["args"].get("trace_id") == qt["trace_id"]]
+        assert len(engine_legs) == 1
+
+    def test_error_response_still_traced(self, service):
+        svc, host, port, obs = service
+        with ServiceClient(host, port) as c:
+            with pytest.raises(Exception):
+                c.query(999)                # unknown sid
+        deadline = time.monotonic() + 5.0
+        while True:
+            roots = [e for e in obs.tracer.events()
+                     if e["name"] == "svc.request"
+                     and e["args"]["op"] == "query"]
+            if roots or time.monotonic() > deadline:
+                break
+            time.sleep(0.01)
+        assert roots and roots[-1]["args"]["status"] != "OK"
+
+    def test_old_client_unaffected(self, service):
+        svc, host, port, obs = service
+        with ServiceClient(host, port, trace=False) as c:
+            sid = c.open("legacy")
+            assert c.last_trace is None     # never minted one
+            c.append(sid, _data(CHUNK))
+            out, stats = c.close(sid)
+            assert stats["tuples_appended"] == CHUNK
+        # the server still roots spans (it mints fresh ids); like the
+        # round-trip test, the last op's record can trail the reply
+        deadline = time.monotonic() + 5.0
+        while True:
+            roots = [e for e in obs.tracer.events()
+                     if e["name"] == "svc.request"]
+            if len(roots) >= 3 or time.monotonic() > deadline:
+                break
+            time.sleep(0.01)
+        assert len(roots) >= 3
+        assert all(HEX_ID.match(e["args"]["trace_id"]) for e in roots)
+
+    def test_tracing_disabled_drops_the_echo(self, service):
+        svc, host, port, obs = service
+        obs.enabled = False
+        try:
+            with ServiceClient(host, port) as c:
+                rmeta, _ = c.request({"op": "ping"})
+                assert "trace" not in rmeta
+        finally:
+            obs.enabled = True
+
+
+class TestFuzzedWireTrace:
+    def test_garbage_trace_fields_never_err_malformed(self, service):
+        """Raw frames with every garbage trace shape: all must be served
+        (status OK), none may poison the connection, and each echoed
+        context must be a freshly minted valid id."""
+        svc, host, port, obs = service
+        with ServiceClient(host, port, trace=False) as c:
+            garbage = [g for g in GARBAGE_TRACES
+                       if g is not None and not isinstance(g, bytes)]
+            for i, raw in enumerate(garbage):
+                c.send_raw(encode_frame(
+                    {"op": "ping", "id": 1000 + i, "trace": raw}))
+                rmeta, _ = c.read_response()
+                assert rmeta.get("status", 0) == 0, (
+                    f"trace={raw!r} produced a wire error: {rmeta}")
+                echoed = rmeta["trace"]
+                assert HEX_ID.match(echoed["trace_id"])
+            # connection survives: a normal op still works
+            sid = c.open("after-fuzz")
+            c.close(sid)
+
+    def test_random_byte_trace_ids(self, service):
+        svc, host, port, obs = service
+        rng = np.random.default_rng(23)
+        with ServiceClient(host, port, trace=False) as c:
+            for i in range(32):
+                junk = bytes(rng.integers(32, 127, size=20,
+                                          dtype=np.uint8)).decode("ascii")
+                c.send_raw(encode_frame(
+                    {"op": "ping", "id": 2000 + i,
+                     "trace": {"trace_id": junk, "span_id": junk[:4]}}))
+                rmeta, _ = c.read_response()
+                assert rmeta.get("status", 0) == 0
+                assert HEX_ID.match(rmeta["trace"]["trace_id"])
